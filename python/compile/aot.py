@@ -1,0 +1,113 @@
+"""AOT compiler: lower the Layer-2 JAX model to HLO-text artifacts.
+
+Run once by ``make artifacts``; never imported at run time. Each exported
+function becomes ``artifacts/<name>.hlo.txt`` plus an entry in
+``artifacts/manifest.json`` describing shapes and the parameter layout so
+the Rust runtime (`rust/src/runtime/`) can compile and call it blind.
+
+HLO **text** is the interchange format: jax ≥ 0.5 serializes protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md and gen_hlo.py).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.fused_mlp import vmem_footprint_bytes
+from .kernels.ref import param_len
+
+# (name, state-side dims, batch): one artifact set per config.
+CONFIGS = [
+    # small config — fast to build, used by rust integration tests
+    {"name": "small", "dims": [4, 16, 4], "batch": 4},
+    # the e2e example config (gas-like tabular CNF field)
+    {"name": "gas", "dims": [8, 64, 64, 8], "batch": 32},
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def export_config(cfg, out_dir, use_pallas=True):
+    dims = cfg["dims"]
+    b = cfg["batch"]
+    d = dims[0]
+    p = param_len([d + 1, *dims[1:]])
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((b, d), f32)
+    z = jax.ShapeDtypeStruct((b, d + 1), f32)
+    t = jax.ShapeDtypeStruct((), f32)
+    theta = jax.ShapeDtypeStruct((p,), f32)
+    lam_x = jax.ShapeDtypeStruct((b, d), f32)
+    lam_z = jax.ShapeDtypeStruct((b, d + 1), f32)
+    eps = jax.ShapeDtypeStruct((b, d), f32)
+
+    entries = {}
+    jobs = [
+        ("f_eval", model.make_f_eval(dims, use_pallas), (x, t, theta)),
+        ("f_vjp", model.make_f_vjp(dims, use_pallas), (x, t, theta, lam_x)),
+        ("cnf_eval", model.make_cnf_eval(dims, use_pallas), (z, t, theta, eps)),
+        ("cnf_vjp", model.make_cnf_vjp(dims, use_pallas), (z, t, theta, eps, lam_z)),
+    ]
+    for fn_name, fn, args in jobs:
+        text = to_hlo_text(lower_fn(fn, args))
+        fname = f"{cfg['name']}_{fn_name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        entries[fn_name] = {
+            "file": fname,
+            "args": [list(a.shape) for a in args],
+        }
+        print(f"  {fname}: {len(text)} chars")
+
+    # trace-bytes estimate: activations of one traced use (input + hidden
+    # layers), f64 on the rust side — mirrors Mlp::trace_bytes.
+    net_dims = [d + 1, *dims[1:]]
+    trace_elems = b * net_dims[0] + sum(b * h for h in net_dims[1:-1])
+    return {
+        "dims": dims,
+        "batch": b,
+        "d": d,
+        "param_len": p,
+        "trace_bytes": trace_elems * 8,
+        "vmem_footprint_bytes": vmem_footprint_bytes(net_dims),
+        "functions": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower with the jnp reference instead of the Pallas kernel")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"configs": {}}
+    for cfg in CONFIGS:
+        print(f"config {cfg['name']}: dims={cfg['dims']} batch={cfg['batch']}")
+        manifest["configs"][cfg["name"]] = export_config(
+            cfg, args.out, use_pallas=not args.no_pallas
+        )
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2, sort_keys=True)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

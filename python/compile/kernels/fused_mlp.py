@@ -1,0 +1,152 @@
+"""Layer-1 Pallas kernel: the fused MLP layer ``tanh(x·W + b)``.
+
+This is the compute hot-spot of every neural-ODE evaluation — each RK
+stage calls the network once, and each network use is a chain of these
+layers. The kernel fuses the matmul, bias add and tanh so the activation
+block never leaves VMEM between the MXU (matmul) and VPU (bias+tanh) ops.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the batch
+dimension; each program instance holds an ``[BM, din]`` input block and
+the full ``[din, dout]`` weight panel in VMEM, issues one MXU matmul with
+``preferred_element_type=f32``, and applies bias+tanh elementwise before
+the block is written back to HBM. For the experiment sizes here
+(din,dout ≤ 128) a whole weight panel fits VMEM comfortably; larger nets
+would add a k-loop over ``din`` panels.
+
+The kernel MUST be lowered with ``interpret=True`` in this environment:
+real TPU lowering emits a Mosaic custom-call the CPU PJRT client cannot
+execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch-tile size. 8 rows keeps the interpret-mode overhead low while
+# still exercising a multi-program grid in tests; on real TPU this would
+# be 128 (one MXU tile edge).
+DEFAULT_BLOCK_M = 8
+
+
+def _fused_layer_kernel(x_ref, w_ref, b_ref, o_ref, *, activate: bool):
+    """One grid program: o = tanh(x_block @ W + b)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activate:
+        y = jnp.tanh(y)
+    o_ref[...] = y
+
+
+def _fused_layer_impl(x, w, b, activate: bool, block_m: int, interpret: bool):
+    """Primal Pallas call: batch tiled by ``block_m``, weights broadcast to
+    every program instance (block index 0 along the grid axis)."""
+    batch, din = x.shape
+    dout = w.shape[1]
+    bm = min(block_m, batch)
+    # pad the batch to a multiple of the tile
+    pad = (-batch) % bm
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, din), x.dtype)], axis=0)
+    grid = (x.shape[0] // bm,)
+
+    out = pl.pallas_call(
+        functools.partial(_fused_layer_kernel, activate=activate),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], dout), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, dout), lambda i: (0, 0)),
+            pl.BlockSpec((dout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, dout), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x, w, b)
+    return out[:batch]
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def pallas_matmul(a, b, block_m: int = DEFAULT_BLOCK_M, interpret: bool = True):
+    """Row-tiled Pallas matmul (used by the fused layer's backward pass)."""
+    m, k = a.shape
+    n = b.shape[1]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad, k), a.dtype)], axis=0)
+    grid = (a.shape[0] // bm,)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(a, b)
+    return out[:m]
+
+
+# interpret-mode pallas_call has no AD rules in this jax version, so the
+# layer carries an explicit custom VJP whose backward pass runs on Pallas
+# matmul kernels too (MXU in both directions). First-order only — the
+# second-order artifact (cnf_vjp) is lowered from the jnp reference, which
+# the tests pin to these kernels numerically.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def fused_mlp_layer(x, w, b, activate: bool = True, block_m: int = DEFAULT_BLOCK_M,
+                    interpret: bool = True):
+    """Pallas fused MLP layer. x: [batch, din], w: [din, dout], b: [dout]."""
+    return _fused_layer_impl(x, w, b, activate, block_m, interpret)
+
+
+def _fused_layer_fwd(x, w, b, activate, block_m, interpret):
+    y = _fused_layer_impl(x, w, b, activate, block_m, interpret)
+    return y, (x, w, y)
+
+
+def _fused_layer_bwd(activate, block_m, interpret, res, gy):
+    x, w, y = res
+    gy_pre = gy * (1.0 - y * y) if activate else gy
+    gx = pallas_matmul(gy_pre, w.T, block_m, interpret)
+    gw = pallas_matmul(x.T, gy_pre, block_m, interpret)
+    gb = gy_pre.sum(axis=0)
+    return gx, gw, gb
+
+
+fused_mlp_layer.defvjp(_fused_layer_fwd, _fused_layer_bwd)
+
+
+def mlp_pallas(x, params, dims, activate_last: bool = False, interpret: bool = True):
+    """Full MLP built from the fused-layer kernel (flat Rust param layout)."""
+    h = x
+    off = 0
+    n_layers = len(dims) - 1
+    for l in range(n_layers):
+        din, dout = dims[l], dims[l + 1]
+        w = params[off : off + din * dout].reshape(din, dout)
+        off += din * dout
+        b = params[off : off + dout]
+        off += dout
+        h = fused_mlp_layer(
+            h, w, b, activate=(l < n_layers - 1) or activate_last, interpret=interpret
+        )
+    return h
+
+
+def vmem_footprint_bytes(dims, block_m: int = DEFAULT_BLOCK_M) -> int:
+    """Estimated per-program VMEM bytes (f32): x-block + W panel + bias +
+    out-block, maximized over layers. Used for the DESIGN.md §Perf TPU
+    estimate (interpret mode gives no hardware counters)."""
+    worst = 0
+    for l in range(len(dims) - 1):
+        din, dout = dims[l], dims[l + 1]
+        worst = max(worst, 4 * (block_m * din + din * dout + dout + block_m * dout))
+    return worst

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernel tests (and, transitively, the HLO
+artifacts the Rust runtime executes) are validated against.
+"""
+
+import jax.numpy as jnp
+
+
+def fused_mlp_layer_ref(x, w, b, activate: bool = True):
+    """One MLP layer: ``tanh(x @ w + b)`` (or affine-only for the head).
+
+    x: [batch, din], w: [din, dout], b: [dout].
+    """
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.tanh(y) if activate else y
+
+
+def mlp_ref(x, params, dims, activate_last: bool = False):
+    """Full MLP over flat params with the Rust layout ``[W1, b1, W2, b2, …]``.
+
+    Each ``W_l`` is row-major ``[din, dout]``; tanh after every layer but
+    the last (matching ``rust/src/nn/mod.rs``).
+    """
+    h = x
+    off = 0
+    n_layers = len(dims) - 1
+    for l in range(n_layers):
+        din, dout = dims[l], dims[l + 1]
+        w = params[off : off + din * dout].reshape(din, dout)
+        off += din * dout
+        b = params[off : off + dout]
+        off += dout
+        h = fused_mlp_layer_ref(h, w, b, activate=(l < n_layers - 1) or activate_last)
+    return h
+
+
+def param_len(dims) -> int:
+    """Flat parameter count for ``mlp_ref`` (mirrors ``Mlp::param_len``)."""
+    return sum(dims[l] * dims[l + 1] + dims[l + 1] for l in range(len(dims) - 1))

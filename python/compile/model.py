@@ -1,0 +1,109 @@
+"""Layer-2 JAX model: the neural vector fields and their VJPs.
+
+Defines exactly the callables the Rust coordinator's `PjrtSystem` needs,
+with the SAME flat parameter layout as the Rust-native `Mlp`
+(`[W1, b1, W2, b2, …]`, `W` row-major `[din, dout]`, tanh between layers,
+time appended as an input feature):
+
+- ``f_eval(x, t, theta)``          -> f            (plain MLP field)
+- ``f_vjp(x, t, theta, lam)``      -> (g_x, g_p)   (λᵀ∂f/∂x, λᵀ∂f/∂θ)
+- ``cnf_eval(z, t, theta, eps)``   -> dz           (augmented CNF field,
+                                                    Hutchinson trace)
+- ``cnf_vjp(z, t, theta, eps, lam)`` -> (g_z, g_p)
+
+The hot path inside each — the per-layer matmul+bias+tanh — is the
+Layer-1 Pallas kernel (`kernels/fused_mlp.py`); ``use_pallas=False``
+swaps in the pure-jnp reference for A/B validation. VJPs come from
+``jax.vjp``, so the HLO artifacts embed the backward pass — Python is
+never needed at run time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import mlp_pallas
+from .kernels.ref import mlp_ref
+
+
+def make_field(dims, use_pallas: bool = True):
+    """The MLP vector field f(x, t, θ): x [b,d] -> [b,d], time appended."""
+    net_dims = (dims[0] + 1, *dims[1:])
+
+    def f(x, t, theta):
+        b = x.shape[0]
+        tcol = jnp.full((b, 1), t, dtype=x.dtype)
+        inp = jnp.concatenate([x, tcol], axis=1)
+        if use_pallas:
+            return mlp_pallas(inp, theta, net_dims)
+        return mlp_ref(inp, theta, net_dims)
+
+    return f
+
+
+def make_f_eval(dims, use_pallas: bool = True):
+    f = make_field(dims, use_pallas)
+
+    def f_eval(x, t, theta):
+        return (f(x, t, theta),)
+
+    return f_eval
+
+
+def make_f_vjp(dims, use_pallas: bool = True):
+    f = make_field(dims, use_pallas)
+
+    def f_vjp(x, t, theta, lam):
+        _, pull = jax.vjp(lambda xx, th: f(xx, t, th), x, theta)
+        g_x, g_p = pull(lam)
+        return (g_x, g_p)
+
+    return f_vjp
+
+
+def make_cnf_field(dims, use_pallas: bool = True):
+    """Augmented CNF dynamics d/dt [x, ℓ] = [f, −εᵀ(∂f/∂x)ε] over z [b, d+1].
+
+    The Hutchinson contraction is computed from the *VJP* side —
+    ``(Jᵀε)·ε = εᵀJε`` — because the Pallas fused layer carries a custom
+    VJP (reverse-mode) but no JVP rule.
+    """
+    f = make_field(dims, use_pallas)
+    d = dims[0]
+
+    def cnf(z, t, theta, eps):
+        x = z[:, :d]
+        fx, pull = jax.vjp(lambda xx: f(xx, t, theta), x)
+        (vjp_eps,) = pull(eps)
+        neg_tr = -jnp.sum(eps * vjp_eps, axis=1, keepdims=True)
+        return jnp.concatenate([fx, neg_tr], axis=1)
+
+    return cnf
+
+
+def make_cnf_eval(dims, use_pallas: bool = True):
+    cnf = make_cnf_field(dims, use_pallas)
+
+    def cnf_eval(z, t, theta, eps):
+        return (cnf(z, t, theta, eps),)
+
+    return cnf_eval
+
+
+def make_cnf_vjp(dims, use_pallas: bool = True):
+    """VJP of the augmented CNF field.
+
+    Always lowered from the jnp reference: this is a *second* derivative of
+    the network (gradient of a function that already contains a VJP), and
+    `jax.custom_vjp` rules — which the Pallas layer needs under
+    interpret mode — are first-order-only. The kernel and the reference are
+    pinned to agree numerically by `python/tests/test_kernel.py`.
+    """
+    del use_pallas
+    cnf = make_cnf_field(dims, use_pallas=False)
+
+    def cnf_vjp(z, t, theta, eps, lam):
+        _, pull = jax.vjp(lambda zz, th: cnf(zz, t, th, eps), z, theta)
+        g_z, g_p = pull(lam)
+        return (g_z, g_p)
+
+    return cnf_vjp

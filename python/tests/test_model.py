@@ -1,0 +1,107 @@
+"""Layer-2 validation: the exported vector fields and VJPs.
+
+Checks that (a) the pallas-backed and reference-backed fields agree,
+(b) the exported VJPs equal jax.grad of the field, (c) the CNF trace term
+is a correct Hutchinson estimate, and (d) the flat parameter layout
+matches the Rust `Mlp` convention (hand-computed case)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import mlp_ref, param_len
+
+DIMS = [3, 8, 3]
+BATCH = 4
+
+
+def setup_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    d = DIMS[0]
+    p = param_len([d + 1] + DIMS[1:])
+    x = jnp.asarray(rng.standard_normal((BATCH, d)), dtype=jnp.float32)
+    t = jnp.float32(0.37)
+    theta = jnp.asarray(rng.standard_normal(p) * 0.3, dtype=jnp.float32)
+    return x, t, theta, rng
+
+
+def test_field_pallas_equals_ref():
+    x, t, theta, _ = setup_inputs()
+    fp = model.make_field(DIMS, use_pallas=True)(x, t, theta)
+    fr = model.make_field(DIMS, use_pallas=False)(x, t, theta)
+    np.testing.assert_allclose(fp, fr, rtol=1e-5, atol=1e-6)
+
+
+def test_f_vjp_equals_jax_grad():
+    x, t, theta, rng = setup_inputs(1)
+    lam = jnp.asarray(rng.standard_normal(x.shape), dtype=jnp.float32)
+    g_x, g_p = model.make_f_vjp(DIMS, use_pallas=True)(x, t, theta, lam)
+
+    f_ref = model.make_field(DIMS, use_pallas=False)
+    obj = lambda xx, th: jnp.sum(f_ref(xx, t, th) * lam)
+    gr_x = jax.grad(obj, argnums=0)(x, theta)
+    gr_p = jax.grad(obj, argnums=1)(x, theta)
+    np.testing.assert_allclose(g_x, gr_x, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_p, gr_p, rtol=1e-4, atol=1e-5)
+
+
+def test_cnf_trace_is_hutchinson_of_jacobian():
+    x, t, theta, rng = setup_inputs(2)
+    d = DIMS[0]
+    z = jnp.concatenate([x, jnp.zeros((BATCH, 1), jnp.float32)], axis=1)
+    eps = jnp.asarray(rng.choice([-1.0, 1.0], size=(BATCH, d)), dtype=jnp.float32)
+
+    dz = model.make_cnf_field(DIMS, use_pallas=True)(z, t, theta, eps)
+
+    # brute-force: per-sample Jacobian of the reference field
+    f_ref = model.make_field(DIMS, use_pallas=False)
+    jac = jax.jacfwd(lambda xx: f_ref(xx, t, theta))(x)  # [b, d, b, d]
+    for i in range(BATCH):
+        j_i = jac[i, :, i, :]
+        expect = -eps[i] @ j_i @ eps[i]
+        np.testing.assert_allclose(dz[i, d], expect, rtol=1e-4, atol=1e-5)
+    # and the f-part must be the plain field
+    np.testing.assert_allclose(dz[:, :d], f_ref(x, t, theta), rtol=1e-5, atol=1e-6)
+
+
+def test_cnf_vjp_equals_jax_grad():
+    x, t, theta, rng = setup_inputs(3)
+    d = DIMS[0]
+    z = jnp.concatenate([x, jnp.zeros((BATCH, 1), jnp.float32)], axis=1)
+    eps = jnp.asarray(rng.choice([-1.0, 1.0], size=(BATCH, d)), dtype=jnp.float32)
+    lam = jnp.asarray(rng.standard_normal(z.shape), dtype=jnp.float32)
+
+    g_z, g_p = model.make_cnf_vjp(DIMS)(z, t, theta, eps, lam)
+
+    cnf_ref = model.make_cnf_field(DIMS, use_pallas=False)
+    obj = lambda zz, th: jnp.sum(cnf_ref(zz, t, th, eps) * lam)
+    gr_z = jax.grad(obj, argnums=0)(z, theta)
+    gr_p = jax.grad(obj, argnums=1)(z, theta)
+    np.testing.assert_allclose(g_z, gr_z, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g_p, gr_p, rtol=1e-4, atol=1e-5)
+
+
+def test_param_layout_matches_rust_convention():
+    """Hand-built two-layer case pinning the [W1,b1,W2,b2] flat layout."""
+    dims = [2, 2]  # single affine layer, input dim gains the time feature → [3, 2]
+    # W [3,2] row-major, b [2]
+    w = np.array([[1.0, 0.0], [0.0, 1.0], [2.0, -1.0]], dtype=np.float32)
+    b = np.array([0.5, -0.5], dtype=np.float32)
+    theta = jnp.asarray(np.concatenate([w.ravel(), b]))
+    x = jnp.asarray([[1.0, 2.0]], dtype=jnp.float32)
+    t = jnp.float32(3.0)
+    out = model.make_field(dims, use_pallas=False)(x, t, theta)
+    # input [1, 2, 3] → W row-major: y_j = Σ_i inp_i W[i,j] + b_j
+    expect = np.array([[1.0 + 6.0 + 0.5, 2.0 - 3.0 - 0.5]])
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+def test_mlp_ref_param_len_consistency():
+    dims = (5, 7, 11, 5)
+    assert param_len(dims) == 5 * 7 + 7 + 7 * 11 + 11 + 11 * 5 + 5
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 5)), dtype=jnp.float32)
+    p = jnp.asarray(rng.standard_normal(param_len(dims)), dtype=jnp.float32)
+    assert mlp_ref(x, p, dims).shape == (2, 5)

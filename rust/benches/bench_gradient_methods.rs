@@ -1,0 +1,51 @@
+//! Gradient-method benchmarks — the end-to-end cost behind Tables 2–4:
+//! wall time and peak memory of each method on the same problem.
+
+use sympode::adjoint::{
+    AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint, GradientMethod,
+    MaliMethod, SymplecticAdjoint,
+};
+use sympode::benchkit::Bench;
+use sympode::integrate::SolverConfig;
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::tableau::Tableau;
+use sympode::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(2);
+    let x0 = rng.normal_vec(sys.dim());
+
+    let methods: Vec<Box<dyn GradientMethod>> = vec![
+        Box::new(ContinuousAdjoint::default()),
+        Box::new(BackpropMethod),
+        Box::new(BaselineCheckpoint),
+        Box::new(AcaMethod),
+        Box::new(MaliMethod),
+        Box::new(SymplecticAdjoint),
+    ];
+
+    println!("# fixed-grid dopri5 (32 steps): time per gradient; peak mem printed after");
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / 32.0);
+    for m in &methods {
+        let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        b.run(&format!("grad/fixed32/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes), || {
+            std::hint::black_box(m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap());
+        });
+    }
+
+    println!("\n# adaptive dopri8 (the Table 4 regime, s = 12)");
+    let cfg8 = SolverConfig::adaptive(Tableau::dopri8(), 1e-7, 1e-5);
+    for m in &methods {
+        if m.name() == "mali" {
+            continue; // fixed-step only
+        }
+        let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap();
+        b.run(&format!("grad/dopri8/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes), || {
+            std::hint::black_box(m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap());
+        });
+    }
+}

@@ -1,0 +1,33 @@
+//! Integrator micro-benchmarks: cost per step across tableaux, fixed vs
+//! adaptive, and solver overhead vs NFE.
+
+use sympode::benchkit::Bench;
+use sympode::integrate::{solve_ivp, SolverConfig};
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::tableau::Tableau;
+use sympode::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(1);
+    let x0 = rng.normal_vec(sys.dim());
+
+    println!("# fixed-grid solve, 32 steps, by tableau");
+    for tab in [Tableau::heun_euler(), Tableau::bosh3(), Tableau::rk4(), Tableau::dopri5(), Tableau::dopri8()] {
+        let cfg = SolverConfig::fixed(tab.clone(), 1.0 / 32.0);
+        b.run(&format!("solve/fixed32/{}", tab.name), || {
+            std::hint::black_box(solve_ivp(&sys, &p, &x0, 0.0, 1.0, &cfg));
+        });
+    }
+
+    println!("\n# adaptive solve by tolerance (dopri5)");
+    for atol in [1e-4, 1e-6, 1e-8] {
+        let cfg = SolverConfig::adaptive(Tableau::dopri5(), atol, atol * 100.0);
+        let sol = solve_ivp(&sys, &p, &x0, 0.0, 1.0, &cfg);
+        b.run(&format!("solve/adaptive/atol{atol:.0e} ({} steps)", sol.stats.n_steps), || {
+            std::hint::black_box(solve_ivp(&sys, &p, &x0, 0.0, 1.0, &cfg));
+        });
+    }
+}

@@ -1,0 +1,74 @@
+//! Hot-path kernel benchmarks: GEMM variants, MLP forward/backward, and
+//! the autodiff tape vs the hand-rolled backward (the §Perf comparison).
+
+use sympode::autodiff::{Tape, Tensor};
+use sympode::benchkit::Bench;
+use sympode::linalg;
+use sympode::nn::Mlp;
+use sympode::util::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(3);
+
+    println!("# GEMM kernels");
+    for n in [64usize, 128, 256] {
+        let a = rng.normal_vec(n * n);
+        let bb = rng.normal_vec(n * n);
+        let mut c = vec![0.0; n * n];
+        let gflops = 2.0 * (n as f64).powi(3) / 1e9;
+        let res = b.run(&format!("gemm_nn/{n}x{n}x{n}"), || {
+            linalg::gemm_nn(n, n, n, &a, &bb, &mut c);
+            std::hint::black_box(&c);
+        });
+        println!("    -> {:.2} GFLOP/s", gflops / (res.median_ns() / 1e9));
+        b.run(&format!("gemm_tn/{n}"), || {
+            linalg::gemm_tn(n, n, n, &a, &bb, &mut c);
+            std::hint::black_box(&c);
+        });
+        b.run(&format!("gemm_nt/{n}"), || {
+            linalg::gemm_nt(n, n, n, &a, &bb, &mut c);
+            std::hint::black_box(&c);
+        });
+    }
+
+    println!("\n# MLP forward / traced / backward (batch 32, 64-64 hidden)");
+    let m = Mlp::new(&[9, 64, 64, 8]);
+    let p = m.init_params(&mut rng);
+    let x = rng.normal_vec(32 * 9);
+    let lam = rng.normal_vec(32 * 8);
+    b.run("mlp/forward", || {
+        std::hint::black_box(m.forward(&x, 32, &p));
+    });
+    b.run("mlp/forward_traced", || {
+        std::hint::black_box(m.forward_traced(&x, 32, &p));
+    });
+    let (_, tr) = m.forward_traced(&x, 32, &p);
+    let mut gx = vec![0.0; 32 * 9];
+    let mut gp = vec![0.0; m.param_len()];
+    b.run("mlp/backward", || {
+        gp.fill(0.0);
+        m.backward(&tr, &p, &lam, &mut gx, &mut gp);
+        std::hint::black_box(&gp);
+    });
+
+    println!("\n# autodiff tape vs hand-rolled (same network)");
+    b.run("tape/forward+grad", || {
+        let mut t = Tape::new();
+        let xv = t.input(Tensor::matrix(x.clone(), 32, 9));
+        let mut h = xv;
+        let mut off = 0;
+        for l in 0..3 {
+            let (din, dout) = ([9, 64, 64][l], [64, 64, 8][l]);
+            let w = t.input(Tensor::matrix(p[off..off + din * dout].to_vec(), din, dout));
+            off += din * dout;
+            let bias = t.input(Tensor::vector(p[off..off + dout].to_vec()));
+            off += dout;
+            let a = t.matmul(h, w);
+            let a = t.bias_add(a, bias);
+            h = if l < 2 { t.tanh(a) } else { a };
+        }
+        let s = t.sum(h);
+        std::hint::black_box(t.grad(s, &[xv]));
+    });
+}

@@ -1,0 +1,28 @@
+//! One bench per paper table/figure: runs the coordinator experiments at
+//! minimal scale so `cargo bench` regenerates every reported artifact.
+//! (Full-scale runs: `sympode exp <name> quick=false`.)
+
+use sympode::coordinator::{self, ExpOpts};
+
+fn main() {
+    let opts = ExpOpts {
+        quick: true,
+        seeds: 1,
+        iters: 3,
+        out_dir: "results/bench".into(),
+    };
+    println!("=== Table 1 ===");
+    coordinator::table1(&opts).unwrap();
+    println!("\n=== Table 2 (power only at bench scale) ===");
+    coordinator::table2(&opts, "power").unwrap();
+    println!("\n=== Table 3 ===");
+    coordinator::table3(&opts).unwrap();
+    println!("\n=== Table 4 ===");
+    coordinator::table4(&ExpOpts { iters: 2, ..opts.clone() }).unwrap();
+    println!("\n=== Figure 1 ===");
+    coordinator::fig1(&ExpOpts { iters: 2, ..opts.clone() }).unwrap();
+    println!("\n=== Figure 2 ===");
+    coordinator::fig2(&opts).unwrap();
+    println!("\n=== Rounding (App. D.1) ===");
+    coordinator::rounding(&opts).unwrap();
+}

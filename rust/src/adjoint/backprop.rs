@@ -1,0 +1,344 @@
+//! Naive backpropagation through the solver, and the single-checkpoint
+//! baseline scheme.
+//!
+//! [`BackpropMethod`] retains the computation graph (one trace per network
+//! use) for the *whole* integration during the forward pass — `O(MNsL)`
+//! memory, `O(2MNsL)` cost — then runs the exact discrete adjoint over
+//! the stored traces.
+//!
+//! [`BaselineCheckpoint`] retains only `x₀`; at gradient time it re-solves
+//! the initial-value problem with traces retained and then backprops —
+//! `O(M + NsL)` memory, `O(3MNsL)` cost. This is the "baseline scheme" the
+//! paper implements as the one-checkpoint-per-component variant.
+
+use super::step::{adjoint_step, StageSource};
+use super::{GradResult, GradStats, GradientMethod};
+use crate::integrate::{
+    error_norm, error_norm_dop853, rk_combine, select_initial_step, solve_ivp_final, Solution,
+    SolveStats, SolverConfig, StepMode,
+};
+use crate::memory::{MemCategory, MemTracker};
+use crate::ode::{Loss, OdeSystem, Trace};
+use crate::tableau::{ErrorSpec, Tableau};
+
+/// One accepted step with its retained per-stage computation graphs.
+pub(crate) struct StepRecord {
+    pub t: f64,
+    pub h: f64,
+    pub traces: Vec<Box<dyn Trace>>,
+    pub tape_bytes: u64,
+}
+
+/// Compute the stages of one step with *traced* evaluations, retaining the
+/// per-stage computation graphs (what a PyTorch forward inside the solver
+/// would do).
+pub(crate) fn rk_stages_traced(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    t: f64,
+    x: &[f64],
+    h: f64,
+    k_out: &mut Vec<Vec<f64>>,
+) -> (Vec<Box<dyn Trace>>, usize) {
+    let s = tab.s;
+    let dim = x.len();
+    k_out.clear();
+    let mut traces = Vec::with_capacity(s);
+    let mut xi = vec![0.0; dim];
+    for i in 0..s {
+        xi.copy_from_slice(x);
+        for j in 0..i {
+            let aij = tab.a(i, j);
+            if aij != 0.0 {
+                crate::linalg::axpy(h * aij, &k_out[j], &mut xi);
+            }
+        }
+        let mut ki = vec![0.0; dim];
+        let tr = sys.eval_traced(t + tab.c[i] * h, &xi, params, &mut ki);
+        traces.push(tr);
+        k_out.push(ki);
+    }
+    (traces, s)
+}
+
+/// Forward integration retaining the whole computation graph: every
+/// accepted step keeps its `s` traces alive (registered as `Tape` memory)
+/// until the backward pass consumes them.
+pub(crate) fn traced_forward(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+) -> anyhow::Result<(Solution, Vec<StepRecord>)> {
+    let dim = x0.len();
+    let direction = if t1 > t0 { 1.0 } else { -1.0 };
+    let span = (t1 - t0).abs();
+    let tab = &cfg.tableau;
+
+    let mut stats = SolveStats::default();
+    let mut ts = vec![t0];
+    let mut xs = vec![x0.to_vec()];
+    mem.alloc_f64(MemCategory::Checkpoint, dim);
+    let mut records: Vec<StepRecord> = Vec::new();
+
+    let mut t = t0;
+    let mut x = x0.to_vec();
+    let mut k: Vec<Vec<f64>> = Vec::new();
+
+    let retain_step = |t: f64,
+                           h: f64,
+                           traces: Vec<Box<dyn Trace>>,
+                           mem: &MemTracker|
+     -> StepRecord {
+        let tape_bytes: u64 = traces.iter().map(|tr| tr.bytes()).sum();
+        mem.alloc(MemCategory::Tape, tape_bytes);
+        StepRecord { t, h, traces, tape_bytes }
+    };
+
+    match cfg.mode {
+        StepMode::Fixed { h } => {
+            let n_steps = (span / h).round().max(1.0) as usize;
+            let h_signed = direction * span / n_steps as f64;
+            for _ in 0..n_steps {
+                let (traces, nfe) = rk_stages_traced(sys, params, tab, t, &x, h_signed, &mut k);
+                stats.nfe += nfe;
+                let x_new = rk_combine(tab, &x, h_signed, &k);
+                records.push(retain_step(t, h_signed, traces, mem));
+                t += h_signed;
+                x = x_new;
+                ts.push(t);
+                xs.push(x.clone());
+                mem.alloc_f64(MemCategory::Checkpoint, dim);
+                stats.n_steps += 1;
+            }
+        }
+        StepMode::Adaptive { atol, rtol, h0, max_steps } => {
+            let mut f0 = vec![0.0; dim];
+            sys.eval(t0, &x, params, &mut f0);
+            stats.nfe += 1;
+            let mut h = match h0 {
+                Some(h) => h,
+                None => select_initial_step(
+                    sys, params, t0, &x, &f0, direction, tab.order, atol, rtol, span,
+                    &mut stats.nfe,
+                ),
+            };
+            const SAFETY: f64 = 0.9;
+            const MIN_FACTOR: f64 = 0.2;
+            const MAX_FACTOR: f64 = 10.0;
+            while (t - t1) * direction < 0.0 {
+                if stats.n_steps + stats.n_rejected >= max_steps {
+                    anyhow::bail!("traced_forward exceeded {max_steps} steps");
+                }
+                if (t + direction * h - t1) * direction > 0.0 {
+                    h = (t1 - t).abs();
+                }
+                let h_signed = direction * h;
+                let (traces, nfe) = rk_stages_traced(sys, params, tab, t, &x, h_signed, &mut k);
+                stats.nfe += nfe;
+                let x_new = rk_combine(tab, &x, h_signed, &k);
+
+                let err_norm_v = match &tab.err {
+                    ErrorSpec::Embedded { weights } => {
+                        let mut err = vec![0.0; dim];
+                        for (i, ki) in k.iter().enumerate() {
+                            if weights[i] != 0.0 {
+                                crate::linalg::axpy(h_signed * weights[i], ki, &mut err);
+                            }
+                        }
+                        error_norm(&err, &x, &x_new, atol, rtol)
+                    }
+                    ErrorSpec::Dop853 { e3, e5 } => {
+                        // extra slope; not differentiated (step-size search
+                        // is outside the gradient path, as in ACA)
+                        let mut fn_new = vec![0.0; dim];
+                        sys.eval(t + h_signed, &x_new, params, &mut fn_new);
+                        stats.nfe += 1;
+                        let mut k_ext = k.clone();
+                        k_ext.push(fn_new);
+                        error_norm_dop853(e3, e5, &k_ext, h_signed, &x, &x_new, atol, rtol)
+                    }
+                    ErrorSpec::None => anyhow::bail!("adaptive mode needs an error estimate"),
+                };
+
+                if err_norm_v <= 1.0 {
+                    records.push(retain_step(t, h_signed, traces, mem));
+                    t += h_signed;
+                    x = x_new;
+                    ts.push(t);
+                    xs.push(x.clone());
+                    mem.alloc_f64(MemCategory::Checkpoint, dim);
+                    stats.n_steps += 1;
+                    let factor = if err_norm_v == 0.0 {
+                        MAX_FACTOR
+                    } else {
+                        (SAFETY * err_norm_v.powf(-1.0 / tab.order as f64)).min(MAX_FACTOR)
+                    };
+                    h *= factor.max(MIN_FACTOR);
+                } else {
+                    // rejected: traces are dropped (never registered)
+                    stats.n_rejected += 1;
+                    let factor =
+                        (SAFETY * err_norm_v.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
+                    h *= factor;
+                    if h < 1e-13 * span {
+                        anyhow::bail!("traced_forward: step size underflow at t = {t}");
+                    }
+                }
+            }
+        }
+    }
+    Ok((Solution { ts, xs, stats }, records))
+}
+
+/// Run the exact discrete adjoint backward over retained step records,
+/// freeing each step's tapes as it is consumed (as PyTorch's backward
+/// does).
+pub(crate) fn backward_over_records(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    records: Vec<StepRecord>,
+    lam: &mut [f64],
+    lam_theta: &mut [f64],
+    mem: &MemTracker,
+    stats: &mut GradStats,
+) {
+    for rec in records.into_iter().rev() {
+        let cost = adjoint_step(
+            sys,
+            params,
+            tab,
+            rec.t,
+            rec.h,
+            lam,
+            lam_theta,
+            StageSource::Stored { traces: &rec.traces },
+            mem,
+        );
+        stats.nfe_backward += cost.nfe + cost.nvjp;
+        stats.n_steps_backward += 1;
+        mem.free(MemCategory::Tape, rec.tape_bytes);
+    }
+}
+
+/// Naive backprop through the whole integration (`O(MNsL)` memory).
+#[derive(Debug, Default, Clone)]
+pub struct BackpropMethod;
+
+impl GradientMethod for BackpropMethod {
+    fn name(&self) -> &'static str {
+        "backprop"
+    }
+
+    fn gradient(
+        &self,
+        sys: &dyn OdeSystem,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        loss: &dyn Loss,
+    ) -> anyhow::Result<GradResult> {
+        let mem = MemTracker::new();
+        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)?;
+
+        let loss_val = loss.loss(sol.final_state());
+        let mut lam = vec![0.0; sys.dim()];
+        loss.grad(sol.final_state(), &mut lam);
+        let mut lam_theta = vec![0.0; sys.n_params()];
+
+        let mut stats = GradStats {
+            n_steps_forward: sol.n_steps(),
+            nfe_forward: sol.stats.nfe,
+            ..Default::default()
+        };
+        backward_over_records(
+            sys,
+            params,
+            &cfg.tableau,
+            records,
+            &mut lam,
+            &mut lam_theta,
+            &mem,
+            &mut stats,
+        );
+        // trajectory accounting released with the graph
+        mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
+
+        stats.absorb_mem(&mem);
+        Ok(GradResult {
+            loss: loss_val,
+            x_final: sol.final_state().to_vec(),
+            grad_x0: lam,
+            grad_params: lam_theta,
+            stats,
+        })
+    }
+}
+
+/// Baseline checkpointing: keep only `x₀`, re-solve with the graph
+/// retained at gradient time (`O(M + NsL)` memory, `O(3MNsL)` cost).
+#[derive(Debug, Default, Clone)]
+pub struct BaselineCheckpoint;
+
+impl GradientMethod for BaselineCheckpoint {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn gradient(
+        &self,
+        sys: &dyn OdeSystem,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        loss: &dyn Loss,
+    ) -> anyhow::Result<GradResult> {
+        let mem = MemTracker::new();
+        // the training forward pass: graphs discarded, only x₀ kept
+        mem.alloc_f64(MemCategory::Checkpoint, sys.dim()); // the x₀ checkpoint
+        let fwd = solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem);
+        let loss_val = loss.loss(fwd.final_state());
+
+        // gradient time: re-solve with graph retention, then backprop
+        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)?;
+        let mut lam = vec![0.0; sys.dim()];
+        loss.grad(sol.final_state(), &mut lam);
+        let mut lam_theta = vec![0.0; sys.n_params()];
+
+        let mut stats = GradStats {
+            n_steps_forward: fwd.stats.n_steps,
+            nfe_forward: fwd.stats.nfe + sol.stats.nfe,
+            ..Default::default()
+        };
+        backward_over_records(
+            sys,
+            params,
+            &cfg.tableau,
+            records,
+            &mut lam,
+            &mut lam_theta,
+            &mem,
+            &mut stats,
+        );
+        mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
+        mem.free_f64(MemCategory::Checkpoint, sys.dim());
+
+        stats.absorb_mem(&mem);
+        Ok(GradResult {
+            loss: loss_val,
+            x_final: sol.final_state().to_vec(),
+            grad_x0: lam,
+            grad_params: lam_theta,
+            stats,
+        })
+    }
+}

@@ -1,0 +1,181 @@
+//! The continuous adjoint method of the original neural-ODE paper
+//! (Chen et al., 2018) — memory `O(M + L)`, but the gradient is only as
+//! accurate as the backward numerical integration (Section 3: once time is
+//! discretized, Remark 1 no longer holds).
+//!
+//! The backward pass integrates the augmented system
+//!
+//! ```text
+//! d/dt [x, λ, λ_θ] = [f,  −(∂f/∂x)ᵀ λ,  −(∂f/∂θ)ᵀ λ]
+//! ```
+//!
+//! from `T` to `0` with its *own* adaptive error control over the full
+//! augmented state — which is why, with many parameters, the backward
+//! solve often needs `Ñ > N` steps (the slow-downs of Tables 2–4), and
+//! why a loose tolerance corrupts the gradient (Fig. 1).
+
+use super::{GradResult, GradStats, GradientMethod};
+use crate::integrate::{solve_ivp_final, SolverConfig, StepMode};
+use crate::memory::{MemCategory, MemTracker};
+use crate::ode::{Loss, OdeSystem, Trace};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// The continuous adjoint method. `backward_atol`/`backward_rtol` default
+/// to the forward tolerances when unset (the paper's setup).
+#[derive(Debug, Default, Clone)]
+pub struct ContinuousAdjoint {
+    pub backward_atol: Option<f64>,
+    pub backward_rtol: Option<f64>,
+}
+
+/// The augmented backward system `[x, λ, λ_θ]`.
+struct AugmentedSystem<'a> {
+    sys: &'a dyn OdeSystem,
+    params: &'a [f64],
+    mem: &'a MemTracker,
+    inner_evals: AtomicUsize,
+}
+
+impl<'a> AugmentedSystem<'a> {
+    fn new(sys: &'a dyn OdeSystem, params: &'a [f64], mem: &'a MemTracker) -> Self {
+        AugmentedSystem { sys, params, mem, inner_evals: AtomicUsize::new(0) }
+    }
+}
+
+struct NoTrace;
+impl Trace for NoTrace {
+    fn bytes(&self) -> u64 {
+        0
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl OdeSystem for AugmentedSystem<'_> {
+    fn dim(&self) -> usize {
+        2 * self.sys.dim() + self.sys.n_params()
+    }
+
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    fn eval(&self, t: f64, z: &[f64], _params: &[f64], out: &mut [f64]) {
+        let d = self.sys.dim();
+        let p = self.sys.n_params();
+        let (x, rest) = z.split_at(d);
+        let (lam, _lam_theta) = rest.split_at(d);
+
+        let (dx, drest) = out.split_at_mut(d);
+        let (dlam, dlam_theta) = drest.split_at_mut(d);
+
+        // dx/dt = f — and the VJP for the adjoint components, sharing one
+        // traced evaluation (this is the "forward + backward ≈ 2L" cost of
+        // the adjoint method; the tape is transient).
+        let mut g_p = vec![0.0; p];
+        let mut f_out = vec![0.0; d];
+        let trace = self.sys.eval_traced(t, x, self.params, &mut f_out);
+        {
+            let _tape =
+                crate::memory::MemGuard::new(self.mem, MemCategory::Tape, trace.bytes());
+            self.sys.vjp_traced(trace.as_ref(), self.params, lam, dlam, &mut g_p);
+        }
+        dx.copy_from_slice(&f_out);
+        for v in dlam.iter_mut() {
+            *v = -*v;
+        }
+        for (o, g) in dlam_theta.iter_mut().zip(&g_p) {
+            *o = -g;
+        }
+        self.inner_evals.fetch_add(2, Ordering::Relaxed); // fwd + bwd pass
+    }
+
+    fn eval_traced(
+        &self,
+        t: f64,
+        z: &[f64],
+        params: &[f64],
+        out: &mut [f64],
+    ) -> Box<dyn Trace> {
+        self.eval(t, z, params, out);
+        Box::new(NoTrace)
+    }
+
+    fn vjp_traced(
+        &self,
+        _trace: &dyn Trace,
+        _params: &[f64],
+        _lam: &[f64],
+        _g_x: &mut [f64],
+        _g_p: &mut [f64],
+    ) {
+        unimplemented!("the augmented adjoint system is never differentiated")
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        self.sys.trace_bytes()
+    }
+}
+
+impl GradientMethod for ContinuousAdjoint {
+    fn name(&self) -> &'static str {
+        "adjoint"
+    }
+
+    fn gradient(
+        &self,
+        sys: &dyn OdeSystem,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        loss: &dyn Loss,
+    ) -> anyhow::Result<GradResult> {
+        let mem = MemTracker::new();
+        let d = sys.dim();
+        let p = sys.n_params();
+
+        // forward: no trajectory recorded — only x(T) is kept
+        let fwd = solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem);
+        mem.alloc_f64(MemCategory::Checkpoint, d); // the retained x(T)
+        let x_final = fwd.final_state().to_vec();
+        let loss_val = loss.loss(&x_final);
+
+        // backward: augmented state [x, λ, λ_θ] from T to 0
+        let mut z = vec![0.0; 2 * d + p];
+        z[..d].copy_from_slice(&x_final);
+        loss.grad(&x_final, &mut z[d..2 * d]);
+
+        let aug = AugmentedSystem::new(sys, params, &mem);
+        let back_cfg = match cfg.mode {
+            StepMode::Fixed { h } => SolverConfig::fixed(cfg.tableau.clone(), h),
+            StepMode::Adaptive { atol, rtol, h0, max_steps } => SolverConfig {
+                tableau: cfg.tableau.clone(),
+                mode: StepMode::Adaptive {
+                    atol: self.backward_atol.unwrap_or(atol),
+                    rtol: self.backward_rtol.unwrap_or(rtol),
+                    h0,
+                    max_steps,
+                },
+            },
+        };
+        let bwd = solve_ivp_final(&aug, &[], &z, t1, t0, &back_cfg, &mem);
+        mem.free_f64(MemCategory::Checkpoint, d);
+
+        let zf = bwd.final_state();
+        let grad_x0 = zf[d..2 * d].to_vec();
+        let grad_params = zf[2 * d..].to_vec();
+
+        let mut stats = GradStats {
+            n_steps_forward: fwd.stats.n_steps,
+            nfe_forward: fwd.stats.nfe,
+            n_steps_backward: bwd.stats.n_steps,
+            nfe_backward: aug.inner_evals.load(Ordering::Relaxed),
+            ..Default::default()
+        };
+        stats.absorb_mem(&mem);
+        Ok(GradResult { loss: loss_val, x_final, grad_x0, grad_params, stats })
+    }
+}

@@ -1,0 +1,128 @@
+//! The six gradient-computation strategies of the paper's Table 1.
+//!
+//! | method                | exact | checkpoints            | backprop memory | cost      |
+//! |-----------------------|-------|------------------------|-----------------|-----------|
+//! | [`ContinuousAdjoint`] | no    | `x_N`                  | `L`             | `M(N+2Ñ)sL` |
+//! | [`BackpropMethod`]    | yes   | —                      | `M N s L`       | `2MNsL`   |
+//! | [`BaselineCheckpoint`]| yes   | `x₀`                   | `N s L`         | `3MNsL`   |
+//! | [`AcaMethod`]         | yes   | `{x_n}`                | `s L`           | `3MNsL`   |
+//! | [`MaliMethod`]        | yes*  | `x_N` (ALF pairs)      | `L`             | `4MNsL`   |
+//! | [`SymplecticAdjoint`] | yes   | `{x_n}, {X_{n,i}}`     | `L`             | `4MNsL`   |
+//!
+//! (*exact w.r.t. the ALF discretization, which is 2nd-order only.)
+//!
+//! All exact methods share one backward-step routine, [`adjoint_step`]:
+//! the symplectic-partitioned-RK recursion of Eq. (7)/(22), which — as
+//! the paper establishes via Theorems 1–2 — *is* the exact discrete
+//! adjoint of the forward Runge–Kutta step. What distinguishes the
+//! methods is purely the checkpoint/recompute schedule feeding it, i.e.
+//! which traces are alive when; that is what the memory tracker observes.
+
+pub mod aca;
+pub mod backprop;
+pub mod continuous;
+pub mod mali;
+pub mod segment;
+pub mod step;
+pub mod symplectic;
+
+pub use aca::AcaMethod;
+pub use backprop::{BackpropMethod, BaselineCheckpoint};
+pub use continuous::ContinuousAdjoint;
+pub use mali::MaliMethod;
+pub use segment::SegmentCheckpoint;
+pub use step::{adjoint_step, StageSource};
+pub use symplectic::SymplecticAdjoint;
+
+use crate::integrate::SolverConfig;
+use crate::memory::{MemCategory, MemTracker};
+use crate::ode::{Loss, OdeSystem};
+
+/// Cost and memory counters for one gradient computation, mirroring the
+/// columns the paper reports.
+#[derive(Debug, Clone, Default)]
+pub struct GradStats {
+    /// Accepted forward steps (`N`).
+    pub n_steps_forward: usize,
+    /// Accepted backward steps (`Ñ`; equals `N` for all exact methods).
+    pub n_steps_backward: usize,
+    /// `f` evaluations in the forward pass (VJP passes count once more).
+    pub nfe_forward: usize,
+    /// `f` evaluations (incl. those inside VJPs) in the backward pass.
+    pub nfe_backward: usize,
+    /// Peak of total tracked bytes.
+    pub peak_mem_bytes: u64,
+    /// Peak of retained computation-graph (tape) bytes.
+    pub peak_tape_bytes: u64,
+    /// Peak of checkpoint bytes.
+    pub peak_checkpoint_bytes: u64,
+}
+
+impl GradStats {
+    pub(crate) fn absorb_mem(&mut self, mem: &MemTracker) {
+        self.peak_mem_bytes = mem.peak_total();
+        self.peak_tape_bytes = mem.peak(MemCategory::Tape);
+        self.peak_checkpoint_bytes = mem.peak(MemCategory::Checkpoint);
+    }
+}
+
+/// Result of one gradient computation.
+#[derive(Debug, Clone)]
+pub struct GradResult {
+    /// Terminal loss `L(x_N)` of the forward integration.
+    pub loss: f64,
+    /// Final state of the forward integration.
+    pub x_final: Vec<f64>,
+    /// `∂L/∂x₀` (the adjoint variable λ₀).
+    pub grad_x0: Vec<f64>,
+    /// `∂L/∂θ` (the augmented adjoint λ_θ at t₀).
+    pub grad_params: Vec<f64>,
+    pub stats: GradStats,
+}
+
+/// A strategy for computing `∂L(x(T))/∂(x₀, θ)` for a neural ODE.
+pub trait GradientMethod {
+    fn name(&self) -> &'static str;
+
+    /// Compute loss and gradients for one integration of `sys` from `t0`
+    /// to `t1` under `cfg`, evaluated by `loss` at the endpoint.
+    fn gradient(
+        &self,
+        sys: &dyn OdeSystem,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        loss: &dyn Loss,
+    ) -> anyhow::Result<GradResult>;
+}
+
+/// All methods, for experiment sweeps. `MaliMethod` requires fixed-step
+/// configs; the experiment harness handles that.
+pub fn all_methods() -> Vec<Box<dyn GradientMethod>> {
+    vec![
+        Box::new(ContinuousAdjoint::default()),
+        Box::new(BackpropMethod),
+        Box::new(BaselineCheckpoint),
+        Box::new(AcaMethod),
+        Box::new(SymplecticAdjoint::default()),
+    ]
+}
+
+/// Look up a method by its CLI name.
+pub fn method_by_name(name: &str) -> Option<Box<dyn GradientMethod>> {
+    Some(match name {
+        "adjoint" => Box::new(ContinuousAdjoint::default()) as Box<dyn GradientMethod>,
+        "backprop" => Box::new(BackpropMethod),
+        "baseline" => Box::new(BaselineCheckpoint),
+        "aca" => Box::new(AcaMethod),
+        "mali" => Box::new(MaliMethod),
+        "symplectic" => Box::new(SymplecticAdjoint::default()),
+        "segment" => Box::new(SegmentCheckpoint::new(4)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests;

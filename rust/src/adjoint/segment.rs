@@ -1,0 +1,191 @@
+//! Generalized segment checkpointing — the ANODE-family knob between the
+//! baseline scheme and ACA.
+//!
+//! Retain every `k`-th accepted state as a checkpoint; at backward time,
+//! re-solve each segment of (up to) `k` steps with its computation graphs
+//! retained, backprop through the segment, discard, move to the previous
+//! segment. Memory is `O(N/k + k·s·L)`; `k = 1` reproduces ACA's profile,
+//! `k = N` the baseline scheme's. The paper's Table 1 row for ANODE is the
+//! `k = 1` point of this family; the ablation experiment
+//! (`sympode exp ablation`) sweeps `k` to show the memory valley and why
+//! *stage-level* checkpointing (the symplectic adjoint method) beats every
+//! `k` — its `s + L` term is below even the `k = 1` segment cost `s·L`.
+
+use super::backprop::{backward_over_records, rk_stages_traced, StepRecord};
+use super::{GradResult, GradStats, GradientMethod};
+use crate::integrate::{solve_ivp_tracked, SolverConfig};
+use crate::memory::{MemCategory, MemTracker};
+use crate::ode::{Loss, OdeSystem};
+
+/// Checkpoint every `k`-th step; backprop per segment.
+#[derive(Debug, Clone)]
+pub struct SegmentCheckpoint {
+    pub every_k: usize,
+}
+
+impl SegmentCheckpoint {
+    pub fn new(every_k: usize) -> SegmentCheckpoint {
+        assert!(every_k >= 1);
+        SegmentCheckpoint { every_k }
+    }
+}
+
+impl GradientMethod for SegmentCheckpoint {
+    fn name(&self) -> &'static str {
+        "segment"
+    }
+
+    fn gradient(
+        &self,
+        sys: &dyn OdeSystem,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        loss: &dyn Loss,
+    ) -> anyhow::Result<GradResult> {
+        let mem = MemTracker::new();
+        let dim = sys.dim();
+        let k = self.every_k;
+        let tab = &cfg.tableau;
+
+        // Forward: the solve produces the trajectory, but only every k-th
+        // state (plus the endpoint) is *retained*; the rest is discarded
+        // as integration proceeds, so the checkpoint footprint is O(N/k).
+        // (The recording solve uses a scratch tracker; the real tracker
+        // sees only the kept checkpoints.)
+        let scratch = MemTracker::new();
+        let sol = solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &scratch);
+        let n_steps = sol.n_steps();
+        let mut kept = vec![false; n_steps + 1];
+        for i in (0..=n_steps).step_by(k) {
+            kept[i] = true;
+        }
+        kept[n_steps] = true;
+        let kept_count = kept.iter().filter(|&&v| v).count();
+        mem.alloc(MemCategory::Checkpoint, (kept_count * dim * 8) as u64);
+
+        let loss_val = loss.loss(sol.final_state());
+        let mut lam = vec![0.0; dim];
+        loss.grad(sol.final_state(), &mut lam);
+        let mut lam_theta = vec![0.0; sys.n_params()];
+
+        let mut stats = GradStats {
+            n_steps_forward: n_steps,
+            nfe_forward: sol.stats.nfe,
+            ..Default::default()
+        };
+
+        // Backward, segment by segment (last first): re-integrate each
+        // segment from its anchoring checkpoint with graphs retained.
+        let mut seg_end = n_steps;
+        while seg_end > 0 {
+            let seg_start = ((seg_end - 1) / k) * k;
+            let mut records: Vec<StepRecord> = Vec::new();
+            let mut kbuf: Vec<Vec<f64>> = Vec::new();
+            let mut x_cur = sol.xs[seg_start].clone();
+            for n in seg_start..seg_end {
+                let t_n = sol.ts[n];
+                let h = sol.ts[n + 1] - t_n;
+                let (traces, nfe) =
+                    rk_stages_traced(sys, params, tab, t_n, &x_cur, h, &mut kbuf);
+                stats.nfe_backward += nfe;
+                x_cur = crate::integrate::rk_combine(tab, &x_cur, h, &kbuf);
+                let tape_bytes: u64 = traces.iter().map(|t| t.bytes()).sum();
+                mem.alloc(MemCategory::Tape, tape_bytes);
+                records.push(StepRecord { t: t_n, h, traces, tape_bytes });
+            }
+            backward_over_records(
+                sys,
+                params,
+                tab,
+                records,
+                &mut lam,
+                &mut lam_theta,
+                &mem,
+                &mut stats,
+            );
+            // discard the checkpoint that anchored this segment (except x₀,
+            // freed below with the remaining trail)
+            seg_end = seg_start;
+        }
+        // free the retained checkpoint trail
+        mem.free(MemCategory::Checkpoint, (kept_count * dim * 8) as u64);
+
+        stats.absorb_mem(&mem);
+        Ok(GradResult {
+            loss: loss_val,
+            x_final: sol.final_state().to_vec(),
+            grad_x0: lam,
+            grad_params: lam_theta,
+            stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::BackpropMethod;
+    use crate::ode::losses::SumLoss;
+    use crate::ode::NativeMlpSystem;
+    use crate::tableau::Tableau;
+    use crate::util::stats::rel_l2;
+    use crate::util::Rng;
+
+    #[test]
+    fn segment_gradient_is_exact_for_all_k() {
+        let sys = NativeMlpSystem::with_batch(&[3, 16, 3], 2, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(31);
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / 12.0);
+        let reference = BackpropMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        for k in [1, 2, 3, 5, 12, 50] {
+            let g = SegmentCheckpoint::new(k)
+                .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+                .unwrap();
+            let err = rel_l2(&g.grad_params, &reference.grad_params);
+            assert!(err < 1e-12, "k={k}: err {err}");
+        }
+    }
+
+    #[test]
+    fn memory_interpolates_between_aca_and_baseline() {
+        let sys = NativeMlpSystem::with_batch(&[4, 48, 4], 8, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(32);
+        let x0 = rng.normal_vec(sys.dim());
+        let n = 32;
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
+        let l = sys.trace_bytes();
+        let s = 7u64;
+
+        let run = |k: usize| {
+            SegmentCheckpoint::new(k)
+                .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+                .unwrap()
+                .stats
+        };
+        // k = 1: tape peak = s·L (ACA's); k = N: tape peak = N·s·L (baseline's)
+        assert_eq!(run(1).peak_tape_bytes, s * l);
+        assert_eq!(run(n).peak_tape_bytes, n as u64 * s * l);
+        // monotone in k
+        let peaks: Vec<u64> = [1, 2, 4, 8, 16, 32].iter().map(|&k| run(k).peak_tape_bytes).collect();
+        assert!(peaks.windows(2).all(|w| w[0] <= w[1]), "{peaks:?}");
+        // and the checkpoint trail shrinks with k
+        assert!(run(8).peak_checkpoint_bytes < run(1).peak_checkpoint_bytes);
+    }
+
+    #[test]
+    fn adaptive_mode_works() {
+        let sys = NativeMlpSystem::new(&[2, 12, 2], 0);
+        let p = sys.init_params();
+        let x0 = vec![0.2, -0.5];
+        let cfg = SolverConfig::adaptive(Tableau::bosh3(), 1e-7, 1e-5);
+        let reference = BackpropMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        let g = SegmentCheckpoint::new(3).gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        assert!(rel_l2(&g.grad_params, &reference.grad_params) < 1e-12);
+    }
+}

@@ -1,0 +1,330 @@
+//! Cross-method correctness: all exact methods must agree with each other
+//! and with analytic/finite-difference gradients; the continuous adjoint
+//! must agree at tight tolerance and drift at loose tolerance; memory
+//! peaks must order as Table 1 predicts.
+
+use super::*;
+use crate::integrate::SolverConfig;
+use crate::ode::analytic::DiagonalLinear;
+use crate::ode::losses::{LinearLoss, SumLoss};
+use crate::ode::NativeMlpSystem;
+use crate::tableau::Tableau;
+use crate::util::stats::rel_l2;
+use crate::util::Rng;
+
+fn exact_methods() -> Vec<Box<dyn GradientMethod>> {
+    vec![
+        Box::new(BackpropMethod),
+        Box::new(BaselineCheckpoint),
+        Box::new(AcaMethod),
+        Box::new(SymplecticAdjoint),
+    ]
+}
+
+/// The symplectic adjoint method must reproduce the *analytic* gradient on
+/// a diagonal linear system to integration accuracy.
+#[test]
+fn symplectic_matches_analytic_gradient() {
+    let sys = DiagonalLinear { dim: 4 };
+    let a = vec![0.5, -0.3, 0.8, 0.1];
+    let x0 = vec![1.0, 2.0, -1.0, 0.5];
+    let t1 = 1.2;
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-12, 1e-10);
+    let g = SymplecticAdjoint
+        .gradient(&sys, &a, &x0, 0.0, t1, &cfg, &SumLoss)
+        .unwrap();
+    let (gp, gx) = sys.exact_sum_gradients(&x0, &a, t1);
+    assert!(rel_l2(&g.grad_params, &gp) < 1e-8, "θ err {}", rel_l2(&g.grad_params, &gp));
+    assert!(rel_l2(&g.grad_x0, &gx) < 1e-8, "x0 err {}", rel_l2(&g.grad_x0, &gx));
+}
+
+/// All exact methods compute the *same discrete gradient* — agreement to
+/// near rounding, far below integration error, across tableaux and both
+/// stepping modes (the paper's Theorems 1–2 in executable form).
+#[test]
+fn exact_methods_agree_to_rounding() {
+    let sys = NativeMlpSystem::with_batch(&[3, 16, 3], 2, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(77);
+    let x0 = rng.normal_vec(sys.dim());
+    let w = rng.normal_vec(sys.dim());
+    let loss = LinearLoss { w };
+
+    for cfg in [
+        SolverConfig::fixed(Tableau::dopri5(), 0.1),
+        SolverConfig::fixed(Tableau::midpoint(), 0.05),
+        SolverConfig::fixed(Tableau::dopri8(), 0.25),
+        SolverConfig::adaptive(Tableau::dopri5(), 1e-6, 1e-4),
+        SolverConfig::adaptive(Tableau::bosh3(), 1e-6, 1e-4),
+    ] {
+        let reference = BackpropMethod
+            .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss)
+            .unwrap();
+        for m in exact_methods() {
+            let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+            let ep = rel_l2(&g.grad_params, &reference.grad_params);
+            let ex = rel_l2(&g.grad_x0, &reference.grad_x0);
+            assert!(
+                ep < 1e-12 && ex < 1e-12,
+                "{} vs backprop ({} {:?}): θ {ep:.2e}, x₀ {ex:.2e}",
+                m.name(),
+                cfg.tableau.name,
+                cfg.mode,
+            );
+            assert!((g.loss - reference.loss).abs() < 1e-12);
+        }
+    }
+}
+
+/// The symplectic adjoint gradient against finite differences of the
+/// *whole solve* (slow path — small net).
+#[test]
+fn symplectic_matches_finite_differences_of_solve() {
+    let sys = NativeMlpSystem::new(&[2, 8, 2], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.3, -0.6];
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.1);
+    let loss = SumLoss;
+
+    let g = SymplecticAdjoint
+        .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss)
+        .unwrap();
+
+    let run = |pp: &[f64]| -> f64 {
+        let sol = crate::integrate::solve_ivp(&sys, pp, &x0, 0.0, 1.0, &cfg);
+        loss.loss(sol.final_state())
+    };
+    let eps = 1e-6;
+    for i in (0..sys.n_params()).step_by(9) {
+        let mut pp = p.clone();
+        pp[i] += eps;
+        let mut pm = p.clone();
+        pm[i] -= eps;
+        let fd = (run(&pp) - run(&pm)) / (2.0 * eps);
+        assert!(
+            (g.grad_params[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+            "θ[{i}]: {} vs {fd}",
+            g.grad_params[i]
+        );
+    }
+}
+
+/// Continuous adjoint: accurate at tight tolerance, visibly wrong at loose
+/// tolerance — the Fig. 1 mechanism.
+#[test]
+fn continuous_adjoint_error_grows_with_tolerance() {
+    let sys = NativeMlpSystem::new(&[3, 24, 3], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.5, -0.2, 0.8];
+    let loss = SumLoss;
+
+    let tight_cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-10, 1e-8);
+    let reference = SymplecticAdjoint
+        .gradient(&sys, &p, &x0, 0.0, 2.0, &tight_cfg, &loss)
+        .unwrap();
+
+    let err_at = |atol: f64| -> f64 {
+        let cfg = SolverConfig::adaptive(Tableau::dopri5(), atol, atol * 100.0);
+        let g = ContinuousAdjoint::default()
+            .gradient(&sys, &p, &x0, 0.0, 2.0, &cfg, &loss)
+            .unwrap();
+        rel_l2(&g.grad_params, &reference.grad_params)
+    };
+    let tight = err_at(1e-10);
+    let loose = err_at(1e-3);
+    assert!(tight < 1e-6, "tight-tolerance adjoint err {tight}");
+    assert!(loose > 10.0 * tight, "loose {loose} vs tight {tight}");
+}
+
+/// Symplectic adjoint is exact *regardless* of tolerance — its gradient
+/// matches backprop's even when integration is sloppy (the key Fig. 1
+/// contrast).
+#[test]
+fn symplectic_exact_even_at_loose_tolerance() {
+    let sys = NativeMlpSystem::new(&[3, 24, 3], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.5, -0.2, 0.8];
+    let loss = SumLoss;
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-3, 1e-1);
+    let bp = BackpropMethod.gradient(&sys, &p, &x0, 0.0, 2.0, &cfg, &loss).unwrap();
+    let sa = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 2.0, &cfg, &loss).unwrap();
+    let err = rel_l2(&sa.grad_params, &bp.grad_params);
+    assert!(err < 1e-12, "err {err}");
+}
+
+/// MALI: exact w.r.t. the ALF discretization (checked against FD of the
+/// ALF solve itself).
+#[test]
+fn mali_exact_for_alf_map() {
+    let sys = NativeMlpSystem::new(&[2, 10, 2], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.4, -0.1];
+    let cfg = SolverConfig::fixed(Tableau::euler(), 0.05); // tableau unused by MALI
+    let loss = SumLoss;
+    let g = MaliMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+
+    let run = |pp: &[f64]| -> f64 {
+        let mut x = x0.clone();
+        let mut v = vec![0.0; 2];
+        sys.eval(0.0, &x, pp, &mut v);
+        for n in 0..20 {
+            crate::integrate::alf::alf_step(&sys, pp, n as f64 * 0.05, 0.05, &mut x, &mut v);
+        }
+        loss.loss(&x)
+    };
+    let eps = 1e-6;
+    for i in (0..sys.n_params()).step_by(7) {
+        let mut pp = p.clone();
+        pp[i] += eps;
+        let mut pm = p.clone();
+        pm[i] -= eps;
+        let fd = (run(&pp) - run(&pm)) / (2.0 * eps);
+        assert!(
+            (g.grad_params[i] - fd).abs() < 2e-6 * (1.0 + fd.abs()),
+            "θ[{i}]: {} vs {fd}",
+            g.grad_params[i]
+        );
+    }
+    assert!(MaliMethod
+        .gradient(
+            &sys,
+            &p,
+            &x0,
+            0.0,
+            1.0,
+            &SolverConfig::adaptive(Tableau::dopri5(), 1e-6, 1e-4),
+            &loss
+        )
+        .is_err());
+}
+
+/// The Table-1 memory ordering, measured: backprop ≳ baseline > ACA >
+/// symplectic ≈ adjoint for a many-step fixed-grid problem; and the
+/// symplectic tape peak is a single `L` while ACA's is `s·L`.
+#[test]
+fn memory_ordering_matches_table1() {
+    let sys = NativeMlpSystem::with_batch(&[4, 64, 64, 4], 8, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(5);
+    let x0 = rng.normal_vec(sys.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / 32.0);
+    let loss = SumLoss;
+
+    let run = |m: &dyn GradientMethod| m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+    let bp = run(&BackpropMethod);
+    let bl = run(&BaselineCheckpoint);
+    let aca = run(&AcaMethod);
+    let sa = run(&SymplecticAdjoint);
+    let ad = run(&ContinuousAdjoint::default());
+
+    // tape peaks: N·s·L vs s·L vs L
+    let l = sys.trace_bytes();
+    let s = Tableau::dopri5().s as u64;
+    let n = 32u64;
+    assert_eq!(sa.stats.peak_tape_bytes, l);
+    assert_eq!(aca.stats.peak_tape_bytes, s * l);
+    assert_eq!(bp.stats.peak_tape_bytes, n * s * l);
+    assert_eq!(bl.stats.peak_tape_bytes, n * s * l);
+    assert_eq!(ad.stats.peak_tape_bytes, l);
+
+    // total ordering (baseline = backprop's re-solve plus the x₀
+    // checkpoint, so the two peaks agree to within one state vector)
+    let diff = bl.stats.peak_mem_bytes as i64 - bp.stats.peak_mem_bytes as i64;
+    assert!(diff.unsigned_abs() <= (sys.dim() * 8) as u64, "bp vs bl: {diff}");
+    assert!(bl.stats.peak_mem_bytes > aca.stats.peak_mem_bytes);
+    assert!(aca.stats.peak_mem_bytes > sa.stats.peak_mem_bytes);
+    // symplectic carries the {x_n} checkpoints the adjoint method lacks,
+    // but both are far below ACA.
+    assert!(sa.stats.peak_mem_bytes < aca.stats.peak_mem_bytes / 2);
+}
+
+/// Cost ordering (NFE): adjoint backward ≈ 2·fwd-equivalents per step;
+/// symplectic backward = 2s per step (recompute + one-by-one VJP);
+/// ACA backward = 2s per step (recompute traced + VJP); backprop = s.
+#[test]
+fn nfe_accounting() {
+    let sys = NativeMlpSystem::new(&[2, 8, 2], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.1, 0.2];
+    let n = 10usize;
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.1);
+    let loss = SumLoss;
+
+    let sa = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+    // backward per step: s recompute + s (VJP fwd) + s (VJP bwd) = 3s
+    assert_eq!(sa.stats.nfe_backward, n * 4 * 3);
+    assert_eq!(sa.stats.nfe_forward, n * 4);
+
+    let bp = BackpropMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+    assert_eq!(bp.stats.nfe_forward, n * 4);
+    assert_eq!(bp.stats.nfe_backward, n * 4); // VJP passes only
+
+    let aca = AcaMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+    assert_eq!(aca.stats.nfe_backward, n * 4 * 2); // retrace + VJP
+}
+
+/// Gradient w.r.t. the initial state must satisfy the chain rule through
+/// time splitting: grad over [0,1] == grad over [0,½] chained with [½,1].
+#[test]
+fn gradient_chains_across_interval_split() {
+    let sys = NativeMlpSystem::new(&[2, 12, 2], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.7, -0.4];
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.125);
+    let loss = SumLoss;
+
+    let full = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &loss).unwrap();
+
+    // second half gradient seeds the first half's loss
+    let mid_sol = crate::integrate::solve_ivp(&sys, &p, &x0, 0.0, 0.5, &cfg);
+    let second =
+        SymplecticAdjoint.gradient(&sys, &p, mid_sol.final_state(), 0.5, 1.0, &cfg, &loss).unwrap();
+    let first = SymplecticAdjoint
+        .gradient(
+            &sys,
+            &p,
+            &x0,
+            0.0,
+            0.5,
+            &cfg,
+            &LinearLoss { w: second.grad_x0.clone() },
+        )
+        .unwrap();
+    let mut chained = first.grad_params.clone();
+    for (c, g2) in chained.iter_mut().zip(&second.grad_params) {
+        *c += g2;
+    }
+    assert!(rel_l2(&chained, &full.grad_params) < 1e-10);
+    assert!(rel_l2(&first.grad_x0, &full.grad_x0) < 1e-10);
+}
+
+/// Property sweep: random seeds, shapes, intervals — symplectic == backprop.
+#[test]
+fn property_symplectic_equals_backprop() {
+    let mut rng = Rng::new(2024);
+    for case in 0..6 {
+        let d = 1 + rng.below(4);
+        let hidden = 4 + rng.below(12);
+        let batch = 1 + rng.below(3);
+        let sys = NativeMlpSystem::with_batch(&[d, hidden, d], batch, 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(sys.dim());
+        let t1 = 0.3 + rng.uniform();
+        let tabs = [Tableau::heun_euler(), Tableau::bosh3(), Tableau::dopri5()];
+        let tab = tabs[rng.below(3)].clone();
+        let cfg = SolverConfig::adaptive(tab, 1e-7, 1e-5);
+        let loss = SumLoss;
+        let bp = BackpropMethod.gradient(&sys, &p, &x0, 0.0, t1, &cfg, &loss).unwrap();
+        let sa = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, t1, &cfg, &loss).unwrap();
+        let err = rel_l2(&sa.grad_params, &bp.grad_params);
+        assert!(err < 1e-11, "case {case}: err {err}");
+    }
+}
+
+#[test]
+fn method_registry() {
+    for name in ["adjoint", "backprop", "baseline", "aca", "mali", "symplectic"] {
+        assert_eq!(method_by_name(name).unwrap().name(), name);
+    }
+    assert!(method_by_name("bogus").is_none());
+}

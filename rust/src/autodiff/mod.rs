@@ -1,0 +1,419 @@
+//! Reverse-mode automatic differentiation on an eager Wengert tape.
+//!
+//! This is the crate's stand-in for PyTorch autograd / JAX on the *native*
+//! backend: the neural vector fields used by unit tests, property tests
+//! and the scaling benchmarks are built from these ops, and every gradient
+//! method obtains its vector–Jacobian products through it.
+//!
+//! Two properties matter for the reproduction:
+//!
+//! 1. **Higher-order differentiation.** [`Tape::grad`] emits the backward
+//!    pass as *new tape ops*, so gradients are themselves differentiable.
+//!    The Hamiltonian models of §5.2 (`f = G∇H`) and the Hutchinson trace
+//!    term of the CNF both need second derivatives: the vector field
+//!    already contains one `grad`, and the adjoint methods then take a VJP
+//!    of it.
+//! 2. **Byte-accounted memory.** A tape's retained values are exactly the
+//!    "computation graph" whose size the paper's Table 1 is about
+//!    (`L` per network use). [`Tape::mem_bytes`] reports it, and the
+//!    gradient methods register it with the [`crate::memory::MemTracker`]
+//!    for as long as the tape is alive.
+
+pub mod tensor;
+
+pub use tensor::Tensor;
+
+use std::rc::Rc;
+
+/// Handle to a value on a [`Tape`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+#[derive(Debug, Clone)]
+#[allow(dead_code)] // shape/scale metadata retained for debugging dumps
+enum Op {
+    /// Leaf the user may differentiate with respect to.
+    Input,
+    /// Leaf treated as a constant (no gradient flows).
+    Const,
+    Add(Var, Var),
+    Sub(Var, Var),
+    Mul(Var, Var),
+    Neg(Var),
+    Scale(Var, f64),
+    AddScalarConst(Var, f64),
+    Matmul(Var, Var),
+    Transpose(Var),
+    Tanh(Var),
+    /// Sum of all elements -> scalar.
+    Sum(Var),
+    /// `[m, n] -> [n]`, summing over rows.
+    SumAxis0(Var),
+    /// `[n] -> [m, n]`, repeating the row `m` times.
+    Broadcast0(Var, usize),
+    /// Scalar (shape-[] var) times tensor.
+    ScaleByVar { scalar: Var, tensor: Var },
+    /// `out[i] = in[idx[i]]` over flattened indices; output takes `shape`.
+    Gather { input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize> },
+    /// `out[idx[i]] += in[i]`; output takes `shape` (flat len must cover idx).
+    ScatterAdd { input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize> },
+    Reshape(Var, Vec<usize>),
+    /// Broadcast a scalar (shape []) to `shape`.
+    FillLike(Var, Vec<usize>),
+}
+
+struct Node {
+    op: Op,
+    val: Tensor,
+}
+
+/// An eager Wengert tape: every op computes its value immediately and
+/// records how it was produced so [`Tape::grad`] can replay it backward.
+pub struct Tape {
+    nodes: Vec<Node>,
+    bytes: usize,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new(), bytes: 0 }
+    }
+
+    /// Number of values currently on the tape.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total bytes of retained tensor data — the "computation graph size".
+    pub fn mem_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn val(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].val
+    }
+
+    fn push(&mut self, op: Op, val: Tensor) -> Var {
+        self.bytes += val.data.len() * 8;
+        self.nodes.push(Node { op, val });
+        Var(self.nodes.len() - 1)
+    }
+
+    // ---------------------------------------------------------------- leaves
+
+    pub fn input(&mut self, t: Tensor) -> Var {
+        self.push(Op::Input, t)
+    }
+
+    pub fn constant(&mut self, t: Tensor) -> Var {
+        self.push(Op::Const, t)
+    }
+
+    pub fn scalar_const(&mut self, x: f64) -> Var {
+        self.constant(Tensor::scalar(x))
+    }
+
+    // ------------------------------------------------------------- pointwise
+
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let v = self.val(a).ew(self.val(b), |x, y| x + y);
+        self.push(Op::Add(a, b), v)
+    }
+
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let v = self.val(a).ew(self.val(b), |x, y| x - y);
+        self.push(Op::Sub(a, b), v)
+    }
+
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let v = self.val(a).ew(self.val(b), |x, y| x * y);
+        self.push(Op::Mul(a, b), v)
+    }
+
+    pub fn neg(&mut self, a: Var) -> Var {
+        let v = self.val(a).map(|x| -x);
+        self.push(Op::Neg(a), v)
+    }
+
+    pub fn scale(&mut self, a: Var, c: f64) -> Var {
+        let v = self.val(a).map(|x| c * x);
+        self.push(Op::Scale(a, c), v)
+    }
+
+    pub fn add_scalar(&mut self, a: Var, c: f64) -> Var {
+        let v = self.val(a).map(|x| x + c);
+        self.push(Op::AddScalarConst(a, c), v)
+    }
+
+    pub fn tanh(&mut self, a: Var) -> Var {
+        let v = self.val(a).map(f64::tanh);
+        self.push(Op::Tanh(a), v)
+    }
+
+    // ---------------------------------------------------------------- linear
+
+    pub fn matmul(&mut self, a: Var, b: Var) -> Var {
+        // rank-2 only on the tape: the backward rule (gᵀ-products with
+        // transposes) is only shape-stable for matrices. Lift vectors to
+        // [1, n] with `reshape` first.
+        assert_eq!(self.val(a).shape.len(), 2, "tape matmul needs rank-2 LHS");
+        assert_eq!(self.val(b).shape.len(), 2, "tape matmul needs rank-2 RHS");
+        let v = self.val(a).matmul(self.val(b));
+        self.push(Op::Matmul(a, b), v)
+    }
+
+    pub fn transpose(&mut self, a: Var) -> Var {
+        let v = self.val(a).transpose();
+        self.push(Op::Transpose(a), v)
+    }
+
+    pub fn sum(&mut self, a: Var) -> Var {
+        let v = Tensor::scalar(self.val(a).data.iter().sum());
+        self.push(Op::Sum(a), v)
+    }
+
+    pub fn sum_axis0(&mut self, a: Var) -> Var {
+        let t = self.val(a);
+        assert_eq!(t.shape.len(), 2, "sum_axis0 needs a matrix");
+        let (m, n) = (t.shape[0], t.shape[1]);
+        let mut out = vec![0.0; n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j] += t.data[i * n + j];
+            }
+        }
+        self.push(Op::SumAxis0(a), Tensor::new(out, vec![n]))
+    }
+
+    pub fn broadcast0(&mut self, a: Var, m: usize) -> Var {
+        let t = self.val(a);
+        assert_eq!(t.shape.len(), 1, "broadcast0 needs a vector");
+        let n = t.shape[0];
+        let mut out = Vec::with_capacity(m * n);
+        for _ in 0..m {
+            out.extend_from_slice(&t.data);
+        }
+        self.push(Op::Broadcast0(a, m), Tensor::new(out, vec![m, n]))
+    }
+
+    pub fn dot(&mut self, a: Var, b: Var) -> Var {
+        // expressed as sum(mul) so no dedicated backward rule is needed;
+        // shapes must match exactly.
+        let m = self.mul(a, b);
+        self.sum(m)
+    }
+
+    pub fn scale_by_var(&mut self, scalar: Var, tensor: Var) -> Var {
+        let s = self.val(scalar).item();
+        let v = self.val(tensor).map(|x| s * x);
+        self.push(Op::ScaleByVar { scalar, tensor }, v)
+    }
+
+    pub fn gather(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize>) -> Var {
+        let t = self.val(input);
+        let numel: usize = shape.iter().product();
+        assert_eq!(idx.len(), numel, "gather idx/shape mismatch");
+        let data: Vec<f64> = idx.iter().map(|&i| t.data[i]).collect();
+        self.push(Op::Gather { input, idx, shape: shape.clone() }, Tensor::new(data, shape))
+    }
+
+    pub fn scatter_add(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize>) -> Var {
+        let t = self.val(input);
+        assert_eq!(idx.len(), t.data.len(), "scatter idx/input mismatch");
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0.0; numel];
+        for (v, &i) in t.data.iter().zip(idx.iter()) {
+            data[i] += v;
+        }
+        self.push(Op::ScatterAdd { input, idx, shape: shape.clone() }, Tensor::new(data, shape))
+    }
+
+    pub fn reshape(&mut self, a: Var, shape: Vec<usize>) -> Var {
+        let t = self.val(a);
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, t.data.len(), "reshape numel mismatch");
+        let v = Tensor::new(t.data.clone(), shape.clone());
+        self.push(Op::Reshape(a, shape), v)
+    }
+
+    pub fn fill_like(&mut self, scalar: Var, shape: Vec<usize>) -> Var {
+        let s = self.val(scalar).item();
+        let numel: usize = shape.iter().product();
+        self.push(Op::FillLike(scalar, shape.clone()), Tensor::new(vec![s; numel], shape))
+    }
+
+    // -------------------------------------------------------------- helpers
+
+    /// Bias add: `[m, n] + [n]` (broadcast over rows).
+    pub fn bias_add(&mut self, a: Var, bias: Var) -> Var {
+        let m = self.val(a).shape[0];
+        let b = self.broadcast0(bias, m);
+        self.add(a, b)
+    }
+
+    /// Mean over all elements.
+    pub fn mean(&mut self, a: Var) -> Var {
+        let n = self.val(a).data.len() as f64;
+        let s = self.sum(a);
+        self.scale(s, 1.0 / n)
+    }
+
+    // ------------------------------------------------------------- gradient
+
+    /// Reverse-mode gradient of a scalar `output` with respect to `wrt`.
+    ///
+    /// The backward pass is emitted as new tape ops, so the returned vars
+    /// can themselves be differentiated (higher-order derivatives).
+    /// Inputs in `wrt` that `output` does not depend on get a zero
+    /// gradient of the appropriate shape.
+    pub fn grad(&mut self, output: Var, wrt: &[Var]) -> Vec<Var> {
+        assert!(
+            self.val(output).shape.is_empty(),
+            "grad: output must be a scalar, got shape {:?}",
+            self.val(output).shape
+        );
+        let n_at_start = output.0 + 1;
+        let mut adj: Vec<Option<Var>> = vec![None; self.nodes.len()];
+        adj[output.0] = Some(self.scalar_const(1.0));
+        // ensure adj has slots for vars created during the backward pass
+        // (we only index by ids < n_at_start, so this is enough).
+        for i in (0..n_at_start).rev() {
+            let Some(g) = adj[i] else { continue };
+            // clone the op descriptor to appease the borrow checker
+            let op = self.nodes[i].op.clone();
+            match op {
+                Op::Input | Op::Const => {}
+                Op::Add(a, b) => {
+                    self.accum(&mut adj, a, g);
+                    self.accum(&mut adj, b, g);
+                }
+                Op::Sub(a, b) => {
+                    self.accum(&mut adj, a, g);
+                    let ng = self.neg(g);
+                    self.accum(&mut adj, b, ng);
+                }
+                Op::Mul(a, b) => {
+                    let ga = self.mul(g, b);
+                    let gb = self.mul(g, a);
+                    self.accum(&mut adj, a, ga);
+                    self.accum(&mut adj, b, gb);
+                }
+                Op::Neg(a) => {
+                    let ng = self.neg(g);
+                    self.accum(&mut adj, a, ng);
+                }
+                Op::Scale(a, c) => {
+                    let ga = self.scale(g, c);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::AddScalarConst(a, _) => {
+                    self.accum(&mut adj, a, g);
+                }
+                Op::Matmul(a, b) => {
+                    let bt = self.transpose(b);
+                    let ga = self.matmul(g, bt);
+                    let at = self.transpose(a);
+                    let gb = self.matmul(at, g);
+                    self.accum(&mut adj, a, ga);
+                    self.accum(&mut adj, b, gb);
+                }
+                Op::Transpose(a) => {
+                    let ga = self.transpose(g);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::Tanh(a) => {
+                    // d tanh = (1 - y²); y is this node's value, referenced
+                    // as a var so second-order flows through the tanh node.
+                    let y = Var(i);
+                    let y2 = self.mul(y, y);
+                    let one = {
+                        let shape = self.val(y).shape.clone();
+                        let oneconst = self.scalar_const(1.0);
+                        self.fill_like(oneconst, shape)
+                    };
+                    let d = self.sub(one, y2);
+                    let ga = self.mul(g, d);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::Sum(a) => {
+                    let shape = self.val(a).shape.clone();
+                    let ga = self.fill_like(g, shape);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::SumAxis0(a) => {
+                    let m = self.val(a).shape[0];
+                    let ga = self.broadcast0(g, m);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::Broadcast0(a, _) => {
+                    let ga = self.sum_axis0(g);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::ScaleByVar { scalar, tensor } => {
+                    // d/d scalar = Σ g ⊙ tensor ; d/d tensor = scalar · g
+                    let gt = self.mul(g, tensor);
+                    let gs = self.sum(gt);
+                    self.accum(&mut adj, scalar, gs);
+                    let gtensor = self.scale_by_var(scalar, g);
+                    self.accum(&mut adj, tensor, gtensor);
+                }
+                Op::Gather { input, idx, .. } => {
+                    let shape = self.val(input).shape.clone();
+                    let ga = self.scatter_add(g, idx, shape);
+                    self.accum(&mut adj, input, ga);
+                }
+                Op::ScatterAdd { input, idx, .. } => {
+                    let shape = self.val(input).shape.clone();
+                    let ga = self.gather(g, idx, shape);
+                    self.accum(&mut adj, input, ga);
+                }
+                Op::Reshape(a, _) => {
+                    let shape = self.val(a).shape.clone();
+                    let ga = self.reshape(g, shape);
+                    self.accum(&mut adj, a, ga);
+                }
+                Op::FillLike(scalar, _) => {
+                    let gs = self.sum(g);
+                    self.accum(&mut adj, scalar, gs);
+                }
+            }
+        }
+        wrt.iter()
+            .map(|&w| match adj.get(w.0).copied().flatten() {
+                Some(g) => g,
+                None => {
+                    let shape = self.val(w).shape.clone();
+                    let z = self.scalar_const(0.0);
+                    if shape.is_empty() {
+                        z
+                    } else {
+                        self.fill_like(z, shape)
+                    }
+                }
+            })
+            .collect()
+    }
+
+    fn accum(&mut self, adj: &mut Vec<Option<Var>>, target: Var, g: Var) {
+        if adj.len() <= target.0 {
+            adj.resize(self.nodes.len().max(target.0 + 1), None);
+        }
+        adj[target.0] = Some(match adj[target.0] {
+            Some(prev) => self.add(prev, g),
+            None => g,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests;

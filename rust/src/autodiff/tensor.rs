@@ -1,0 +1,162 @@
+//! The dense row-major f64 tensor used by the autodiff tape.
+
+use crate::linalg;
+
+/// A dense row-major tensor. Rank 0 (scalar, empty shape), 1 (vector) and
+/// 2 (matrix) are used throughout; higher ranks are representable but no
+/// op currently needs them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f64>,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f64>, shape: Vec<usize>) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(data.len(), numel, "data/shape mismatch: {} vs {:?}", data.len(), shape);
+        Tensor { data, shape }
+    }
+
+    pub fn scalar(x: f64) -> Tensor {
+        Tensor { data: vec![x], shape: vec![] }
+    }
+
+    pub fn vector(data: Vec<f64>) -> Tensor {
+        let n = data.len();
+        Tensor { data, shape: vec![n] }
+    }
+
+    pub fn matrix(data: Vec<f64>, m: usize, n: usize) -> Tensor {
+        Tensor::new(data, vec![m, n])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let numel: usize = shape.iter().product();
+        Tensor { data: vec![0.0; numel], shape }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Value of a rank-0 (or single-element) tensor.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.data.len(), 1, "item() on tensor with {} elements", self.data.len());
+        self.data[0]
+    }
+
+    /// Elementwise combine; shapes must match exactly.
+    pub fn ew(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(
+            self.shape, other.shape,
+            "elementwise shape mismatch: {:?} vs {:?}",
+            self.shape, other.shape
+        );
+        Tensor {
+            data: self.data.iter().zip(&other.data).map(|(&x, &y)| f(x, y)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor {
+            data: self.data.iter().map(|&x| f(x)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// Matrix multiply; accepts `[m,k]·[k,n]`, and treats a rank-1 LHS as
+    /// a row vector / rank-1 RHS as a column vector.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k1) = match self.shape.len() {
+            1 => (1, self.shape[0]), // row vector
+            2 => (self.shape[0], self.shape[1]),
+            _ => panic!("matmul LHS must be rank 1 or 2, got {:?}", self.shape),
+        };
+        let (k2, n) = match other.shape.len() {
+            1 => (other.shape[0], 1), // column vector
+            2 => (other.shape[0], other.shape[1]),
+            _ => panic!("matmul RHS must be rank 1 or 2, got {:?}", other.shape),
+        };
+        assert_eq!(k1, k2, "matmul inner dim mismatch: {:?} vs {:?}", self.shape, other.shape);
+        let mut out = vec![0.0; m * n];
+        linalg::gemm_nn(m, k1, n, &self.data, &other.data, &mut out);
+        // shape follows numpy-ish conventions for the vector cases
+        let shape = match (self.shape.len(), other.shape.len()) {
+            (1, 1) => vec![],
+            (1, 2) => vec![n],
+            (2, 1) => vec![m],
+            _ => vec![m, n],
+        };
+        Tensor::new(out, shape)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        match self.shape.len() {
+            1 => self.clone(), // 1-D transpose is a no-op (paired with matmul conventions)
+            2 => {
+                let (m, n) = (self.shape[0], self.shape[1]);
+                let mut out = vec![0.0; m * n];
+                for i in 0..m {
+                    for j in 0..n {
+                        out[j * m + i] = self.data[i * n + j];
+                    }
+                }
+                Tensor::new(out, vec![n, m])
+            }
+            _ => panic!("transpose needs rank ≤ 2"),
+        }
+    }
+}
+
+// Special-case: rank-1 matmul rank-1 should shape-check via as_2d; (1,n)x(1,n)
+// fails unless n==1, which is the desired behaviour (use `dot` on the tape).
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_shapes() {
+        let a = Tensor::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let b = Tensor::matrix(vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0], 3, 2);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![4.0, 5.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn vector_matmul() {
+        let x = Tensor::vector(vec![1.0, 2.0]);
+        let w = Tensor::matrix(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        let y = x.matmul(&w); // row-vector × matrix
+        assert_eq!(y.shape, vec![2]);
+        assert_eq!(y.data, vec![7.0, 10.0]);
+        let z = w.matmul(&x); // matrix × column-vector
+        assert_eq!(z.shape, vec![2]);
+        assert_eq!(z.data, vec![5.0, 11.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Tensor::matrix(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let at = a.transpose();
+        assert_eq!(at.shape, vec![3, 2]);
+        assert_eq!(at.transpose(), a);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::vector(vec![1.0]);
+        let b = Tensor::vector(vec![1.0, 2.0]);
+        a.ew(&b, |x, y| x + y);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+        assert!(Tensor::scalar(1.0).shape.is_empty());
+    }
+}

@@ -1,0 +1,280 @@
+//! Autodiff correctness: every rule vs central finite differences, plus
+//! second-order (grad-of-grad) checks — the property the HNN vector field
+//! and the adjoint VJPs rely on.
+
+use super::*;
+use crate::util::Rng;
+
+/// Central finite-difference gradient of `f` at `x`.
+fn fd_grad(f: impl Fn(&[f64]) -> f64, x: &[f64], eps: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let orig = xp[i];
+        xp[i] = orig + eps;
+        let fp = f(&xp);
+        xp[i] = orig - eps;
+        let fm = f(&xp);
+        xp[i] = orig;
+        g[i] = (fp - fm) / (2.0 * eps);
+    }
+    g
+}
+
+fn assert_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{ctx}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn grad_of_simple_polynomial() {
+    // f(x) = Σ (x² + 3x)
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(vec![1.0, -2.0, 0.5]));
+    let x2 = t.mul(x, x);
+    let x3 = t.scale(x, 3.0);
+    let s = t.add(x2, x3);
+    let y = t.sum(s);
+    let g = t.grad(y, &[x]);
+    // df/dx = 2x + 3
+    assert_eq!(t.val(g[0]).data, vec![5.0, -1.0, 4.0]);
+}
+
+#[test]
+fn grad_matches_fd_for_mlp_like_graph() {
+    let mut rng = Rng::new(10);
+    let (b, din, dh, dout) = (3, 4, 8, 4);
+    let w1d: Vec<f64> = rng.normal_vec(din * dh);
+    let b1d: Vec<f64> = rng.normal_vec(dh);
+    let w2d: Vec<f64> = rng.normal_vec(dh * dout);
+    let xd: Vec<f64> = rng.normal_vec(b * din);
+
+    let eval = |w1: &[f64], b1: &[f64], w2: &[f64], x: &[f64]| -> f64 {
+        let mut t = Tape::new();
+        let x = t.input(Tensor::matrix(x.to_vec(), b, din));
+        let w1 = t.input(Tensor::matrix(w1.to_vec(), din, dh));
+        let b1 = t.input(Tensor::vector(b1.to_vec()));
+        let w2 = t.input(Tensor::matrix(w2.to_vec(), dh, dout));
+        let a = t.matmul(x, w1);
+        let a = t.bias_add(a, b1);
+        let h = t.tanh(a);
+        let y = t.matmul(h, w2);
+        let y2 = t.mul(y, y);
+        let l = t.sum(y2);
+        t.val(l).item()
+    };
+
+    // tape gradient
+    let mut t = Tape::new();
+    let x = t.input(Tensor::matrix(xd.clone(), b, din));
+    let w1 = t.input(Tensor::matrix(w1d.clone(), din, dh));
+    let b1 = t.input(Tensor::vector(b1d.clone()));
+    let w2 = t.input(Tensor::matrix(w2d.clone(), dh, dout));
+    let a0 = t.matmul(x, w1);
+    let a1 = t.bias_add(a0, b1);
+    let h = t.tanh(a1);
+    let y = t.matmul(h, w2);
+    let y2 = t.mul(y, y);
+    let l = t.sum(y2);
+    let g = t.grad(l, &[w1, b1, w2, x]);
+
+    let eps = 1e-6;
+    let fd_w1 = fd_grad(|w| eval(w, &b1d, &w2d, &xd), &w1d, eps);
+    assert_close(&t.val(g[0]).data, &fd_w1, 1e-6, "dW1");
+    let fd_b1 = fd_grad(|bb| eval(&w1d, bb, &w2d, &xd), &b1d, eps);
+    assert_close(&t.val(g[1]).data, &fd_b1, 1e-6, "db1");
+    let fd_w2 = fd_grad(|w| eval(&w1d, &b1d, w, &xd), &w2d, eps);
+    assert_close(&t.val(g[2]).data, &fd_w2, 1e-6, "dW2");
+    let fd_x = fd_grad(|xx| eval(&w1d, &b1d, &w2d, xx), &xd, eps);
+    assert_close(&t.val(g[3]).data, &fd_x, 1e-6, "dx");
+}
+
+#[test]
+fn second_order_gradient() {
+    // f(x) = sum(tanh(x)²); check d²f/dx² against FD of the analytic first
+    // derivative g(x) = 2 tanh(x)(1-tanh(x)²).
+    let xs = vec![0.3, -1.2, 0.0, 2.0];
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(xs.clone()));
+    let h = t.tanh(x);
+    let h2 = t.mul(h, h);
+    let f = t.sum(h2);
+    let g1 = t.grad(f, &[x]); // vector
+    // scalarize: sum of first gradient, then differentiate again
+    let gsum = t.sum(g1[0]);
+    let g2 = t.grad(gsum, &[x]);
+
+    // analytic: d/dx [2 th (1-th²)] = 2(1-th²)² - 4 th² (1-th²)
+    let expect: Vec<f64> = xs
+        .iter()
+        .map(|&v| {
+            let th = v.tanh();
+            let s = 1.0 - th * th;
+            2.0 * s * s - 4.0 * th * th * s
+        })
+        .collect();
+    assert_close(&t.val(g2[0]).data, &expect, 1e-10, "d2f");
+}
+
+#[test]
+fn grad_of_grad_through_matmul() {
+    // H(x) = sum((x W)²)/2 ; ∇H = W (W^T x ... ) — then differentiate
+    // sum(∇H ⊙ v) wrt x: Hessian-vector product (W Wᵀ v for this quadratic).
+    let mut rng = Rng::new(11);
+    let n = 5;
+    let wd = rng.normal_vec(n * n);
+    let xd = rng.normal_vec(n);
+    let vd = rng.normal_vec(n);
+
+    let mut t = Tape::new();
+    let x = t.input(Tensor::matrix(xd.clone(), 1, n));
+    let w = t.constant(Tensor::matrix(wd.clone(), n, n));
+    let v = t.constant(Tensor::matrix(vd.clone(), 1, n));
+    let y = t.matmul(x, w); // [1, n]
+    let y2 = t.mul(y, y);
+    let h = t.sum(y2); // scalar: xᵀ W Wᵀ x (sum of squares)
+    let gh = t.grad(h, &[x]); // 2 W Wᵀ x
+    let hv = t.dot(gh[0], v);
+    let hvp = t.grad(hv, &[x]); // 2 W Wᵀ v
+
+    // analytic
+    let mut wwt_v = vec![0.0; n];
+    // (W Wᵀ) v: first u = Wᵀ v? careful: y = x W (row-vec conv): y_j = Σ_i x_i W_ij.
+    // h = Σ_j y_j² → ∇_x h = 2 W y = 2 W (Wᵀ x). HVP wrt v: 2 W Wᵀ v.
+    let mut wt_v = vec![0.0; n];
+    for j in 0..n {
+        for i in 0..n {
+            wt_v[j] += wd[i * n + j] * vd[i];
+        }
+    }
+    for i in 0..n {
+        for j in 0..n {
+            wwt_v[i] += wd[i * n + j] * wt_v[j];
+        }
+    }
+    let expect: Vec<f64> = wwt_v.iter().map(|&u| 2.0 * u).collect();
+    assert_close(&t.val(hvp[0]).data, &expect, 1e-10, "hvp");
+}
+
+#[test]
+fn gather_scatter_adjointness() {
+    // <gather(x), y> == <x, scatter(y)> for random index maps (the defining
+    // adjoint relation), via autodiff: grad of dot(gather(x), y) wrt x must
+    // equal scatter_add(y).
+    let mut rng = Rng::new(12);
+    for _ in 0..10 {
+        let n_in = 8 + rng.below(8);
+        let n_out = 4 + rng.below(12);
+        let idx: Vec<usize> = (0..n_out).map(|_| rng.below(n_in)).collect();
+        let xd = rng.normal_vec(n_in);
+        let yd = rng.normal_vec(n_out);
+
+        let mut t = Tape::new();
+        let x = t.input(Tensor::vector(xd.clone()));
+        let y = t.constant(Tensor::vector(yd.clone()));
+        let gx = t.gather(x, Rc::new(idx.clone()), vec![n_out]);
+        let ip = t.dot(gx, y);
+        let g = t.grad(ip, &[x]);
+
+        let mut expect = vec![0.0; n_in];
+        for (o, &i) in idx.iter().enumerate() {
+            expect[i] += yd[o];
+        }
+        assert_close(&t.val(g[0]).data, &expect, 1e-12, "scatter");
+    }
+}
+
+#[test]
+fn unused_input_gets_zero_grad() {
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(vec![1.0, 2.0]));
+    let z = t.input(Tensor::vector(vec![3.0, 4.0, 5.0]));
+    let s = t.sum(x);
+    let g = t.grad(s, &[x, z]);
+    assert_eq!(t.val(g[0]).data, vec![1.0, 1.0]);
+    assert_eq!(t.val(g[1]).data, vec![0.0, 0.0, 0.0]);
+    assert_eq!(t.val(g[1]).shape, vec![3]);
+}
+
+#[test]
+fn constants_block_gradient() {
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(vec![2.0]));
+    let c = t.constant(Tensor::vector(vec![5.0]));
+    let y = t.mul(x, c);
+    let s = t.sum(y);
+    let g = t.grad(s, &[x]);
+    assert_eq!(t.val(g[0]).data, vec![5.0]);
+}
+
+#[test]
+fn mem_bytes_grows_with_ops() {
+    let mut t = Tape::new();
+    assert_eq!(t.mem_bytes(), 0);
+    let x = t.input(Tensor::vector(vec![0.0; 100]));
+    assert_eq!(t.mem_bytes(), 800);
+    let _ = t.tanh(x);
+    assert_eq!(t.mem_bytes(), 1600);
+}
+
+#[test]
+fn broadcast_and_reduction_rules() {
+    // f = sum( broadcast0(v, m) ⊙ M ) → df/dv = column sums of M
+    let mut t = Tape::new();
+    let v = t.input(Tensor::vector(vec![1.0, 2.0]));
+    let m = t.constant(Tensor::matrix(vec![1.0, 10.0, 100.0, 1000.0], 2, 2));
+    let bv = t.broadcast0(v, 2);
+    let p = t.mul(bv, m);
+    let s = t.sum(p);
+    let g = t.grad(s, &[v]);
+    assert_eq!(t.val(g[0]).data, vec![101.0, 1010.0]);
+}
+
+#[test]
+fn reshape_preserves_grad() {
+    let mut t = Tape::new();
+    let x = t.input(Tensor::matrix(vec![1.0, 2.0, 3.0, 4.0], 2, 2));
+    let r = t.reshape(x, vec![4]);
+    let r2 = t.mul(r, r);
+    let s = t.sum(r2);
+    let g = t.grad(s, &[x]);
+    assert_eq!(t.val(g[0]).shape, vec![2, 2]);
+    assert_eq!(t.val(g[0]).data, vec![2.0, 4.0, 6.0, 8.0]);
+}
+
+/// Property sweep: random small graphs — gradient of sum(tanh(xW+b)W2)²-ish
+/// compositions always matches finite differences.
+#[test]
+fn property_random_mlp_shapes() {
+    let mut rng = Rng::new(99);
+    for case in 0..8 {
+        let b = 1 + rng.below(3);
+        let din = 1 + rng.below(5);
+        let dh = 1 + rng.below(6);
+        let xd = rng.normal_vec(b * din);
+        let wd = rng.normal_vec(din * dh);
+        let eval = |w: &[f64]| -> f64 {
+            let mut t = Tape::new();
+            let x = t.constant(Tensor::matrix(xd.clone(), b, din));
+            let w = t.input(Tensor::matrix(w.to_vec(), din, dh));
+            let a = t.matmul(x, w);
+            let h = t.tanh(a);
+            let s = t.sum(h);
+            t.val(s).item()
+        };
+        let mut t = Tape::new();
+        let x = t.constant(Tensor::matrix(xd.clone(), b, din));
+        let w = t.input(Tensor::matrix(wd.clone(), din, dh));
+        let a = t.matmul(x, w);
+        let h = t.tanh(a);
+        let s = t.sum(h);
+        let g = t.grad(s, &[w]);
+        let fd = fd_grad(eval, &wd, 1e-6);
+        assert_close(&t.val(g[0]).data, &fd, 1e-6, &format!("case {case}"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Micro-benchmark harness (a light stand-in for `criterion`, which is
+//! unavailable in the offline build environment).
+//!
+//! Provides warmup, repeated timed samples, and median/σ reporting. The
+//! `rust/benches/*.rs` binaries (run via `cargo bench`) are built on it,
+//! as is the experiment harness's per-iteration timing.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: per-iteration wall times.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        crate::util::stats::median(&self.samples_ns)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples_ns)
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        crate::util::stats::std_dev(&self.samples_ns)
+    }
+
+    /// `name  median ± σ` with human units.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  (n={})",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.std_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Format nanoseconds with adaptive units.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    /// Minimum samples to collect.
+    pub min_samples: usize,
+    /// Maximum samples.
+    pub max_samples: usize,
+    /// Soft wall-clock budget per benchmark.
+    pub budget: Duration,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_samples: 5,
+            max_samples: 50,
+            budget: Duration::from_secs(2),
+            warmup: 2,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { min_samples: 3, max_samples: 10, budget: Duration::from_millis(500), warmup: 1 }
+    }
+
+    /// Time `f` repeatedly; each call is one sample.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut samples = Vec::new();
+        while samples.len() < self.max_samples
+            && (samples.len() < self.min_samples || start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult { name: name.to_string(), samples_ns: samples };
+        println!("{}", res.report());
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_timings() {
+        let b = Bench { min_samples: 3, max_samples: 5, budget: Duration::from_millis(50), warmup: 0 };
+        let fast = b.run("fast", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let slow = b.run("slow", || {
+            std::hint::black_box((0..500_000).sum::<u64>());
+        });
+        assert!(fast.samples_ns.len() >= 3);
+        assert!(slow.median_ns() > fast.median_ns());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_500_000_000.0).ends_with("s"));
+    }
+}

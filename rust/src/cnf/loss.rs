@@ -1,0 +1,86 @@
+//! The CNF negative log-likelihood loss.
+//!
+//! After integrating the augmented state to `T`, each sample carries its
+//! latent code `z = x(T)` and the accumulated correction `ℓ(T)`; under a
+//! standard-normal base density,
+//!
+//! ```text
+//! NLL(u) = −log p(u) = ℓ(T) + ½‖z‖² + (d/2)·log 2π
+//! ```
+//!
+//! and the loss is the batch mean (nats per sample, the unit of the
+//! paper's Table 2).
+
+use crate::ode::Loss;
+
+/// Batch-mean NLL over the augmented state layout `[batch, d+1]`.
+pub struct CnfNllLoss {
+    pub batch: usize,
+    pub d: usize,
+}
+
+impl CnfNllLoss {
+    const LN_2PI: f64 = 1.8378770664093453;
+
+    /// Per-sample NLLs (used for eval-set reporting).
+    pub fn per_sample(&self, z_aug: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        (0..self.batch)
+            .map(|row| {
+                let z = &z_aug[row * (d + 1)..row * (d + 1) + d];
+                let l = z_aug[row * (d + 1) + d];
+                l + 0.5 * z.iter().map(|v| v * v).sum::<f64>() + 0.5 * d as f64 * Self::LN_2PI
+            })
+            .collect()
+    }
+}
+
+impl Loss for CnfNllLoss {
+    fn loss(&self, z_aug: &[f64]) -> f64 {
+        assert_eq!(z_aug.len(), self.batch * (self.d + 1));
+        self.per_sample(z_aug).iter().sum::<f64>() / self.batch as f64
+    }
+
+    fn grad(&self, z_aug: &[f64], out: &mut [f64]) {
+        let d = self.d;
+        let inv_b = 1.0 / self.batch as f64;
+        for row in 0..self.batch {
+            for j in 0..d {
+                out[row * (d + 1) + j] = z_aug[row * (d + 1) + j] * inv_b;
+            }
+            out[row * (d + 1) + d] = inv_b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::Loss;
+
+    #[test]
+    fn nll_of_origin_is_gaussian_constant() {
+        let loss = CnfNllLoss { batch: 2, d: 3 };
+        // z = 0, ℓ = 0 → NLL = (3/2) ln 2π
+        let z = vec![0.0; 8];
+        assert!((loss.loss(&z) - 1.5 * CnfNllLoss::LN_2PI).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_matches_fd() {
+        let loss = CnfNllLoss { batch: 2, d: 2 };
+        let z = vec![0.3, -0.7, 0.2, 1.1, 0.4, -0.1];
+        let mut g = vec![0.0; 6];
+        loss.grad(&z, &mut g);
+        let fd = crate::testkit::fd_gradient(|x| loss.loss(x), &z, 1e-6);
+        crate::testkit::assert_all_close(&g, &fd, 1e-8, "cnf nll grad");
+    }
+
+    #[test]
+    fn logdet_term_shifts_nll_linearly() {
+        let loss = CnfNllLoss { batch: 1, d: 2 };
+        let z0 = vec![0.5, -0.5, 0.0];
+        let z1 = vec![0.5, -0.5, 2.5];
+        assert!((loss.loss(&z1) - loss.loss(&z0) - 2.5).abs() < 1e-12);
+    }
+}

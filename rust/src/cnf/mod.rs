@@ -1,0 +1,29 @@
+//! Continuous normalizing flows (§5.1 of the paper).
+//!
+//! A CNF models a density by transporting samples through a neural ODE:
+//! `u = x(0)` (data) flows to `z = x(T)` (latent, standard normal), and
+//! the log-density correction is accumulated alongside the state:
+//!
+//! ```text
+//! d/dt [x, ℓ] = [f(x, t, θ), −Tr(∂f/∂x)]
+//! log p(u) = log N(x(T)) − ℓ(T)
+//! ```
+//!
+//! [`CnfSystem`] implements the augmented dynamics as an
+//! [`crate::ode::OdeSystem`] on the autodiff tape, so every gradient
+//! method of [`crate::adjoint`] trains it unchanged. The trace term uses
+//! either the exact Jacobian trace (small `d`, used by tests) or the
+//! Hutchinson estimator `εᵀ(∂f/∂x)ε` with a fixed probe per iteration
+//! (FFJORD's estimator) — whose gradient requires second derivatives,
+//! which is why the tape emits its backward pass as differentiable ops.
+//!
+//! Stacked flows (the paper's `M` neural-ODE components) are handled by
+//! the trainer chaining `M` integrations, each with its own parameters.
+
+pub mod datasets;
+pub mod loss;
+pub mod system;
+
+pub use datasets::{Dataset, TabularSpec};
+pub use loss::CnfNllLoss;
+pub use system::{CnfSystem, TraceEstimator};

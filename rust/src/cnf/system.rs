@@ -1,0 +1,359 @@
+//! The CNF augmented dynamics `d/dt [x, ℓ] = [f, −Tr(∂f/∂x)]` on the
+//! autodiff tape.
+//!
+//! State layout: `[batch, d+1]` flattened row-major — per sample the `d`
+//! coordinates followed by the accumulated log-density correction `ℓ`.
+//!
+//! `f` is a tanh MLP over `[x ‖ t]` (state-side dims `[d, h…, d]`, the
+//! network input gains one time feature). The trace term is computed by
+//! *tangent propagation through the same tape*: for Hutchinson, one probe
+//! `ε` is pushed through the Jacobian (`dh' = (1−h'²)⊙(da)` layer by
+//! layer), giving `εᵀJε` as differentiable tape ops; for the exact trace,
+//! `d` unit probes are propagated (used by tests and small-`d` runs).
+
+use crate::autodiff::{Tape, Tensor, Var};
+use crate::nn::Mlp;
+use crate::ode::{OdeSystem, Trace};
+use crate::util::Rng;
+use std::cell::RefCell;
+
+/// How `Tr(∂f/∂x)` is computed.
+#[derive(Debug, Clone)]
+pub enum TraceEstimator {
+    /// Exact trace via `d` tangent propagations (cost ×`d`).
+    Exact,
+    /// Hutchinson estimator with the stored probe (`resample_eps` per
+    /// training iteration, as FFJORD does).
+    Hutchinson,
+}
+
+/// The CNF augmented ODE system.
+pub struct CnfSystem {
+    pub net: Mlp,
+    pub d: usize,
+    pub batch: usize,
+    pub estimator: TraceEstimator,
+    /// Rademacher probe, `[batch, d]` flattened. Fixed during one gradient
+    /// computation; resampled between iterations.
+    pub eps: Vec<f64>,
+    /// Parameter slice for the current tape build (the `OdeSystem` trait
+    /// passes params per call; `build` reads them from here).
+    params_cache: RefCell<Vec<f64>>,
+    /// Lazily measured tape size of one traced evaluation.
+    trace_bytes_cache: RefCell<Option<u64>>,
+}
+
+struct CnfTrace {
+    tape: RefCell<Tape>,
+    x_var: Var,
+    param_vars: Vec<Var>,
+    /// concatenated output var: f rows [batch, d]
+    f_var: Var,
+    /// per-sample −trace estimate [batch]
+    neg_tr_var: Var,
+    bytes: u64,
+}
+
+impl Trace for CnfTrace {
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl CnfSystem {
+    /// `dims` are state-side layer sizes `[d, h1, …, d]`.
+    pub fn new(dims: &[usize], batch: usize, estimator: TraceEstimator) -> CnfSystem {
+        assert_eq!(dims[0], *dims.last().unwrap());
+        let d = dims[0];
+        let mut net_dims = dims.to_vec();
+        net_dims[0] = d + 1;
+        CnfSystem {
+            net: Mlp::new(&net_dims),
+            d,
+            batch,
+            estimator,
+            eps: vec![1.0; batch * d],
+            params_cache: RefCell::new(Vec::new()),
+            trace_bytes_cache: RefCell::new(None),
+        }
+    }
+
+    pub fn init_params(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        self.net.init_params(&mut rng)
+    }
+
+    /// Draw a fresh Rademacher probe (call once per training iteration).
+    pub fn resample_eps(&mut self, rng: &mut Rng) {
+        self.eps = rng.rademacher_vec(self.batch * self.d);
+    }
+
+    /// Build the network + tangent propagation on a tape.
+    ///
+    /// Returns `(x_var, param_vars, f_var, neg_tr_var)`.
+    fn build(&self, tape: &mut Tape, t: f64, x: &[f64]) -> (Var, Vec<Var>, Var, Var, Vec<Var>) {
+        let b = self.batch;
+        let d = self.d;
+
+        let x_var = tape.input(Tensor::matrix(x.to_vec(), b, d));
+        // network input [x ‖ t]: build by gather from [b, d] plus a const
+        // time column — implemented as matmul with a (d × d+1) selector
+        // would be wasteful; use gather indices instead.
+        let mut idx = Vec::with_capacity(b * (d + 1));
+        for row in 0..b {
+            for j in 0..d {
+                idx.push(row * d + j);
+            }
+            idx.push(0); // placeholder, overwritten by time column below
+        }
+        // simpler: concat via gather for x part and add a constant column:
+        // inp = gather(x, idx)*(mask) + t*(1-mask). Build mask constants.
+        let idx = std::rc::Rc::new(idx);
+        let gathered = tape.gather(x_var, idx, vec![b, d + 1]);
+        let mut maskv = vec![1.0; b * (d + 1)];
+        let mut tcol = vec![0.0; b * (d + 1)];
+        for row in 0..b {
+            maskv[row * (d + 1) + d] = 0.0;
+            tcol[row * (d + 1) + d] = t;
+        }
+        let mask = tape.constant(Tensor::matrix(maskv, b, d + 1));
+        let tconst = tape.constant(Tensor::matrix(tcol, b, d + 1));
+        let xmasked = tape.mul(gathered, mask);
+        let inp = tape.add(xmasked, tconst);
+
+        // parameters as tape inputs
+        let mut param_vars = Vec::new();
+
+        // tangent seeds, per estimator: list of probe matrices [b, d]
+        let probes: Vec<Vec<f64>> = match self.estimator {
+            TraceEstimator::Hutchinson => vec![self.eps.clone()],
+            TraceEstimator::Exact => (0..d)
+                .map(|k| {
+                    let mut e = vec![0.0; b * d];
+                    for row in 0..b {
+                        e[row * d + k] = 1.0;
+                    }
+                    e
+                })
+                .collect(),
+        };
+        // probe in network-input space: zero tangent on the time column
+        let probe_vars: Vec<Var> = probes
+            .iter()
+            .map(|p| {
+                let mut pv = vec![0.0; b * (d + 1)];
+                for row in 0..b {
+                    pv[row * (d + 1)..row * (d + 1) + d]
+                        .copy_from_slice(&p[row * d..(row + 1) * d]);
+                }
+                tape.constant(Tensor::matrix(pv, b, d + 1))
+            })
+            .collect();
+
+        // forward + tangent propagation
+        let mut h = inp;
+        let mut dh: Vec<Var> = probe_vars;
+        let n_layers = self.net.n_layers();
+        let mut params_flat_offset = 0usize;
+        for l in 0..n_layers {
+            let (din, dout) = (self.net.dims[l], self.net.dims[l + 1]);
+            let w = tape.input(Tensor::matrix(
+                self.params_cache.borrow()[params_flat_offset..params_flat_offset + din * dout]
+                    .to_vec(),
+                din,
+                dout,
+            ));
+            let bias = tape.input(Tensor::vector(
+                self.params_cache.borrow()
+                    [params_flat_offset + din * dout..params_flat_offset + din * dout + dout]
+                    .to_vec(),
+            ));
+            params_flat_offset += din * dout + dout;
+            param_vars.push(w);
+            param_vars.push(bias);
+
+            let a = tape.matmul(h, w);
+            let a = tape.bias_add(a, bias);
+            for dv in dh.iter_mut() {
+                *dv = tape.matmul(*dv, w);
+            }
+            if l < n_layers - 1 {
+                let hv = tape.tanh(a);
+                // dh' = (1 − h'²) ⊙ da
+                let h2 = tape.mul(hv, hv);
+                let onec = tape.scalar_const(1.0);
+                let ones = tape.fill_like(onec, vec![b, dout]);
+                let dtanh = tape.sub(ones, h2);
+                for dv in dh.iter_mut() {
+                    *dv = tape.mul(dtanh, *dv);
+                }
+                h = hv;
+            } else {
+                h = a;
+            }
+        }
+        let f_var = h; // [b, d]
+
+        // −trace: Hutchinson: −Σ_j ε_j (Jε)_j per row; exact: −Σ_k (J e_k)_k
+        let neg_tr = match self.estimator {
+            TraceEstimator::Hutchinson => {
+                let epsv = tape.constant(Tensor::matrix(self.eps.clone(), b, d));
+                let prod = tape.mul(dh[0], epsv); // [b, d]
+                let pt = tape.transpose(prod); // [d, b]
+                let row_sums = tape.sum_axis0(pt); // [b]
+                tape.neg(row_sums)
+            }
+            TraceEstimator::Exact => {
+                // Σ_k (tangent_k)[:, k]
+                let mut acc: Option<Var> = None;
+                for (k, dv) in dh.iter().enumerate() {
+                    // pick column k of dv: gather
+                    let idx: Vec<usize> = (0..b).map(|row| row * d + k).collect();
+                    let col = tape.gather(*dv, std::rc::Rc::new(idx), vec![b]);
+                    acc = Some(match acc {
+                        None => col,
+                        Some(a) => tape.add(a, col),
+                    });
+                }
+                tape.neg(acc.unwrap())
+            }
+        };
+        (x_var, param_vars, f_var, neg_tr, dh)
+    }
+}
+
+impl CnfSystem {
+    fn set_params(&self, params: &[f64]) {
+        self.params_cache.borrow_mut().clear();
+        self.params_cache.borrow_mut().extend_from_slice(params);
+    }
+}
+
+impl OdeSystem for CnfSystem {
+    fn dim(&self) -> usize {
+        self.batch * (self.d + 1)
+    }
+
+    fn n_params(&self) -> usize {
+        self.net.param_len()
+    }
+
+    fn eval(&self, t: f64, z: &[f64], params: &[f64], out: &mut [f64]) {
+        let mut scratch = vec![0.0; self.dim()];
+        let _ = self.eval_traced_impl(t, z, params, &mut scratch, false);
+        out.copy_from_slice(&scratch);
+    }
+
+    fn eval_traced(&self, t: f64, z: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval_traced_impl(t, z, params, out, true).unwrap()
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        _params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let tr = trace.as_any().downcast_ref::<CnfTrace>().unwrap();
+        let mut tape = tr.tape.borrow_mut();
+        let b = self.batch;
+        let d = self.d;
+        // split λ into [λ_f (b,d)] and [λ_ℓ (b)]
+        let mut lam_f = vec![0.0; b * d];
+        let mut lam_l = vec![0.0; b];
+        for row in 0..b {
+            lam_f[row * d..(row + 1) * d].copy_from_slice(&lam[row * (d + 1)..row * (d + 1) + d]);
+            lam_l[row] = lam[row * (d + 1) + d];
+        }
+        let lam_f_var = tape.constant(Tensor::matrix(lam_f, b, d));
+        let lam_l_var = tape.constant(Tensor::vector(lam_l));
+        let s1 = tape.mul(lam_f_var, tr.f_var);
+        let s1 = tape.sum(s1);
+        let s2 = tape.mul(lam_l_var, tr.neg_tr_var);
+        let s2 = tape.sum(s2);
+        let total = tape.add(s1, s2);
+
+        let mut wrt = vec![tr.x_var];
+        wrt.extend_from_slice(&tr.param_vars);
+        let grads = tape.grad(total, &wrt);
+
+        // g_x: [b, d] → augmented layout [b, d+1] with zero ℓ-column
+        let gx_val = tape.val(grads[0]).data.clone();
+        g_x.fill(0.0);
+        for row in 0..b {
+            g_x[row * (d + 1)..row * (d + 1) + d]
+                .copy_from_slice(&gx_val[row * d..(row + 1) * d]);
+        }
+        // parameter grads in Mlp flat layout [W1, b1, W2, b2, …]
+        let mut off = 0usize;
+        for g in &grads[1..] {
+            let v = &tape.val(*g).data;
+            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
+                *dst += src;
+            }
+            off += v.len();
+        }
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        *self.trace_bytes_cache.borrow_mut().get_or_insert_with(|| {
+            let mut out = vec![0.0; self.dim()];
+            let z = vec![0.1; self.dim()];
+            let p = self.init_params(1);
+            let tr = self.eval_traced(0.0, &z, &p, &mut out);
+            tr.bytes()
+        })
+    }
+}
+
+impl CnfSystem {
+    fn eval_traced_impl(
+        &self,
+        t: f64,
+        z: &[f64],
+        params: &[f64],
+        out: &mut [f64],
+        traced: bool,
+    ) -> Option<Box<dyn Trace>> {
+        let b = self.batch;
+        let d = self.d;
+        assert_eq!(z.len(), b * (d + 1));
+        self.set_params(params);
+        let mut tape = Tape::new();
+        // extract x rows from augmented state
+        let mut x = vec![0.0; b * d];
+        for row in 0..b {
+            x[row * d..(row + 1) * d].copy_from_slice(&z[row * (d + 1)..row * (d + 1) + d]);
+        }
+        let (x_var, param_vars, f_var, neg_tr_var, _dh) = self.build(&mut tape, t, &x);
+
+        let fv = &tape.val(f_var).data;
+        let trv = &tape.val(neg_tr_var).data;
+        for row in 0..b {
+            out[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&fv[row * d..(row + 1) * d]);
+            out[row * (d + 1) + d] = trv[row];
+        }
+        if traced {
+            let bytes = tape.mem_bytes() as u64;
+            Some(Box::new(CnfTrace {
+                tape: RefCell::new(tape),
+                x_var,
+                param_vars,
+                f_var,
+                neg_tr_var,
+                bytes,
+            }))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

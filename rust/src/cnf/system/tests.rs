@@ -1,0 +1,173 @@
+//! CNF dynamics correctness: exact trace vs brute-force Jacobian,
+//! Hutchinson unbiasedness, VJP (second-order!) vs finite differences,
+//! and end-to-end gradient agreement across methods.
+
+use super::*;
+use crate::adjoint::{BackpropMethod, GradientMethod, SymplecticAdjoint};
+use crate::cnf::loss::CnfNllLoss;
+use crate::integrate::SolverConfig;
+use crate::ode::{Loss, OdeSystem};
+use crate::tableau::Tableau;
+use crate::testkit::{assert_all_close, fd_gradient};
+use crate::util::stats::rel_l2;
+use crate::util::Rng;
+
+/// Exact-trace mode must equal the brute-force Jacobian trace computed by
+/// finite differences of the plain vector field.
+#[test]
+fn exact_trace_matches_fd_jacobian() {
+    let sys = CnfSystem::new(&[3, 12, 3], 2, TraceEstimator::Exact);
+    let p = sys.init_params(1);
+    let mut rng = Rng::new(2);
+    let z: Vec<f64> = rng.normal_vec(sys.dim());
+    let mut out = vec![0.0; sys.dim()];
+    sys.eval(0.3, &z, &p, &mut out);
+
+    let (b, d) = (2usize, 3usize);
+    // brute-force trace per sample: perturb x, read f
+    for row in 0..b {
+        let mut tr = 0.0;
+        let eps = 1e-6;
+        for k in 0..d {
+            let mut zp = z.clone();
+            zp[row * (d + 1) + k] += eps;
+            let mut zm = z.clone();
+            zm[row * (d + 1) + k] -= eps;
+            let mut fp = vec![0.0; sys.dim()];
+            let mut fm = vec![0.0; sys.dim()];
+            sys.eval(0.3, &zp, &p, &mut fp);
+            sys.eval(0.3, &zm, &p, &mut fm);
+            tr += (fp[row * (d + 1) + k] - fm[row * (d + 1) + k]) / (2.0 * eps);
+        }
+        let got = -out[row * (d + 1) + d];
+        assert!((got - tr).abs() < 1e-5, "row {row}: {got} vs {tr}");
+    }
+}
+
+/// Hutchinson with mean over many probes converges to the exact trace.
+#[test]
+fn hutchinson_is_unbiased() {
+    let mut sys = CnfSystem::new(&[2, 10, 2], 1, TraceEstimator::Hutchinson);
+    let p = sys.init_params(3);
+    let exact_sys = CnfSystem::new(&[2, 10, 2], 1, TraceEstimator::Exact);
+    let mut rng = Rng::new(4);
+    let z = vec![0.4, -0.7, 0.0];
+
+    let mut exact_out = vec![0.0; 3];
+    exact_sys.eval(0.1, &z, &p, &mut exact_out);
+    let exact_tr = exact_out[2];
+
+    let mut acc = 0.0;
+    let n = 3000;
+    for _ in 0..n {
+        sys.resample_eps(&mut rng);
+        let mut out = vec![0.0; 3];
+        sys.eval(0.1, &z, &p, &mut out);
+        acc += out[2];
+    }
+    let mean = acc / n as f64;
+    assert!(
+        (mean - exact_tr).abs() < 0.05 * (1.0 + exact_tr.abs()),
+        "{mean} vs {exact_tr}"
+    );
+}
+
+/// The f-component of the augmented dynamics must equal a plain MLP.
+#[test]
+fn f_component_is_the_mlp() {
+    let sys = CnfSystem::new(&[2, 8, 2], 2, TraceEstimator::Hutchinson);
+    let p = sys.init_params(5);
+    let z = vec![0.3, -0.2, 0.0, 1.0, 0.5, 0.0];
+    let mut out = vec![0.0; 6];
+    sys.eval(0.7, &z, &p, &mut out);
+
+    // manual MLP eval on sample 0: input [0.3, -0.2, 0.7]
+    let y = sys.net.forward(&[0.3, -0.2, 0.7], 1, &p);
+    assert_all_close(&out[0..2], &y, 1e-12, "f0");
+    let y1 = sys.net.forward(&[1.0, 0.5, 0.7], 1, &p);
+    assert_all_close(&out[3..5], &y1, 1e-12, "f1");
+}
+
+/// The VJP — which differentiates through the trace term, i.e. second
+/// derivatives of the network — must match finite differences of λᵀ(dz/dt).
+#[test]
+fn vjp_with_trace_term_matches_fd() {
+    for est in [TraceEstimator::Exact, TraceEstimator::Hutchinson] {
+        let mut sys = CnfSystem::new(&[2, 6, 2], 2, est);
+        let mut rng = Rng::new(6);
+        sys.resample_eps(&mut rng);
+        let p = sys.init_params(7);
+        let z = rng.normal_vec(sys.dim());
+        let lam = rng.normal_vec(sys.dim());
+        let t = 0.2;
+
+        let mut g_x = vec![0.0; sys.dim()];
+        let mut g_p = vec![0.0; sys.n_params()];
+        sys.vjp(t, &z, &p, &lam, &mut g_x, &mut g_p);
+
+        let f_dot = |zz: &[f64], pp: &[f64]| -> f64 {
+            let mut out = vec![0.0; sys.dim()];
+            sys.eval(t, zz, pp, &mut out);
+            out.iter().zip(&lam).map(|(a, b)| a * b).sum()
+        };
+        let fd_x = fd_gradient(|zz| f_dot(zz, &p), &z, 1e-6);
+        // the ℓ-columns of g_x are structurally zero (f doesn't read ℓ)
+        assert_all_close(&g_x, &fd_x, 1e-5, "g_z");
+        let fd_p = fd_gradient(|pp| f_dot(&z, pp), &p, 1e-6);
+        assert_all_close(&g_p, &fd_p, 1e-5, "g_p");
+    }
+}
+
+/// End-to-end: training gradient of the NLL through a short integration —
+/// symplectic adjoint == backprop on the CNF too (second-order VJPs
+/// inside).
+#[test]
+fn cnf_training_gradient_exactness() {
+    let mut sys = CnfSystem::new(&[2, 8, 2], 3, TraceEstimator::Hutchinson);
+    let mut rng = Rng::new(8);
+    sys.resample_eps(&mut rng);
+    let p = sys.init_params(9);
+
+    // initial augmented state: data rows with ℓ = 0
+    let mut z0 = vec![0.0; sys.dim()];
+    for row in 0..3 {
+        for j in 0..2 {
+            z0[row * 3 + j] = rng.normal();
+        }
+    }
+    let loss = CnfNllLoss { batch: 3, d: 2 };
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+
+    let bp = BackpropMethod.gradient(&sys, &p, &z0, 0.0, 1.0, &cfg, &loss).unwrap();
+    let sa = SymplecticAdjoint.gradient(&sys, &p, &z0, 0.0, 1.0, &cfg, &loss).unwrap();
+    let err = rel_l2(&sa.grad_params, &bp.grad_params);
+    assert!(err < 1e-12, "err {err}");
+
+    // and against finite differences of the full solve
+    let run = |pp: &[f64]| -> f64 {
+        let sol = crate::integrate::solve_ivp(&sys, pp, &z0, 0.0, 1.0, &cfg);
+        loss.loss(sol.final_state())
+    };
+    for i in (0..sys.n_params()).step_by(17) {
+        let eps = 1e-6;
+        let mut pp = p.clone();
+        pp[i] += eps;
+        let mut pm = p.clone();
+        pm[i] -= eps;
+        let fd = (run(&pp) - run(&pm)) / (2.0 * eps);
+        assert!(
+            (sa.grad_params[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+            "θ[{i}]: {} vs {fd}",
+            sa.grad_params[i]
+        );
+    }
+}
+
+#[test]
+fn trace_bytes_is_stable() {
+    let sys = CnfSystem::new(&[3, 16, 3], 4, TraceEstimator::Hutchinson);
+    let b1 = sys.trace_bytes();
+    let b2 = sys.trace_bytes();
+    assert_eq!(b1, b2);
+    assert!(b1 > 0);
+}

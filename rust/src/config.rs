@@ -1,0 +1,119 @@
+//! Experiment/CLI configuration: a small `key=value` option parser.
+//!
+//! The CLI accepts overrides like `sympode exp table2 dataset=gas
+//! iters=100 quick=false`; this module parses and type-checks them. (The
+//! offline environment has no `clap`/`serde`, so the option substrate
+//! lives here.)
+
+use std::collections::BTreeMap;
+
+/// Parsed `key=value` options with typed accessors and unknown-key
+/// detection.
+#[derive(Debug, Clone, Default)]
+pub struct Options {
+    map: BTreeMap<String, String>,
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Options {
+    /// Parse `key=value` tokens; rejects malformed tokens.
+    pub fn parse(args: &[String]) -> Result<Options, String> {
+        let mut map = BTreeMap::new();
+        for a in args {
+            let Some((k, v)) = a.split_once('=') else {
+                return Err(format!("expected key=value, got {a:?}"));
+            };
+            if k.is_empty() {
+                return Err(format!("empty key in {a:?}"));
+            }
+            map.insert(k.to_string(), v.to_string());
+        }
+        Ok(Options { map, known: Default::default() })
+    }
+
+    fn note(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.note(key);
+        self.map.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.note(key);
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{key}={v} is not an integer")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.note(key);
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("{key}={v} is not a number")),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool, String> {
+        self.note(key);
+        match self.map.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(v) => Err(format!("{key}={v} is not a bool")),
+        }
+    }
+
+    /// Error if any provided key was never consumed (catches typos).
+    pub fn check_unknown(&self) -> Result<(), String> {
+        let known = self.known.borrow();
+        let unknown: Vec<&String> =
+            self.map.keys().filter(|k| !known.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts(s: &[&str]) -> Options {
+        Options::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let o = opts(&["iters=42", "atol=1e-6", "quick=false", "dataset=gas"]);
+        assert_eq!(o.usize("iters", 0).unwrap(), 42);
+        assert_eq!(o.f64("atol", 1.0).unwrap(), 1e-6);
+        assert!(!o.bool("quick", true).unwrap());
+        assert_eq!(o.str("dataset", "x"), "gas");
+        assert_eq!(o.usize("missing", 7).unwrap(), 7);
+        o.check_unknown().unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Options::parse(&["no-equals".to_string()]).is_err());
+        assert!(Options::parse(&["=v".to_string()]).is_err());
+    }
+
+    #[test]
+    fn detects_unknown_keys() {
+        let o = opts(&["iters=1", "typo=2"]);
+        let _ = o.usize("iters", 0);
+        assert!(o.check_unknown().is_err());
+    }
+
+    #[test]
+    fn type_errors() {
+        let o = opts(&["iters=abc"]);
+        assert!(o.usize("iters", 0).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! The experiment coordinator: one entry per table/figure of the paper's
+//! evaluation section, each regenerating the corresponding rows on this
+//! testbed (see DESIGN.md §5 for the experiment index and the
+//! substitutions).
+//!
+//! Every experiment prints a paper-style table to stdout and writes the
+//! raw rows as JSON to `results/<name>.json` for post-processing.
+
+pub mod experiments;
+
+pub use experiments::*;
+
+use crate::util::Json;
+use std::path::Path;
+
+/// Shared experiment options (scaled-down defaults for the single-core
+/// testbed; `quick=false` runs the fuller sweeps).
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub quick: bool,
+    pub seeds: usize,
+    pub iters: usize,
+    pub out_dir: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts { quick: true, seeds: 3, iters: 20, out_dir: "results".into() }
+    }
+}
+
+/// Write an experiment's JSON rows to `<out_dir>/<name>.json`.
+pub fn write_results(opts: &ExpOpts, name: &str, rows: Json) -> std::io::Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let path = Path::new(&opts.out_dir).join(format!("{name}.json"));
+    std::fs::write(&path, rows.to_string())?;
+    println!("\n[results written to {}]", path.display());
+    Ok(())
+}
+
+/// Format bytes as MiB with two decimals (the paper's memory unit).
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mib_conversion() {
+        assert_eq!(mib(1024 * 1024), 1.0);
+        assert!((mib(1536 * 1024) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,260 @@
+//! Radix-2 complex FFT.
+//!
+//! Substrate for the spectral PDE solvers in [`crate::physics`] (KdV and
+//! Cahn–Hilliard data generation via ETDRK4). Iterative in-place
+//! Cooley–Tukey with bit-reversal permutation; power-of-two lengths only,
+//! which is all the pseudo-spectral solvers use.
+
+use std::f64::consts::PI;
+
+/// A complex number. Deliberately minimal — only what the FFT and the
+/// ETDRK4 coefficients need.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cplx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cplx {
+    pub const ZERO: Cplx = Cplx { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Cplx {
+        Cplx { re, im }
+    }
+
+    pub fn from_re(re: f64) -> Cplx {
+        Cplx { re, im: 0.0 }
+    }
+
+    pub fn conj(self) -> Cplx {
+        Cplx::new(self.re, -self.im)
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+
+    pub fn exp(self) -> Cplx {
+        let r = self.re.exp();
+        Cplx::new(r * self.im.cos(), r * self.im.sin())
+    }
+
+    pub fn add(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re + o.re, self.im + o.im)
+    }
+
+    pub fn sub(self, o: Cplx) -> Cplx {
+        Cplx::new(self.re - o.re, self.im - o.im)
+    }
+
+    pub fn mul(self, o: Cplx) -> Cplx {
+        Cplx::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    pub fn scale(self, s: f64) -> Cplx {
+        Cplx::new(self.re * s, self.im * s)
+    }
+
+    pub fn div(self, o: Cplx) -> Cplx {
+        let d = o.re * o.re + o.im * o.im;
+        Cplx::new(
+            (self.re * o.re + self.im * o.im) / d,
+            (self.im * o.re - self.re * o.im) / d,
+        )
+    }
+}
+
+/// In-place forward FFT (`sign = -1`) of a power-of-two-length buffer.
+pub fn fft(buf: &mut [Cplx]) {
+    fft_dir(buf, -1.0);
+}
+
+/// In-place inverse FFT, including the `1/n` normalization.
+pub fn ifft(buf: &mut [Cplx]) {
+    fft_dir(buf, 1.0);
+    let n = buf.len() as f64;
+    for v in buf.iter_mut() {
+        *v = v.scale(1.0 / n);
+    }
+}
+
+fn fft_dir(buf: &mut [Cplx], sign: f64) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two, got {n}");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    // butterflies
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen = Cplx::new(ang.cos(), ang.sin());
+        for start in (0..n).step_by(len) {
+            let mut w = Cplx::new(1.0, 0.0);
+            for i in 0..len / 2 {
+                let u = buf[start + i];
+                let v = buf[start + i + len / 2].mul(w);
+                buf[start + i] = u.add(v);
+                buf[start + i + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward FFT of a real signal; returns the full complex spectrum.
+pub fn rfft(x: &[f64]) -> Vec<Cplx> {
+    let mut buf: Vec<Cplx> = x.iter().map(|&v| Cplx::from_re(v)).collect();
+    fft(&mut buf);
+    buf
+}
+
+/// Inverse FFT returning only the real part (input spectrum assumed to be
+/// conjugate-symmetric, i.e. the transform of a real signal).
+pub fn irfft(spec: &[Cplx]) -> Vec<f64> {
+    let mut buf = spec.to_vec();
+    ifft(&mut buf);
+    buf.into_iter().map(|c| c.re).collect()
+}
+
+/// Angular wavenumbers `k_j = 2π·freq_j / L` for a periodic domain of
+/// physical length `domain_len` sampled at `n` points, in FFT order
+/// (`0, 1, …, n/2-1, -n/2, …, -1`).
+pub fn wavenumbers(n: usize, domain_len: f64) -> Vec<f64> {
+    let scale = 2.0 * PI / domain_len;
+    (0..n)
+        .map(|j| {
+            let f = if j <= n / 2 - 1 || n == 1 {
+                j as isize
+            } else {
+                j as isize - n as isize
+            };
+            scale * f as f64
+        })
+        .collect()
+}
+
+/// Naive O(n²) DFT, used by tests as an oracle for the FFT.
+pub fn dft_naive(x: &[Cplx]) -> Vec<Cplx> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let mut acc = Cplx::ZERO;
+            for (j, &xj) in x.iter().enumerate() {
+                let ang = -2.0 * PI * (k * j) as f64 / n as f64;
+                acc = acc.add(xj.mul(Cplx::new(ang.cos(), ang.sin())));
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_cplx(rng: &mut Rng, n: usize) -> Vec<Cplx> {
+        (0..n).map(|_| Cplx::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 4, 8, 64, 256] {
+            let x = rand_cplx(&mut rng, n);
+            let mut y = x.clone();
+            fft(&mut y);
+            let y_ref = dft_naive(&x);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a.re - b.re).abs() < 1e-9 && (a.im - b.im).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Rng::new(2);
+        let x = rand_cplx(&mut rng, 128);
+        let mut y = x.clone();
+        fft(&mut y);
+        ifft(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-12 && (a.im - b.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = Rng::new(3);
+        let x = rand_cplx(&mut rng, 64);
+        let mut y = x.clone();
+        fft(&mut y);
+        let ex: f64 = x.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let ey: f64 = y.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / 64.0;
+        assert!((ex - ey).abs() < 1e-9 * ex.max(1.0));
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::new(4);
+        let x = rand_cplx(&mut rng, 32);
+        let y = rand_cplx(&mut rng, 32);
+        let sum: Vec<Cplx> = x.iter().zip(&y).map(|(a, b)| a.add(*b)).collect();
+        let mut fx = x.clone();
+        fft(&mut fx);
+        let mut fy = y.clone();
+        fft(&mut fy);
+        let mut fs = sum.clone();
+        fft(&mut fs);
+        for i in 0..32 {
+            let expect = fx[i].add(fy[i]);
+            assert!((fs[i].re - expect.re).abs() < 1e-10);
+            assert!((fs[i].im - expect.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn spectral_derivative_of_sine() {
+        // d/dx sin(x) = cos(x) on [0, 2π)
+        let n = 64;
+        let l = 2.0 * PI;
+        let xs: Vec<f64> = (0..n).map(|i| l * i as f64 / n as f64).collect();
+        let u: Vec<f64> = xs.iter().map(|&x| x.sin()).collect();
+        let k = wavenumbers(n, l);
+        let mut spec = rfft(&u);
+        for (s, &kj) in spec.iter_mut().zip(&k) {
+            *s = s.mul(Cplx::new(0.0, kj)); // multiply by ik
+        }
+        let du = irfft(&spec);
+        for (d, &x) in du.iter().zip(&xs) {
+            assert!((d - x.cos()).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn wavenumber_order() {
+        let k = wavenumbers(8, 2.0 * PI);
+        assert_eq!(k, vec![0.0, 1.0, 2.0, 3.0, -4.0, -3.0, -2.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut x = vec![Cplx::ZERO; 12];
+        fft(&mut x);
+    }
+}

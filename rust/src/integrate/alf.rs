@@ -1,0 +1,205 @@
+//! The asynchronous leapfrog (ALF) integrator of MALI (Zhuang et al.,
+//! ICLR 2021).
+//!
+//! ALF advances an augmented pair `(x, v)` (state and "velocity", with
+//! `v₀ = f(x₀, t₀)`):
+//!
+//! ```text
+//! x_{n+½} = x_n + (h/2) v_n
+//! u       = f(x_{n+½}, t_n + h/2)
+//! v_{n+1} = 2u − v_n
+//! x_{n+1} = x_{n+½} + (h/2) v_{n+1}
+//! ```
+//!
+//! The update is *time-reversible*: [`alf_step_reverse`] reconstructs
+//! `(x_n, v_n)` from `(x_{n+1}, v_{n+1})` exactly (up to rounding), which
+//! is what lets MALI run backward without checkpoints. It is second-order
+//! only — the paper's Table 3 discussion of why low-order methods need
+//! tiny steps applies to it directly.
+
+use crate::ode::OdeSystem;
+
+/// One forward ALF step. Returns the midpoint state `x_{n+½}` (needed by
+/// the backward VJP) and mutates `(x, v)` in place.
+pub fn alf_step(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t: f64,
+    h: f64,
+    x: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+) -> Vec<f64> {
+    let dim = x.len();
+    let mut x_half = x.clone();
+    crate::linalg::axpy(0.5 * h, v, &mut x_half);
+    let mut u = vec![0.0; dim];
+    sys.eval(t + 0.5 * h, &x_half, params, &mut u);
+    for i in 0..dim {
+        v[i] = 2.0 * u[i] - v[i];
+    }
+    *x = x_half.clone();
+    crate::linalg::axpy(0.5 * h, v, x);
+    x_half
+}
+
+/// Invert one ALF step: reconstruct `(x_n, v_n)` from `(x_{n+1}, v_{n+1})`.
+/// Returns `x_{n+½}`.
+pub fn alf_step_reverse(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t: f64,
+    h: f64,
+    x: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+) -> Vec<f64> {
+    let dim = x.len();
+    let mut x_half = x.clone();
+    crate::linalg::axpy(-0.5 * h, v, &mut x_half);
+    let mut u = vec![0.0; dim];
+    sys.eval(t + 0.5 * h, &x_half, params, &mut u);
+    for i in 0..dim {
+        v[i] = 2.0 * u[i] - v[i];
+    }
+    *x = x_half.clone();
+    crate::linalg::axpy(-0.5 * h, v, x);
+    x_half
+}
+
+/// VJP of one ALF step.
+///
+/// Given `(ḡ_x, ḡ_v)` w.r.t. `(x_{n+1}, v_{n+1})`, computes the gradients
+/// w.r.t. `(x_n, v_n)` in place and accumulates the parameter gradient.
+/// `x_half` must be the midpoint of the corresponding forward step (as
+/// reconstructed by [`alf_step_reverse`]).
+pub fn alf_step_vjp(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t: f64,
+    h: f64,
+    x_half: &[f64],
+    g_x: &mut Vec<f64>,
+    g_v: &mut Vec<f64>,
+    g_p: &mut [f64],
+) {
+    let dim = g_x.len();
+    // forward: x1 = xh + (h/2) v1 ; v1 = 2u - v0 ; u = f(xh) ; xh = x0 + (h/2) v0
+    // reverse-mode:
+    let g_x1 = g_x.clone();
+    // v1 receives from both x1 and direct g_v
+    let mut g_v1 = g_v.clone();
+    crate::linalg::axpy(0.5 * h, &g_x1, &mut g_v1);
+    // u and v0 from v1 = 2u - v0
+    let g_u: Vec<f64> = g_v1.iter().map(|g| 2.0 * g).collect();
+    let mut g_v0: Vec<f64> = g_v1.iter().map(|g| -g).collect();
+    // xh from x1 (identity) and from u = f(xh): g_xh = g_x1 + (∂f/∂x)ᵀ g_u
+    let mut jx = vec![0.0; dim];
+    sys.vjp(t + 0.5 * h, x_half, params, &g_u, &mut jx, g_p);
+    let mut g_xh = g_x1;
+    crate::linalg::axpy(1.0, &jx, &mut g_xh);
+    // x0, v0 from xh = x0 + (h/2) v0
+    crate::linalg::axpy(0.5 * h, &g_xh, &mut g_v0);
+    *g_x = g_xh;
+    *g_v = g_v0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::NativeMlpSystem;
+    use crate::util::Rng;
+
+    #[test]
+    fn alf_is_reversible() {
+        let sys = NativeMlpSystem::new(&[3, 16, 3], 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(1);
+        let x0 = rng.normal_vec(3);
+        let mut v0 = vec![0.0; 3];
+        sys.eval(0.0, &x0, &p, &mut v0);
+        let (x0_orig, v0_orig) = (x0.clone(), v0.clone());
+
+        let mut x = x0;
+        let mut v = v0;
+        let h = 0.05;
+        let n = 20;
+        for i in 0..n {
+            alf_step(&sys, &p, i as f64 * h, h, &mut x, &mut v);
+        }
+        for i in (0..n).rev() {
+            alf_step_reverse(&sys, &p, i as f64 * h, h, &mut x, &mut v);
+        }
+        for (a, b) in x.iter().zip(&x0_orig) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+        for (a, b) in v.iter().zip(&v0_orig) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn alf_is_second_order() {
+        // harmonic oscillator convergence: error ~ h²
+        let sys = crate::ode::analytic::Harmonic;
+        let p = vec![1.0];
+        let exact = crate::ode::analytic::Harmonic::exact_solution(&[1.0, 0.0], 1.0, 1.0);
+        let run = |n: usize| -> f64 {
+            let h = 1.0 / n as f64;
+            let mut x = vec![1.0, 0.0];
+            let mut v = vec![0.0; 2];
+            sys.eval(0.0, &x, &p, &mut v);
+            for i in 0..n {
+                alf_step(&sys, &p, i as f64 * h, h, &mut x, &mut v);
+            }
+            crate::util::stats::max_abs_diff(&x, &exact)
+        };
+        let e1 = run(50);
+        let e2 = run(100);
+        let order = (e1 / e2).log2();
+        assert!((order - 2.0).abs() < 0.3, "observed order {order}");
+    }
+
+    #[test]
+    fn alf_vjp_matches_fd() {
+        let sys = NativeMlpSystem::new(&[2, 8, 2], 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(2);
+        let x0 = rng.normal_vec(2);
+        let h = 0.1;
+        let t = 0.3;
+
+        // scalar objective: sum(x1) after one step (v0 fixed constant here)
+        let v0 = rng.normal_vec(2);
+        let run = |x0v: &[f64], pv: &[f64]| -> f64 {
+            let mut x = x0v.to_vec();
+            let mut v = v0.clone();
+            alf_step(&sys, pv, t, h, &mut x, &mut v);
+            x.iter().sum()
+        };
+
+        let mut x = x0.clone();
+        let mut v = v0.clone();
+        let x_half = alf_step(&sys, &p, t, h, &mut x, &mut v);
+        let mut g_x = vec![1.0; 2];
+        let mut g_v = vec![0.0; 2];
+        let mut g_p = vec![0.0; sys.n_params()];
+        alf_step_vjp(&sys, &p, t, h, &x_half, &mut g_x, &mut g_v, &mut g_p);
+
+        let eps = 1e-6;
+        for i in 0..2 {
+            let mut xp = x0.clone();
+            xp[i] += eps;
+            let mut xm = x0.clone();
+            xm[i] -= eps;
+            let fd = (run(&xp, &p) - run(&xm, &p)) / (2.0 * eps);
+            assert!((g_x[i] - fd).abs() < 1e-5, "g_x[{i}] {} vs {fd}", g_x[i]);
+        }
+        for i in (0..sys.n_params()).step_by(11) {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let fd = (run(&x0, &pp) - run(&x0, &pm)) / (2.0 * eps);
+            assert!((g_p[i] - fd).abs() < 1e-5, "g_p[{i}] {} vs {fd}", g_p[i]);
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Numerical integration of `dx/dt = f(x, t, θ)`.
+//!
+//! [`solve_ivp`] drives an explicit Runge–Kutta tableau in fixed-step or
+//! adaptive mode (PI-style step control with the RMS error norm scipy and
+//! torchdiffeq use, including DOP853's combined 5th/3rd-order estimator).
+//! The returned [`Solution`] records every accepted `(t_n, x_n)` — which
+//! is exactly the checkpoint trail Algorithm 1 of the paper retains — plus
+//! evaluation counts for the cost accounting of Table 1.
+//!
+//! [`rk_stages`] recomputes the stage states `X_{n,i}` and slopes
+//! `k_{n,i}` of a single step; the backward passes of ACA and the
+//! symplectic adjoint method replay steps through it (Algorithm 2 lines
+//! 3–6).
+//!
+//! [`alf`] implements the asynchronous leapfrog integrator MALI is built
+//! on.
+
+pub mod alf;
+pub mod dense;
+
+pub use dense::DenseSolution;
+
+use crate::memory::{MemCategory, MemTracker};
+use crate::ode::OdeSystem;
+use crate::tableau::{ErrorSpec, Tableau};
+
+/// Step-size policy.
+#[derive(Debug, Clone)]
+pub enum StepMode {
+    /// Fixed step of magnitude `h` (sign is derived from the direction of
+    /// integration).
+    Fixed { h: f64 },
+    /// Embedded-error adaptive stepping.
+    Adaptive { atol: f64, rtol: f64, h0: Option<f64>, max_steps: usize },
+}
+
+/// Integrator configuration: a tableau plus a step policy.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    pub tableau: Tableau,
+    pub mode: StepMode,
+}
+
+impl SolverConfig {
+    pub fn fixed(tableau: Tableau, h: f64) -> SolverConfig {
+        SolverConfig { tableau, mode: StepMode::Fixed { h } }
+    }
+
+    pub fn adaptive(tableau: Tableau, atol: f64, rtol: f64) -> SolverConfig {
+        assert!(tableau.adaptive(), "{} has no embedded error estimate", tableau.name);
+        SolverConfig {
+            tableau,
+            mode: StepMode::Adaptive { atol, rtol, h0: None, max_steps: 100_000 },
+        }
+    }
+}
+
+/// Counters matching the cost columns of Table 1.
+#[derive(Debug, Clone, Default)]
+pub struct SolveStats {
+    /// Accepted steps (the paper's `N`).
+    pub n_steps: usize,
+    /// Rejected trial steps.
+    pub n_rejected: usize,
+    /// Total evaluations of `f`.
+    pub nfe: usize,
+}
+
+/// Forward trajectory: accepted states only (`xs[0] = x₀`, `xs[n]` the
+/// state after step n), i.e. Algorithm 1's checkpoint set plus the final
+/// state.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub ts: Vec<f64>,
+    pub xs: Vec<Vec<f64>>,
+    pub stats: SolveStats,
+}
+
+impl Solution {
+    pub fn final_state(&self) -> &[f64] {
+        self.xs.last().expect("empty solution")
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.ts.len() - 1
+    }
+}
+
+/// RMS error norm used for step acceptance: `sqrt(mean((err/scale)²))`
+/// with `scale = atol + rtol·max(|x|, |x_new|)`.
+pub(crate) fn error_norm(err: &[f64], x: &[f64], x_new: &[f64], atol: f64, rtol: f64) -> f64 {
+    let n = err.len();
+    let mut acc = 0.0;
+    for i in 0..n {
+        let scale = atol + rtol * x[i].abs().max(x_new[i].abs());
+        let r = err[i] / scale;
+        acc += r * r;
+    }
+    (acc / n as f64).sqrt()
+}
+
+/// DOP853's combined 5th/3rd error norm (Hairer dop853.f / scipy).
+pub(crate) fn error_norm_dop853(
+    e3: &[f64],
+    e5: &[f64],
+    k: &[Vec<f64>],
+    h: f64,
+    x: &[f64],
+    x_new: &[f64],
+    atol: f64,
+    rtol: f64,
+) -> f64 {
+    let n = x.len();
+    let mut err5_sq = 0.0;
+    let mut err3_sq = 0.0;
+    for i in 0..n {
+        let scale = atol + rtol * x[i].abs().max(x_new[i].abs());
+        let mut a5 = 0.0;
+        let mut a3 = 0.0;
+        for (j, kj) in k.iter().enumerate() {
+            a5 += e5[j] * kj[i];
+            a3 += e3[j] * kj[i];
+        }
+        let r5 = a5 / scale;
+        let r3 = a3 / scale;
+        err5_sq += r5 * r5;
+        err3_sq += r3 * r3;
+    }
+    if err5_sq == 0.0 && err3_sq == 0.0 {
+        return 0.0;
+    }
+    let denom = err5_sq + 0.01 * err3_sq;
+    h.abs() * err5_sq / (denom * n as f64).sqrt()
+}
+
+/// Compute the stage slopes `k_{n,i}` (and optionally the stage states
+/// `X_{n,i}`) of one RK step from `(t, x)` with step `h`.
+///
+/// If `k1` is provided (FSAL reuse) the first evaluation is skipped.
+/// Returns the number of fresh `f` evaluations performed.
+pub fn rk_stages(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    t: f64,
+    x: &[f64],
+    h: f64,
+    k1: Option<&[f64]>,
+    k_out: &mut Vec<Vec<f64>>,
+    x_stages_out: Option<&mut Vec<Vec<f64>>>,
+) -> usize {
+    let s = tab.s;
+    let dim = x.len();
+    k_out.clear();
+    let mut nfe = 0;
+    let mut stages: Option<&mut Vec<Vec<f64>>> = x_stages_out;
+    if let Some(st) = stages.as_deref_mut() {
+        st.clear();
+    }
+    let mut xi = vec![0.0; dim];
+    for i in 0..s {
+        // X_{n,i} = x + h Σ_{j<i} a_ij k_j
+        xi.copy_from_slice(x);
+        for j in 0..i {
+            let aij = tab.a(i, j);
+            if aij != 0.0 {
+                crate::linalg::axpy(h * aij, &k_out[j], &mut xi);
+            }
+        }
+        if let Some(st) = stages.as_deref_mut() {
+            st.push(xi.clone());
+        }
+        let mut ki = vec![0.0; dim];
+        if i == 0 {
+            if let Some(k1v) = k1 {
+                ki.copy_from_slice(k1v);
+            } else {
+                sys.eval(t + tab.c[i] * h, &xi, params, &mut ki);
+                nfe += 1;
+            }
+        } else {
+            sys.eval(t + tab.c[i] * h, &xi, params, &mut ki);
+            nfe += 1;
+        }
+        k_out.push(ki);
+    }
+    nfe
+}
+
+/// Combine stage slopes into the next state: `x_new = x + h Σ b_i k_i`.
+pub fn rk_combine(tab: &Tableau, x: &[f64], h: f64, k: &[Vec<f64>]) -> Vec<f64> {
+    let mut x_new = x.to_vec();
+    for (i, ki) in k.iter().enumerate().take(tab.s) {
+        if tab.b[i] != 0.0 {
+            crate::linalg::axpy(h * tab.b[i], ki, &mut x_new);
+        }
+    }
+    x_new
+}
+
+/// Pick an initial step size (simplified scipy `_select_initial_step`).
+pub(crate) fn select_initial_step(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t0: f64,
+    x0: &[f64],
+    f0: &[f64],
+    direction: f64,
+    order: u32,
+    atol: f64,
+    rtol: f64,
+    span: f64,
+    nfe: &mut usize,
+) -> f64 {
+    let n = x0.len() as f64;
+    let scale: Vec<f64> = x0.iter().map(|&v| atol + rtol * v.abs()).collect();
+    let d0 = (x0.iter().zip(&scale).map(|(v, s)| (v / s) * (v / s)).sum::<f64>() / n).sqrt();
+    let d1 = (f0.iter().zip(&scale).map(|(v, s)| (v / s) * (v / s)).sum::<f64>() / n).sqrt();
+    let h0 = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * d0 / d1 };
+
+    let mut x1 = x0.to_vec();
+    crate::linalg::axpy(direction * h0, f0, &mut x1);
+    let mut f1 = vec![0.0; x0.len()];
+    sys.eval(t0 + direction * h0, &x1, params, &mut f1);
+    *nfe += 1;
+    let d2 = (f1
+        .iter()
+        .zip(f0)
+        .zip(&scale)
+        .map(|((a, b), s)| ((a - b) / s) * ((a - b) / s))
+        .sum::<f64>()
+        / n)
+        .sqrt()
+        / h0;
+
+    let h1 = if d1 <= 1e-15 && d2 <= 1e-15 {
+        (h0 * 1e-3).max(1e-6)
+    } else {
+        (0.01 / d1.max(d2)).powf(1.0 / (order as f64 + 1.0))
+    };
+    (100.0 * h0).min(h1).min(span)
+}
+
+/// Integrate from `t0` to `t1` (either direction). The solution records
+/// every accepted step.
+pub fn solve_ivp(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+) -> Solution {
+    solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &MemTracker::new())
+}
+
+/// [`solve_ivp`] with solver working-buffer accounting: the live stage
+/// slopes (`s` vectors) register as `Solver` memory, the recorded
+/// trajectory as `Checkpoint` memory.
+pub fn solve_ivp_tracked(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+) -> Solution {
+    solve_core(sys, params, x0, t0, t1, cfg, mem, true)
+}
+
+/// Like [`solve_ivp_tracked`] but does **not** record the trajectory —
+/// only `ts`/`xs` of the initial and final states are returned. This is
+/// the memory profile of the continuous adjoint method's backward solve
+/// (no checkpoints beyond the integrated state itself).
+pub fn solve_ivp_final(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+) -> Solution {
+    solve_core(sys, params, x0, t0, t1, cfg, mem, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_core(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+    record: bool,
+) -> Solution {
+    assert_eq!(x0.len(), sys.dim(), "x0 has wrong dimension");
+    assert!(t1 != t0, "empty integration interval");
+    let direction = if t1 > t0 { 1.0 } else { -1.0 };
+    let span = (t1 - t0).abs();
+    let tab = &cfg.tableau;
+    let dim = x0.len();
+
+    let mut stats = SolveStats::default();
+    let mut ts = vec![t0];
+    let mut xs = vec![x0.to_vec()];
+    if record {
+        mem.alloc_f64(MemCategory::Checkpoint, dim);
+    }
+
+    // Working memory: s stage slopes + stage state + error vec, live for
+    // the whole integration.
+    let solver_guard =
+        crate::memory::MemGuard::f64s(mem, MemCategory::Solver, (tab.s + 3) * dim);
+
+    let mut t = t0;
+    let mut x = x0.to_vec();
+    let mut k: Vec<Vec<f64>> = Vec::new();
+    let mut k1_fsal: Option<Vec<f64>> = None;
+
+    match cfg.mode {
+        StepMode::Fixed { h } => {
+            assert!(h > 0.0, "fixed step must be positive");
+            let n_steps = (span / h).round().max(1.0) as usize;
+            let h_signed = direction * span / n_steps as f64;
+            for _ in 0..n_steps {
+                let nfe = rk_stages(
+                    sys,
+                    params,
+                    tab,
+                    t,
+                    &x,
+                    h_signed,
+                    k1_fsal.as_deref(),
+                    &mut k,
+                    None,
+                );
+                stats.nfe += nfe;
+                let x_new = rk_combine(tab, &x, h_signed, &k);
+                if tab.fsal && !tab.error_uses_new_f() {
+                    k1_fsal = Some(k[tab.s - 1].clone());
+                } else {
+                    k1_fsal = None; // dop853's k13 is only computed in adaptive mode
+                }
+                t += h_signed;
+                x = x_new;
+                if record {
+                    ts.push(t);
+                    xs.push(x.clone());
+                    mem.alloc_f64(MemCategory::Checkpoint, dim);
+                }
+                stats.n_steps += 1;
+            }
+        }
+        StepMode::Adaptive { atol, rtol, h0, max_steps } => {
+            let mut f0 = vec![0.0; dim];
+            sys.eval(t0, &x, params, &mut f0);
+            stats.nfe += 1;
+            let mut h = match h0 {
+                Some(h) => h,
+                None => select_initial_step(
+                    sys, params, t0, &x, &f0, direction, tab.order, atol, rtol, span,
+                    &mut stats.nfe,
+                ),
+            };
+            k1_fsal = Some(f0);
+            const SAFETY: f64 = 0.9;
+            const MIN_FACTOR: f64 = 0.2;
+            const MAX_FACTOR: f64 = 10.0;
+
+            while (t - t1) * direction < 0.0 {
+                if stats.n_steps + stats.n_rejected >= max_steps {
+                    panic!(
+                        "solve_ivp: exceeded {} steps (t = {t}, target {t1}, h = {h})",
+                        max_steps
+                    );
+                }
+                let h_min = 1e-14 * t.abs().max(1.0);
+                h = h.max(h_min);
+                // don't overshoot
+                if (t + direction * h - t1) * direction > 0.0 {
+                    h = (t1 - t).abs();
+                }
+                let h_signed = direction * h;
+
+                let nfe = rk_stages(
+                    sys,
+                    params,
+                    tab,
+                    t,
+                    &x,
+                    h_signed,
+                    k1_fsal.as_deref(),
+                    &mut k,
+                    None,
+                );
+                stats.nfe += nfe;
+                let x_new = rk_combine(tab, &x, h_signed, &k);
+
+                let (err_norm, f_new) = match &tab.err {
+                    ErrorSpec::Embedded { weights } => {
+                        let mut err = vec![0.0; dim];
+                        for (i, ki) in k.iter().enumerate() {
+                            if weights[i] != 0.0 {
+                                crate::linalg::axpy(h_signed * weights[i], ki, &mut err);
+                            }
+                        }
+                        (error_norm(&err, &x, &x_new, atol, rtol), None)
+                    }
+                    ErrorSpec::Dop853 { e3, e5 } => {
+                        // needs f(t+h, x_new) as the extra slope
+                        let mut fn_new = vec![0.0; dim];
+                        sys.eval(t + h_signed, &x_new, params, &mut fn_new);
+                        stats.nfe += 1;
+                        let mut k_ext: Vec<Vec<f64>> = k.clone();
+                        k_ext.push(fn_new.clone());
+                        (
+                            error_norm_dop853(e3, e5, &k_ext, h_signed, &x, &x_new, atol, rtol),
+                            Some(fn_new),
+                        )
+                    }
+                    ErrorSpec::None => unreachable!("adaptive mode requires an error estimate"),
+                };
+
+                if err_norm <= 1.0 {
+                    // accept
+                    t += h_signed;
+                    x = x_new;
+                    if record {
+                        ts.push(t);
+                        xs.push(x.clone());
+                        mem.alloc_f64(MemCategory::Checkpoint, dim);
+                    }
+                    stats.n_steps += 1;
+                    k1_fsal = if let Some(fnew) = f_new {
+                        Some(fnew)
+                    } else if tab.fsal {
+                        Some(k[tab.s - 1].clone())
+                    } else {
+                        None
+                    };
+                    let factor = if err_norm == 0.0 {
+                        MAX_FACTOR
+                    } else {
+                        (SAFETY * err_norm.powf(-1.0 / tab.order as f64)).min(MAX_FACTOR)
+                    };
+                    h *= factor.max(MIN_FACTOR);
+                } else {
+                    stats.n_rejected += 1;
+                    // k[0] = f(t, x) is still valid for the retried step
+                    k1_fsal = Some(k[0].clone());
+                    let factor =
+                        (SAFETY * err_norm.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
+                    h *= factor;
+                    if h < 1e-13 * span {
+                        panic!("solve_ivp: step size underflow at t = {t} (err = {err_norm})");
+                    }
+                }
+            }
+        }
+    }
+    drop(solver_guard);
+    if !record {
+        ts.push(t);
+        xs.push(x);
+    }
+    Solution { ts, xs, stats }
+}
+
+#[cfg(test)]
+mod tests;

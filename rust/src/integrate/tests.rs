@@ -1,0 +1,192 @@
+//! Integrator correctness: convergence orders against analytic solutions,
+//! adaptive-tolerance behaviour, step recording, NFE accounting.
+
+use super::*;
+use crate::ode::analytic::{DiagonalLinear, Harmonic, TimeDependent};
+use crate::tableau::Tableau;
+
+fn harmonic_error_fixed(tab: Tableau, n: usize) -> f64 {
+    let sys = Harmonic;
+    let p = vec![1.0];
+    let cfg = SolverConfig::fixed(tab, 1.0 / n as f64);
+    let sol = solve_ivp(&sys, &p, &[1.0, 0.0], 0.0, 1.0, &cfg);
+    let exact = Harmonic::exact_solution(&[1.0, 0.0], 1.0, 1.0);
+    crate::util::stats::max_abs_diff(sol.final_state(), &exact)
+}
+
+/// Empirical convergence order on the harmonic oscillator must match each
+/// tableau's classical order.
+#[test]
+fn convergence_orders() {
+    for (tab, expected) in [
+        (Tableau::euler(), 1.0),
+        (Tableau::midpoint(), 2.0),
+        (Tableau::heun_euler(), 2.0),
+        (Tableau::bosh3(), 3.0),
+        (Tableau::rk4(), 4.0),
+        (Tableau::dopri5(), 5.0),
+        (Tableau::fehlberg45(), 5.0),
+    ] {
+        let name = tab.name;
+        let (n1, n2) = (32, 64);
+        let e1 = harmonic_error_fixed(tab.clone(), n1);
+        let e2 = harmonic_error_fixed(tab, n2);
+        let order = (e1 / e2).log2();
+        assert!(
+            (order - expected).abs() < 0.45,
+            "{name}: observed order {order}, expected {expected} (e1={e1:.3e} e2={e2:.3e})"
+        );
+    }
+}
+
+/// dopri8 converges so fast on smooth problems that rounding dominates at
+/// moderate n; check at coarse resolution.
+#[test]
+fn dopri8_high_order() {
+    let e1 = harmonic_error_fixed(Tableau::dopri8(), 4);
+    let e2 = harmonic_error_fixed(Tableau::dopri8(), 8);
+    let order = (e1 / e2).log2();
+    assert!(order > 7.0, "observed order {order} (e1={e1:.3e}, e2={e2:.3e})");
+}
+
+#[test]
+fn adaptive_meets_tolerance() {
+    let sys = DiagonalLinear { dim: 3 };
+    let a = vec![0.7, -1.1, 0.3];
+    let x0 = vec![1.0, 2.0, -1.5];
+    for atol in [1e-6, 1e-9] {
+        let cfg = SolverConfig::adaptive(Tableau::dopri5(), atol, atol * 100.0);
+        let sol = solve_ivp(&sys, &a, &x0, 0.0, 2.0, &cfg);
+        let exact = sys.exact_solution(&x0, &a, 2.0);
+        let err = crate::util::stats::max_abs_diff(sol.final_state(), &exact);
+        // global error is tolerance-proportional, not bounded by it; allow slack
+        assert!(err < 1e3 * atol, "atol={atol}: err={err}");
+    }
+}
+
+#[test]
+fn tighter_tolerance_means_more_steps() {
+    let sys = Harmonic;
+    let p = vec![3.0];
+    let loose = solve_ivp(
+        &sys,
+        &p,
+        &[1.0, 0.0],
+        0.0,
+        5.0,
+        &SolverConfig::adaptive(Tableau::dopri5(), 1e-4, 1e-2),
+    );
+    let tight = solve_ivp(
+        &sys,
+        &p,
+        &[1.0, 0.0],
+        0.0,
+        5.0,
+        &SolverConfig::adaptive(Tableau::dopri5(), 1e-10, 1e-8),
+    );
+    assert!(tight.stats.n_steps > loose.stats.n_steps);
+}
+
+#[test]
+fn backward_integration_works() {
+    // integrate forward then back: should recover x0
+    let sys = Harmonic;
+    let p = vec![2.0];
+    let x0 = vec![0.3, -0.8];
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-10, 1e-8);
+    let fwd = solve_ivp(&sys, &p, &x0, 0.0, 1.5, &cfg);
+    let bwd = solve_ivp(&sys, &p, fwd.final_state(), 1.5, 0.0, &cfg);
+    let err = crate::util::stats::max_abs_diff(bwd.final_state(), &x0);
+    assert!(err < 1e-7, "err={err}");
+}
+
+#[test]
+fn fixed_step_counts() {
+    let sys = Harmonic;
+    let p = vec![1.0];
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.1);
+    let sol = solve_ivp(&sys, &p, &[1.0, 0.0], 0.0, 1.0, &cfg);
+    assert_eq!(sol.stats.n_steps, 10);
+    assert_eq!(sol.ts.len(), 11);
+    assert_eq!(sol.xs.len(), 11);
+    assert_eq!(sol.stats.nfe, 40); // 4 evals × 10 steps, no FSAL for rk4
+    assert!((sol.ts[3] - 0.3).abs() < 1e-12);
+}
+
+#[test]
+fn fsal_saves_evaluations() {
+    let sys = Harmonic;
+    let p = vec![1.0];
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.1);
+    let sol = solve_ivp(&sys, &p, &[1.0, 0.0], 0.0, 1.0, &cfg);
+    // first step: 7 evals; subsequent 9 steps: 6 each (k1 reused)
+    assert_eq!(sol.stats.nfe, 7 + 9 * 6);
+}
+
+#[test]
+fn time_dependent_rhs_uses_stage_abscissae() {
+    // If c_i handling were wrong this system would show first-order error.
+    let sys = TimeDependent;
+    let p = vec![2.0];
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.01);
+    let sol = solve_ivp(&sys, &p, &[1.0], 0.0, 1.0, &cfg);
+    let exact = TimeDependent::exact_solution(1.0, 2.0, 1.0);
+    assert!((sol.final_state()[0] - exact).abs() < 1e-8);
+}
+
+#[test]
+fn dop853_adaptive_accuracy() {
+    let sys = Harmonic;
+    let p = vec![1.0];
+    let cfg = SolverConfig::adaptive(Tableau::dopri8(), 1e-10, 1e-10);
+    let sol = solve_ivp(&sys, &p, &[1.0, 0.0], 0.0, 10.0, &cfg);
+    let exact = Harmonic::exact_solution(&[1.0, 0.0], 1.0, 10.0);
+    let err = crate::util::stats::max_abs_diff(sol.final_state(), &exact);
+    assert!(err < 1e-7, "err={err}");
+    // dop853 should need far fewer steps than dopri5 at equal tolerance
+    let cfg5 = SolverConfig::adaptive(Tableau::dopri5(), 1e-10, 1e-10);
+    let sol5 = solve_ivp(&sys, &p, &[1.0, 0.0], 0.0, 10.0, &cfg5);
+    assert!(sol.stats.n_steps < sol5.stats.n_steps);
+}
+
+#[test]
+fn rk_stages_reproduces_solver_step() {
+    // one fixed step via solve_ivp == manual rk_stages + rk_combine
+    let sys = Harmonic;
+    let p = vec![1.3];
+    let tab = Tableau::dopri5();
+    let x0 = vec![0.4, 0.9];
+    let h = 0.2;
+    let sol = solve_ivp(&sys, &p, &x0, 0.0, h, &SolverConfig::fixed(tab.clone(), h));
+
+    let mut k = Vec::new();
+    let mut stages = Vec::new();
+    rk_stages(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages));
+    let x1 = rk_combine(&tab, &x0, h, &k);
+    assert_eq!(stages.len(), tab.s);
+    assert_eq!(stages[0], x0); // first stage state is x_n (c₁ = 0)
+    let err = crate::util::stats::max_abs_diff(&x1, sol.final_state());
+    assert!(err < 1e-15);
+}
+
+#[test]
+fn memory_tracking_of_checkpoints() {
+    let sys = Harmonic;
+    let p = vec![1.0];
+    let mem = crate::memory::MemTracker::new();
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.1);
+    let _ = solve_ivp_tracked(&sys, &p, &[1.0, 0.0], 0.0, 1.0, &cfg, &mem);
+    // 11 states × 2 dims × 8 bytes of checkpoints
+    assert_eq!(mem.live(crate::memory::MemCategory::Checkpoint), 11 * 2 * 8);
+    // solver working memory freed after the solve
+    assert_eq!(mem.live(crate::memory::MemCategory::Solver), 0);
+    assert!(mem.peak(crate::memory::MemCategory::Solver) > 0);
+}
+
+#[test]
+#[should_panic]
+fn zero_interval_panics() {
+    let sys = Harmonic;
+    let cfg = SolverConfig::fixed(Tableau::rk4(), 0.1);
+    solve_ivp(&sys, &[1.0], &[1.0, 0.0], 1.0, 1.0, &cfg);
+}

@@ -1,0 +1,53 @@
+//! # sympode — Symplectic Adjoint Method for Neural ODEs
+//!
+//! A reproduction of Matsubara, Miyatake & Yaguchi, *Symplectic Adjoint
+//! Method for Exact Gradient of Neural ODE with Minimal Memory* (NeurIPS
+//! 2021), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: Runge–Kutta integrators,
+//!   the six gradient-computation strategies of the paper's Table 1
+//!   (naive backprop, baseline checkpointing, ACA, continuous adjoint,
+//!   MALI, and the proposed *symplectic adjoint method*), byte-accurate
+//!   memory accounting, training loop, and the experiment harness that
+//!   regenerates every table and figure of the paper's evaluation.
+//! - **Layer 2 (`python/compile/model.py`)** — JAX definitions of the
+//!   neural vector fields and their VJPs, AOT-lowered to HLO text.
+//! - **Layer 1 (`python/compile/kernels/`)** — the Pallas fused-MLP kernel
+//!   the L2 model calls on its hot path.
+//!
+//! Python never runs at training time: the [`runtime`] module loads the
+//! AOT artifacts through PJRT and exposes them behind the same
+//! [`ode::OdeSystem`] trait the native (pure-Rust autodiff) backend uses,
+//! so every gradient method runs unchanged on either backend.
+
+pub mod adjoint;
+pub mod autodiff;
+pub mod benchkit;
+pub mod cnf;
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod integrate;
+pub mod linalg;
+pub mod memory;
+pub mod nn;
+pub mod ode;
+pub mod physics;
+pub mod runtime;
+pub mod tableau;
+pub mod testkit;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::adjoint::{
+        AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint, GradResult,
+        GradientMethod, MaliMethod, SymplecticAdjoint,
+    };
+    pub use crate::integrate::{solve_ivp, Solution, SolveStats, SolverConfig, StepMode};
+    pub use crate::memory::MemTracker;
+    pub use crate::nn::{Adam, Mlp, Optimizer, Sgd};
+    pub use crate::ode::{losses::SumLoss, Loss, NativeMlpSystem, OdeSystem};
+    pub use crate::tableau::Tableau;
+}

@@ -1,0 +1,274 @@
+//! Dense f64 linear algebra kernels.
+//!
+//! Everything the neural-network and integrator hot paths need: `axpy`,
+//! `dot`, and the three GEMM variants that backpropagation requires
+//! (`C = A·B`, `C = Aᵀ·B`, `C = A·Bᵀ`). Layout is always row-major and
+//! contiguous. The GEMM kernels use a blocked ikj loop order so the inner
+//! loop is a unit-stride fused multiply-add over the output row — this is
+//! the crate's single hottest code path (profiled in EXPERIMENTS.md §Perf).
+
+/// Tile edge for the blocked GEMM kernels. 64×64 f64 tiles (32 KiB per
+/// operand tile) fit L1/L2 comfortably on any x86-64.
+const BLOCK: usize = 64;
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = x`
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`
+#[inline]
+pub fn scal(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Dot product. Four independent accumulators break the loop-carried
+/// dependence so the compiler can vectorize the reduction (≈2× on the
+/// `gemm_nt` backprop kernel; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc4 = [0.0f64; 4];
+    let (xc, xr) = x.split_at(x.len() - x.len() % 4);
+    let (yc, yr) = y.split_at(y.len() - y.len() % 4);
+    for (xs, ys) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
+        for k in 0..4 {
+            acc4[k] += xs[k] * ys[k];
+        }
+    }
+    let mut acc = (acc4[0] + acc4[1]) + (acc4[2] + acc4[3]);
+    for (a, b) in xr.iter().zip(yr) {
+        acc += a * b;
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]` (row-major). `C` is overwritten.
+pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    gemm_nn_acc(m, k, n, a, b, c);
+}
+
+/// `C[m,n] += A[m,k] · B[k,n]`.
+pub fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for p0 in (0..k).step_by(BLOCK) {
+            let p1 = (p0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for p in p0..p1 {
+                    let aip = a[i * k + p];
+                    if aip != 0.0 {
+                        let brow = &b[p * n..(p + 1) * n];
+                        for (cj, bj) in crow.iter_mut().zip(brow) {
+                            *cj += aip * bj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C[k,n] = Aᵀ·B` where `A` is `[m,k]`, `B` is `[m,n]` — the weight-
+/// gradient GEMM of backprop (`dW = hᵀ·g`).
+pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            if ap != 0.0 {
+                let crow = &mut c[p * n..(p + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += ap * bj;
+                }
+            }
+        }
+    }
+}
+
+/// `C[m,k] = A·Bᵀ` where `A` is `[m,n]`, `B` is `[k,n]` — the input-
+/// gradient GEMM of backprop (`dh = g·Wᵀ`).
+pub fn gemm_nt(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for p in 0..k {
+            crow[p] = dot(arow, &b[p * n..(p + 1) * n]);
+        }
+    }
+}
+
+/// `y[m] = A[m,n] · x[n]`.
+pub fn gemv(m: usize, n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        y[i] = dot(&a[i * n..(i + 1) * n], x);
+    }
+}
+
+/// `y[n] = Aᵀ x` where `A` is `[m,n]`.
+pub fn gemv_t(m: usize, n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    debug_assert_eq!(y.len(), n);
+    y.fill(0.0);
+    for i in 0..m {
+        axpy(x[i], &a[i * n..(i + 1) * n], y);
+    }
+}
+
+/// Reference (unblocked, naive) GEMM used only by tests to validate the
+/// optimized kernels.
+pub fn gemm_nn_naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive_over_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 4), (7, 5, 9), (64, 64, 64), (65, 130, 3), (100, 1, 100)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, k * n);
+            let mut c = vec![0.0; m * n];
+            let mut c_ref = vec![0.0; m * n];
+            gemm_nn(m, k, n, &a, &b, &mut c);
+            gemm_nn_naive(m, k, n, &a, &b, &mut c_ref);
+            let err = crate::util::stats::max_abs_diff(&c, &c_ref);
+            assert!(err < 1e-12, "({m},{k},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_is_transpose_of_a() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (6, 4, 5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, m * n);
+        // explicit transpose then gemm_nn
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c_ref = vec![0.0; k * n];
+        gemm_nn_naive(k, m, n, &at, &b, &mut c_ref);
+        let mut c = vec![0.0; k * n];
+        gemm_tn(m, k, n, &a, &b, &mut c);
+        assert!(crate::util::stats::max_abs_diff(&c, &c_ref) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_nt_is_transpose_of_b() {
+        let mut rng = Rng::new(3);
+        let (m, n, k) = (6, 4, 5);
+        let a = randv(&mut rng, m * n);
+        let b = randv(&mut rng, k * n);
+        let mut bt = vec![0.0; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                bt[j * k + i] = b[i * n + j];
+            }
+        }
+        let mut c_ref = vec![0.0; m * k];
+        gemm_nn_naive(m, n, k, &a, &bt, &mut c_ref);
+        let mut c = vec![0.0; m * k];
+        gemm_nt(m, n, k, &a, &b, &mut c);
+        assert!(crate::util::stats::max_abs_diff(&c, &c_ref) < 1e-12);
+    }
+
+    #[test]
+    fn gemv_variants() {
+        let mut rng = Rng::new(4);
+        let (m, n) = (5, 7);
+        let a = randv(&mut rng, m * n);
+        let x = randv(&mut rng, n);
+        let mut y = vec![0.0; m];
+        gemv(m, n, &a, &x, &mut y);
+        let mut y_ref = vec![0.0; m];
+        gemm_nn_naive(m, n, 1, &a, &x, &mut y_ref);
+        assert!(crate::util::stats::max_abs_diff(&y, &y_ref) < 1e-12);
+
+        let xt = randv(&mut rng, m);
+        let mut yt = vec![0.0; n];
+        gemv_t(m, n, &a, &xt, &mut yt);
+        // reference: explicit transpose
+        for j in 0..n {
+            let mut acc = 0.0;
+            for i in 0..m {
+                acc += a[i * n + j] * xt[i];
+            }
+            assert!((yt[j] - acc).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn axpy_dot_scal() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(2.0, &[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        let mut x = vec![2.0, -4.0];
+        scal(0.5, &mut x);
+        assert_eq!(x, vec![1.0, -2.0]);
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let mut c = vec![10.0; 4];
+        gemm_nn_acc(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+}

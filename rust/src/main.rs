@@ -1,0 +1,173 @@
+//! `sympode` — the Layer-3 coordinator CLI.
+//!
+//! ```text
+//! sympode exp <table1|table2|table3|table4|fig1|fig2|rounding|ablation|all> [k=v …]
+//! sympode gradcheck [k=v …]      cross-method gradient agreement check
+//! sympode train [k=v …]          train a CNF on a synthetic tabular set
+//! sympode datagen [k=v …]        generate + describe a PDE trajectory
+//! sympode list                   list methods, tableaux, datasets
+//! ```
+
+use sympode::adjoint::{method_by_name, GradientMethod, SymplecticAdjoint};
+use sympode::cnf::TabularSpec;
+use sympode::config::Options;
+use sympode::coordinator::{self, ExpOpts};
+use sympode::integrate::SolverConfig;
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::tableau::Tableau;
+use sympode::train::CnfTrainer;
+use sympode::util::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: sympode <command> [options as key=value]\n\
+         commands:\n\
+         \u{20} exp <table1|table2|table3|table4|fig1|fig2|rounding|ablation|all>  reproduce a paper table/figure\n\
+         \u{20}     options: quick=true seeds=3 iters=20 out=results dataset=all\n\
+         \u{20} gradcheck   [method=symplectic tableau=dopri5 atol=1e-6]  gradient agreement vs backprop\n\
+         \u{20} train       [dataset=gas iters=50 method=symplectic batch=32 hidden=32]\n\
+         \u{20} datagen     [system=kdv grid=64 snapshots=10]\n\
+         \u{20} list"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "exp" => {
+            let Some(which) = args.get(1) else { usage() };
+            let opts_args = &args[2..];
+            let o = Options::parse(opts_args).map_err(|e| anyhow::anyhow!(e))?;
+            let exp = ExpOpts {
+                quick: o.bool("quick", true).map_err(|e| anyhow::anyhow!(e))?,
+                seeds: o.usize("seeds", 3).map_err(|e| anyhow::anyhow!(e))?,
+                iters: o.usize("iters", 20).map_err(|e| anyhow::anyhow!(e))?,
+                out_dir: o.str("out", "results"),
+            };
+            let dataset = o.str("dataset", "all");
+            o.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            match which.as_str() {
+                "table1" => coordinator::table1(&exp)?,
+                "table2" => coordinator::table2(&exp, &dataset)?,
+                "table3" => coordinator::table3(&exp)?,
+                "table4" => coordinator::table4(&exp)?,
+                "fig1" => coordinator::fig1(&exp)?,
+                "fig2" => coordinator::fig2(&exp)?,
+                "rounding" => coordinator::rounding(&exp)?,
+                "ablation" => coordinator::ablation(&exp)?,
+                "all" => {
+                    coordinator::table1(&exp)?;
+                    coordinator::table2(&exp, &dataset)?;
+                    coordinator::table3(&exp)?;
+                    coordinator::table4(&exp)?;
+                    coordinator::fig1(&exp)?;
+                    coordinator::fig2(&exp)?;
+                    coordinator::rounding(&exp)?;
+                    coordinator::ablation(&exp)?;
+                }
+                _ => usage(),
+            }
+        }
+        "gradcheck" => {
+            let o = Options::parse(&args[1..]).map_err(|e| anyhow::anyhow!(e))?;
+            let mname = o.str("method", "symplectic");
+            let tname = o.str("tableau", "dopri5");
+            let atol = o.f64("atol", 1e-6).map_err(|e| anyhow::anyhow!(e))?;
+            o.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let method = method_by_name(&mname)
+                .ok_or_else(|| anyhow::anyhow!("unknown method {mname}"))?;
+            let tab = Tableau::by_name(&tname)
+                .ok_or_else(|| anyhow::anyhow!("unknown tableau {tname}"))?;
+            let sys = NativeMlpSystem::with_batch(&[4, 32, 4], 4, 0);
+            let p = sys.init_params();
+            let mut rng = Rng::new(1);
+            let x0 = rng.normal_vec(sys.dim());
+            let cfg = if tab.adaptive() {
+                SolverConfig::adaptive(tab, atol, atol * 100.0)
+            } else {
+                SolverConfig::fixed(tab, 0.05)
+            };
+            let reference = sympode::adjoint::BackpropMethod
+                .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
+            let g = method.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
+            let err = sympode::util::stats::rel_l2(&g.grad_params, &reference.grad_params);
+            println!(
+                "method={} tableau={tname} atol={atol:.0e}: rel-L2 gradient error vs backprop = {err:.3e}",
+                method.name()
+            );
+            println!(
+                "peak mem: {} bytes (backprop: {})",
+                g.stats.peak_mem_bytes, reference.stats.peak_mem_bytes
+            );
+        }
+        "train" => {
+            let o = Options::parse(&args[1..]).map_err(|e| anyhow::anyhow!(e))?;
+            let dataset = o.str("dataset", "gas");
+            let iters = o.usize("iters", 50).map_err(|e| anyhow::anyhow!(e))?;
+            let batch = o.usize("batch", 32).map_err(|e| anyhow::anyhow!(e))?;
+            let hidden = o.usize("hidden", 32).map_err(|e| anyhow::anyhow!(e))?;
+            let mname = o.str("method", "symplectic");
+            o.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let spec = TabularSpec::by_name(&dataset)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+            let method = method_by_name(&mname)
+                .ok_or_else(|| anyhow::anyhow!("unknown method {mname}"))?;
+            let data = spec.generate(2048, 11);
+            let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+            let mut tr = CnfTrainer::new(1, &[spec.d, hidden, hidden, spec.d], batch, cfg, 1);
+            let mut rng = Rng::new(2);
+            println!("training CNF on synthetic {dataset} (d={}) with {}", spec.d, method.name());
+            for it in 0..iters {
+                let xb = data.minibatch(batch, &mut rng);
+                let st = tr.train_step(&xb, method.as_ref(), &mut rng)?;
+                if it % 10 == 0 || it + 1 == iters {
+                    println!(
+                        "iter {it:>4}: loss {:.4}  mem {:.2} MiB  {:.3} s/itr",
+                        st.loss,
+                        coordinator::mib(st.peak_mem_bytes),
+                        st.wall_seconds
+                    );
+                }
+            }
+            println!("final eval NLL: {:.4}", tr.eval_nll(&data, 8));
+        }
+        "datagen" => {
+            let o = Options::parse(&args[1..]).map_err(|e| anyhow::anyhow!(e))?;
+            let system = o.str("system", "kdv");
+            let grid = o.usize("grid", 64).map_err(|e| anyhow::anyhow!(e))?;
+            let snaps = o.usize("snapshots", 10).map_err(|e| anyhow::anyhow!(e))?;
+            o.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let traj = match system.as_str() {
+                "kdv" => sympode::physics::generate_kdv(grid, snaps, 0.02, 0.3, 1),
+                "cahn_hilliard" | "ch" => {
+                    sympode::physics::generate_cahn_hilliard(grid, snaps, 0.01, 0.02, 1)
+                }
+                _ => anyhow::bail!("unknown system {system}"),
+            };
+            for i in 0..traj.n_snap {
+                let s = traj.snapshot(i);
+                let min = s.iter().cloned().fold(f64::INFINITY, f64::min);
+                let max = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let mass: f64 = s.iter().sum();
+                println!("snap {i:>3}: min {min:+.4} max {max:+.4} mass {mass:+.4e}");
+            }
+        }
+        "list" => {
+            println!("gradient methods: adjoint backprop baseline aca mali symplectic");
+            println!(
+                "tableaux: {}",
+                Tableau::all().iter().map(|t| t.name).collect::<Vec<_>>().join(" ")
+            );
+            println!(
+                "datasets: {}",
+                TabularSpec::all().iter().map(|s| s.name).collect::<Vec<_>>().join(" ")
+            );
+            let _ = SymplecticAdjoint; // the default everywhere
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,278 @@
+//! Byte-level memory accounting for gradient computation.
+//!
+//! The paper's central quantitative claim (Table 1) is about *peak memory*:
+//! naive backprop retains `O(M·N·s·L)` bytes of computation graph, the
+//! checkpointing schemes `O(MN + sL)`, the adjoint method `O(M + L)`, and
+//! the proposed symplectic adjoint method `O(MN + s + L)`. On a GPU the
+//! authors read this off `torch.cuda.max_memory_allocated`; here every
+//! checkpoint, autodiff tape, and solver state buffer registers its exact
+//! byte count with a [`MemTracker`], and the experiment harness reports the
+//! peak of live bytes — the same quantity, measured exactly.
+//!
+//! The tracker is cheap (a handful of atomic adds per allocation event,
+//! and allocation events happen at step granularity, not per-element), so
+//! it stays enabled even in benchmarks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What kind of memory an allocation is — mirrors the columns of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemCategory {
+    /// Retained solver states: the `{x_n}` and `{X_{n,i}}` checkpoints.
+    Checkpoint,
+    /// Backpropagation state: autodiff tapes / retained activations
+    /// (the `L`, `sL`, `NsL`, `MNsL` terms).
+    Tape,
+    /// Transient solver working memory (stage slopes `k_{n,i}`, error
+    /// estimates, adjoint stage vectors).
+    Solver,
+    /// Anything else (optimizer state, loss buffers, …).
+    Other,
+}
+
+const N_CATS: usize = 4;
+
+impl MemCategory {
+    fn idx(self) -> usize {
+        match self {
+            MemCategory::Checkpoint => 0,
+            MemCategory::Tape => 1,
+            MemCategory::Solver => 2,
+            MemCategory::Other => 3,
+        }
+    }
+
+    pub const ALL: [MemCategory; N_CATS] = [
+        MemCategory::Checkpoint,
+        MemCategory::Tape,
+        MemCategory::Solver,
+        MemCategory::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemCategory::Checkpoint => "checkpoint",
+            MemCategory::Tape => "tape",
+            MemCategory::Solver => "solver",
+            MemCategory::Other => "other",
+        }
+    }
+}
+
+/// Tracks live and peak bytes, in total and per category.
+///
+/// Thread-safe (atomics) so it can be shared across worker threads;
+/// in practice gradient computations are single-threaded and the peak
+/// update loop never spins.
+#[derive(Debug, Default)]
+pub struct MemTracker {
+    live: [AtomicU64; N_CATS],
+    peak_total: AtomicU64,
+    peak_cat: [AtomicU64; N_CATS],
+    /// Number of alloc events (for diagnostics / tests).
+    n_allocs: AtomicU64,
+    n_frees: AtomicU64,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `bytes` of newly retained memory in `cat`.
+    pub fn alloc(&self, cat: MemCategory, bytes: u64) {
+        let i = cat.idx();
+        let cat_live = self.live[i].fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.n_allocs.fetch_add(1, Ordering::Relaxed);
+        bump_max(&self.peak_cat[i], cat_live);
+        let total: u64 = self.live_total();
+        bump_max(&self.peak_total, total);
+    }
+
+    /// Register that `bytes` in `cat` were released.
+    pub fn free(&self, cat: MemCategory, bytes: u64) {
+        let i = cat.idx();
+        let prev = self.live[i].fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "free underflow in {:?}: {} < {}", cat, prev, bytes);
+        self.n_frees.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Convenience: account for a freshly retained `f64` buffer.
+    pub fn alloc_f64(&self, cat: MemCategory, len: usize) {
+        self.alloc(cat, (len * 8) as u64);
+    }
+
+    pub fn free_f64(&self, cat: MemCategory, len: usize) {
+        self.free(cat, (len * 8) as u64);
+    }
+
+    /// Currently live bytes across all categories.
+    pub fn live_total(&self) -> u64 {
+        self.live.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn live(&self, cat: MemCategory) -> u64 {
+        self.live[cat.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Peak of total live bytes since construction / last reset.
+    pub fn peak_total(&self) -> u64 {
+        self.peak_total.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self, cat: MemCategory) -> u64 {
+        self.peak_cat[cat.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn n_allocs(&self) -> u64 {
+        self.n_allocs.load(Ordering::Relaxed)
+    }
+
+    pub fn n_frees(&self) -> u64 {
+        self.n_frees.load(Ordering::Relaxed)
+    }
+
+    /// Reset peaks (and assert nothing is still live in debug builds).
+    pub fn reset(&self) {
+        for a in &self.live {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.peak_cat {
+            a.store(0, Ordering::Relaxed);
+        }
+        self.peak_total.store(0, Ordering::Relaxed);
+        self.n_allocs.store(0, Ordering::Relaxed);
+        self.n_frees.store(0, Ordering::Relaxed);
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        let mut s = format!("peak_total={}B", self.peak_total());
+        for c in MemCategory::ALL {
+            s.push_str(&format!(" peak_{}={}B", c.name(), self.peak(c)));
+        }
+        s
+    }
+}
+
+fn bump_max(slot: &AtomicU64, candidate: u64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    while candidate > cur {
+        match slot.compare_exchange_weak(cur, candidate, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// RAII guard: accounts `bytes` in `cat` for its lifetime.
+pub struct MemGuard<'a> {
+    tracker: &'a MemTracker,
+    cat: MemCategory,
+    bytes: u64,
+}
+
+impl<'a> MemGuard<'a> {
+    pub fn new(tracker: &'a MemTracker, cat: MemCategory, bytes: u64) -> Self {
+        tracker.alloc(cat, bytes);
+        MemGuard { tracker, cat, bytes }
+    }
+
+    /// Account for a buffer of `len` f64s.
+    pub fn f64s(tracker: &'a MemTracker, cat: MemCategory, len: usize) -> Self {
+        Self::new(tracker, cat, (len * 8) as u64)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for MemGuard<'_> {
+    fn drop(&mut self) {
+        self.tracker.free(self.cat, self.bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_maximum_not_current() {
+        let m = MemTracker::new();
+        m.alloc(MemCategory::Tape, 100);
+        m.alloc(MemCategory::Tape, 50);
+        m.free(MemCategory::Tape, 120);
+        m.alloc(MemCategory::Checkpoint, 10);
+        assert_eq!(m.live_total(), 40);
+        assert_eq!(m.peak_total(), 150);
+        assert_eq!(m.peak(MemCategory::Tape), 150);
+        assert_eq!(m.peak(MemCategory::Checkpoint), 10);
+    }
+
+    #[test]
+    fn guard_frees_on_drop() {
+        let m = MemTracker::new();
+        {
+            let _g = MemGuard::f64s(&m, MemCategory::Solver, 8);
+            assert_eq!(m.live(MemCategory::Solver), 64);
+        }
+        assert_eq!(m.live(MemCategory::Solver), 0);
+        assert_eq!(m.peak(MemCategory::Solver), 64);
+        assert_eq!(m.n_allocs(), 1);
+        assert_eq!(m.n_frees(), 1);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let m = MemTracker::new();
+        m.alloc(MemCategory::Other, 5);
+        m.free(MemCategory::Other, 5);
+        m.reset();
+        assert_eq!(m.peak_total(), 0);
+        assert_eq!(m.live_total(), 0);
+        assert_eq!(m.n_allocs(), 0);
+    }
+
+    #[test]
+    fn categories_are_independent() {
+        let m = MemTracker::new();
+        m.alloc(MemCategory::Checkpoint, 7);
+        m.alloc(MemCategory::Tape, 11);
+        assert_eq!(m.live(MemCategory::Checkpoint), 7);
+        assert_eq!(m.live(MemCategory::Tape), 11);
+        assert_eq!(m.live(MemCategory::Solver), 0);
+        assert_eq!(m.live_total(), 18);
+    }
+
+    /// Property-style sweep: after any balanced sequence of alloc/free,
+    /// live returns to zero and peak ≥ every intermediate live value.
+    #[test]
+    fn balanced_sequences_invariants() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(1);
+        for case in 0..50 {
+            let m = MemTracker::new();
+            let mut stack: Vec<(MemCategory, u64)> = Vec::new();
+            let mut max_live_seen = 0u64;
+            for _ in 0..200 {
+                if stack.is_empty() || rng.uniform() < 0.6 {
+                    let cat = MemCategory::ALL[rng.below(4)];
+                    let b = rng.below(1000) as u64 + 1;
+                    m.alloc(cat, b);
+                    stack.push((cat, b));
+                } else {
+                    let (cat, b) = stack.swap_remove(rng.below(stack.len()));
+                    m.free(cat, b);
+                }
+                max_live_seen = max_live_seen.max(m.live_total());
+            }
+            for (cat, b) in stack.drain(..) {
+                m.free(cat, b);
+            }
+            assert_eq!(m.live_total(), 0, "case {case}");
+            assert_eq!(m.peak_total(), max_live_seen, "case {case}");
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! Neural-network building blocks for the native backend.
+//!
+//! [`Mlp`] is a hand-rolled tanh MLP with explicit forward/backward passes
+//! over flat parameter vectors — the native hot path of every experiment
+//! (the tape-based autodiff in [`crate::autodiff`] is used where
+//! higher-order derivatives are required; its gradients are tested to
+//! match these hand-rolled ones bit-for-bit-ish).
+//!
+//! The forward pass can retain an [`MlpTrace`] — exactly the "computation
+//! graph of a single use of the neural network" whose size is the `L` of
+//! the paper's Table 1. Gradient methods register the trace's bytes with
+//! the memory tracker for as long as they keep it alive.
+
+pub mod optimizer;
+
+pub use optimizer::{Adam, Optimizer, Sgd};
+
+use crate::linalg;
+use crate::util::Rng;
+
+/// A fully connected tanh network: `dims = [in, h1, …, out]`; tanh after
+/// every layer except the last.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+}
+
+/// Retained activations from one traced forward pass.
+///
+/// Holds the layer inputs (post-activation of the previous layer) — the
+/// minimal state backprop needs for a tanh MLP, mirroring what a PyTorch
+/// graph would keep for `linear → tanh` chains.
+#[derive(Debug, Clone)]
+pub struct MlpTrace {
+    /// `acts[0]` is the network input `[b, dims[0]]`; `acts[l]` for l ≥ 1 is
+    /// the post-tanh output of layer l (for hidden layers) — i.e. the input
+    /// of layer l+1. The final linear output is not retained (not needed).
+    pub acts: Vec<Vec<f64>>,
+    pub batch: usize,
+}
+
+impl MlpTrace {
+    /// Bytes retained — the paper's per-use graph size `L`.
+    pub fn bytes(&self) -> u64 {
+        self.acts.iter().map(|a| (a.len() * 8) as u64).sum()
+    }
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize]) -> Mlp {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        Mlp { dims: dims.to_vec() }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Total number of parameters (weights + biases, flat layout:
+    /// `[W1, b1, W2, b2, …]`, each `W` row-major `[in, out]`).
+    pub fn param_len(&self) -> usize {
+        (0..self.n_layers())
+            .map(|l| self.dims[l] * self.dims[l + 1] + self.dims[l + 1])
+            .sum()
+    }
+
+    /// Offset of layer `l`'s weight block in the flat parameter vector.
+    fn layer_offset(&self, l: usize) -> usize {
+        (0..l)
+            .map(|i| self.dims[i] * self.dims[i + 1] + self.dims[i + 1])
+            .sum()
+    }
+
+    /// Xavier/Glorot-uniform initialization.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f64> {
+        let mut p = vec![0.0; self.param_len()];
+        for l in 0..self.n_layers() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let off = self.layer_offset(l);
+            let bound = (6.0 / (din + dout) as f64).sqrt();
+            for w in &mut p[off..off + din * dout] {
+                *w = rng.range(-bound, bound);
+            }
+            // biases start at zero
+        }
+        p
+    }
+
+    /// Forward pass over a `[b, in_dim]` batch. Returns `[b, out_dim]`.
+    pub fn forward(&self, x: &[f64], b: usize, params: &[f64]) -> Vec<f64> {
+        self.forward_impl(x, b, params, false).0
+    }
+
+    /// Forward pass retaining the activation trace for [`Mlp::backward`].
+    pub fn forward_traced(&self, x: &[f64], b: usize, params: &[f64]) -> (Vec<f64>, MlpTrace) {
+        let (out, trace) = self.forward_impl(x, b, params, true);
+        (out, trace.unwrap())
+    }
+
+    fn forward_impl(
+        &self,
+        x: &[f64],
+        b: usize,
+        params: &[f64],
+        traced: bool,
+    ) -> (Vec<f64>, Option<MlpTrace>) {
+        assert_eq!(x.len(), b * self.in_dim(), "bad input shape");
+        assert_eq!(params.len(), self.param_len(), "bad param length");
+        let mut acts: Vec<Vec<f64>> = Vec::new();
+        if traced {
+            acts.push(x.to_vec());
+        }
+        let mut h = x.to_vec();
+        for l in 0..self.n_layers() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let off = self.layer_offset(l);
+            let w = &params[off..off + din * dout];
+            let bias = &params[off + din * dout..off + din * dout + dout];
+            let mut a = vec![0.0; b * dout];
+            linalg::gemm_nn(b, din, dout, &h, w, &mut a);
+            for row in 0..b {
+                for (aj, bj) in a[row * dout..(row + 1) * dout].iter_mut().zip(bias) {
+                    *aj += bj;
+                }
+            }
+            let last = l == self.n_layers() - 1;
+            if !last {
+                for v in a.iter_mut() {
+                    *v = v.tanh();
+                }
+                if traced {
+                    acts.push(a.clone());
+                }
+            }
+            h = a;
+        }
+        let trace = traced.then(|| MlpTrace { acts, batch: b });
+        (h, trace)
+    }
+
+    /// Backward pass: given upstream gradient `g` (`[b, out_dim]`) and the
+    /// retained trace, compute input gradient (`[b, in_dim]`) and the flat
+    /// parameter gradient. `g_params` is **accumulated into** (callers add
+    /// contributions across RK stages), `g_x` is overwritten.
+    pub fn backward(
+        &self,
+        trace: &MlpTrace,
+        params: &[f64],
+        g: &[f64],
+        g_x: &mut [f64],
+        g_params: &mut [f64],
+    ) {
+        let b = trace.batch;
+        assert_eq!(g.len(), b * self.out_dim());
+        assert_eq!(g_x.len(), b * self.in_dim());
+        assert_eq!(g_params.len(), self.param_len());
+
+        let mut grad = g.to_vec(); // gradient wrt layer-l output (pre-activation of next)
+        for l in (0..self.n_layers()).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let off = self.layer_offset(l);
+            let w = &params[off..off + din * dout];
+            let h_in = &trace.acts[l]; // [b, din]
+
+            // If this is a hidden layer output (not the last linear), grad
+            // currently refers to the post-tanh output of layer l — convert
+            // to pre-activation gradient using the stored post-activation.
+            // (For the last layer there is no activation.)
+            // NOTE: by construction `grad` at loop entry is already the
+            // pre-activation gradient of layer l's *output*: for the last
+            // layer this is g itself; for hidden layers we fold the tanh
+            // derivative in below before stepping to the previous layer.
+
+            // dW_l = h_inᵀ · grad ; db_l = column-sum(grad)
+            let mut dw = vec![0.0; din * dout];
+            linalg::gemm_tn(b, din, dout, h_in, &grad, &mut dw);
+            for (gw, d) in g_params[off..off + din * dout].iter_mut().zip(&dw) {
+                *gw += d;
+            }
+            let gb = &mut g_params[off + din * dout..off + din * dout + dout];
+            for row in 0..b {
+                for (j, gbj) in gb.iter_mut().enumerate() {
+                    *gbj += grad[row * dout + j];
+                }
+            }
+
+            // dh_in = grad · Wᵀ
+            let mut dh = vec![0.0; b * din];
+            linalg::gemm_nt(b, dout, din, &grad, w, &mut dh);
+
+            if l > 0 {
+                // h_in is post-tanh of layer l-1: fold tanh' = 1 - h².
+                for (d, &hv) in dh.iter_mut().zip(h_in.iter()) {
+                    *d *= 1.0 - hv * hv;
+                }
+            }
+            grad = dh;
+        }
+        g_x.copy_from_slice(&grad);
+    }
+
+    /// Bytes an [`MlpTrace`] for batch `b` will retain (without running).
+    pub fn trace_bytes(&self, b: usize) -> u64 {
+        let mut elems = b * self.dims[0];
+        for l in 1..self.dims.len() - 1 {
+            elems += b * self.dims[l];
+        }
+        (elems * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::{Tape, Tensor};
+
+    fn fd_grad(f: impl Fn(&[f64]) -> f64, x: &[f64], eps: f64) -> Vec<f64> {
+        let mut g = vec![0.0; x.len()];
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            let o = xp[i];
+            xp[i] = o + eps;
+            let fp = f(&xp);
+            xp[i] = o - eps;
+            let fm = f(&xp);
+            xp[i] = o;
+            g[i] = (fp - fm) / (2.0 * eps);
+        }
+        g
+    }
+
+    #[test]
+    fn param_layout_consistent() {
+        let m = Mlp::new(&[3, 5, 2]);
+        assert_eq!(m.param_len(), 3 * 5 + 5 + 5 * 2 + 2);
+        assert_eq!(m.layer_offset(0), 0);
+        assert_eq!(m.layer_offset(1), 20);
+    }
+
+    #[test]
+    fn forward_matches_tape_model() {
+        let mut rng = Rng::new(1);
+        let m = Mlp::new(&[4, 8, 8, 3]);
+        let p = m.init_params(&mut rng);
+        let b = 5;
+        let x = rng.normal_vec(b * 4);
+        let y = m.forward(&x, b, &p);
+
+        // same network on the autodiff tape
+        let mut t = Tape::new();
+        let mut h = t.input(Tensor::matrix(x.clone(), b, 4));
+        for l in 0..m.n_layers() {
+            let (din, dout) = (m.dims[l], m.dims[l + 1]);
+            let off = m.layer_offset(l);
+            let w = t.input(Tensor::matrix(p[off..off + din * dout].to_vec(), din, dout));
+            let bias = t.input(Tensor::vector(
+                p[off + din * dout..off + din * dout + dout].to_vec(),
+            ));
+            let a = t.matmul(h, w);
+            let a = t.bias_add(a, bias);
+            h = if l < m.n_layers() - 1 { t.tanh(a) } else { a };
+        }
+        let err = crate::util::stats::max_abs_diff(&y, &t.val(h).data);
+        assert!(err < 1e-12, "err={err}");
+    }
+
+    #[test]
+    fn backward_matches_fd() {
+        let mut rng = Rng::new(2);
+        let m = Mlp::new(&[3, 6, 3]);
+        let p = m.init_params(&mut rng);
+        let b = 2;
+        let x = rng.normal_vec(b * 3);
+        let lam = rng.normal_vec(b * 3);
+
+        // loss = λᵀ f(x)
+        let loss = |pp: &[f64], xx: &[f64]| -> f64 {
+            let y = m.forward(xx, b, pp);
+            y.iter().zip(&lam).map(|(a, l)| a * l).sum()
+        };
+
+        let (_, trace) = m.forward_traced(&x, b, &p);
+        let mut gx = vec![0.0; b * 3];
+        let mut gp = vec![0.0; m.param_len()];
+        m.backward(&trace, &p, &lam, &mut gx, &mut gp);
+
+        let fd_p = fd_grad(|pp| loss(pp, &x), &p, 1e-6);
+        let fd_x = fd_grad(|xx| loss(&p, xx), &x, 1e-6);
+        for (a, f) in gp.iter().zip(&fd_p) {
+            assert!((a - f).abs() < 1e-6 * (1.0 + f.abs()), "{a} vs {f}");
+        }
+        for (a, f) in gx.iter().zip(&fd_x) {
+            assert!((a - f).abs() < 1e-6 * (1.0 + f.abs()), "{a} vs {f}");
+        }
+    }
+
+    #[test]
+    fn backward_accumulates_param_grads() {
+        let mut rng = Rng::new(3);
+        let m = Mlp::new(&[2, 4, 2]);
+        let p = m.init_params(&mut rng);
+        let x = rng.normal_vec(2);
+        let lam = vec![1.0, -1.0];
+        let (_, tr) = m.forward_traced(&x, 1, &p);
+        let mut gx = vec![0.0; 2];
+        let mut gp = vec![0.0; m.param_len()];
+        m.backward(&tr, &p, &lam, &mut gx, &mut gp);
+        let once = gp.clone();
+        m.backward(&tr, &p, &lam, &mut gx, &mut gp);
+        for (twice, one) in gp.iter().zip(&once) {
+            assert!((twice - 2.0 * one).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_bytes_matches_actual() {
+        let m = Mlp::new(&[4, 16, 16, 4]);
+        let mut rng = Rng::new(4);
+        let p = m.init_params(&mut rng);
+        let b = 7;
+        let x = rng.normal_vec(b * 4);
+        let (_, tr) = m.forward_traced(&x, b, &p);
+        assert_eq!(tr.bytes(), m.trace_bytes(b));
+        // input + two hidden layers retained
+        assert_eq!(tr.bytes(), ((b * 4 + b * 16 + b * 16) * 8) as u64);
+    }
+
+    #[test]
+    fn single_linear_layer_works() {
+        // no hidden layers: pure affine map
+        let m = Mlp::new(&[3, 2]);
+        let p = vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0, /* bias */ 0.5, -0.5];
+        let y = m.forward(&[1.0, 2.0, 3.0], 1, &p);
+        // W = [[1,0],[0,1],[1,0]] (row-major [in,out]) → y = [1+3, 2] + b
+        assert_eq!(y, vec![4.5, 1.5]);
+    }
+}

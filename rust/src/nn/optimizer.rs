@@ -1,0 +1,158 @@
+//! First-order optimizers over flat parameter vectors.
+//!
+//! The paper trains with Adam (lr 1e-3); SGD is included for tests and
+//! ablations. Optimizer state is part of the `Other` memory category in
+//! experiment accounting (the paper notes measured memory "still includes
+//! the optimizer's states").
+
+/// A stateful first-order optimizer.
+pub trait Optimizer {
+    /// Apply one update: `params ← params - step(grad)`.
+    fn step(&mut self, params: &mut [f64], grad: &[f64]);
+    /// Bytes of optimizer state (for memory accounting).
+    fn state_bytes(&self) -> u64;
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD with optional momentum.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(lr: f64) -> Sgd {
+        Sgd { lr, momentum: 0.0, velocity: Vec::new() }
+    }
+
+    pub fn with_momentum(lr: f64, momentum: f64) -> Sgd {
+        Sgd { lr, momentum, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grad) {
+                *p -= self.lr * g;
+            }
+            return;
+        }
+        if self.velocity.is_empty() {
+            self.velocity = vec![0.0; params.len()];
+        }
+        for ((p, g), v) in params.iter_mut().zip(grad).zip(&mut self.velocity) {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (self.velocity.len() * 8) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam (Kingma & Ba, 2015) with bias correction — the paper's optimizer.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f64) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: Vec::new(), v: Vec::new(), t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        if self.m.is_empty() {
+            self.m = vec![0.0; params.len()];
+            self.v = vec![0.0; params.len()];
+        }
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn state_bytes(&self) -> u64 {
+        ((self.m.len() + self.v.len()) * 8) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize f(x) = (x-3)² with each optimizer.
+    fn converges(opt: &mut dyn Optimizer, iters: usize) -> f64 {
+        let mut p = vec![0.0];
+        for _ in 0..iters {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            opt.step(&mut p, &g);
+        }
+        (p[0] - 3.0).abs()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut o = Sgd::new(0.1);
+        assert!(converges(&mut o, 200) < 1e-8);
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        let mut o = Sgd::with_momentum(0.05, 0.9);
+        assert!(converges(&mut o, 400) < 1e-8);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let mut o = Adam::new(0.1);
+        assert!(converges(&mut o, 800) < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |Δp| of the very first step ≈ lr
+        let mut o = Adam::new(0.001);
+        let mut p = vec![1.0];
+        o.step(&mut p, &[123.4]);
+        assert!((1.0 - p[0] - 0.001).abs() < 1e-9, "step was {}", 1.0 - p[0]);
+    }
+
+    #[test]
+    fn state_bytes_reported() {
+        let mut o = Adam::new(0.1);
+        assert_eq!(o.state_bytes(), 0);
+        let mut p = vec![0.0; 10];
+        o.step(&mut p, &vec![1.0; 10]);
+        assert_eq!(o.state_bytes(), 160);
+    }
+}

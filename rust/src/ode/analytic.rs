@@ -1,0 +1,292 @@
+//! Analytic ODE systems with closed-form solutions and gradients.
+//!
+//! These are the oracles of the test suite: integrator convergence orders
+//! are measured against their exact solutions, and gradient-method
+//! exactness is checked against their exact parameter sensitivities.
+
+use super::{OdeSystem, Trace};
+
+/// Trace for systems whose VJP needs only `(t, x)` — we retain exactly
+/// that, so the "graph" is one state vector.
+pub struct StateTrace {
+    pub t: f64,
+    pub x: Vec<f64>,
+}
+
+impl Trace for StateTrace {
+    fn bytes(&self) -> u64 {
+        (self.x.len() * 8 + 8) as u64
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// `dx/dt = a ⊙ x` (diagonal linear system). `θ = a`.
+/// Solution: `x(t) = x₀ e^{a t}`; `∂x_i(T)/∂a_i = T x_i(T)`,
+/// `∂x_i(T)/∂x₀_i = e^{a_i T}`.
+pub struct DiagonalLinear {
+    pub dim: usize,
+}
+
+impl OdeSystem for DiagonalLinear {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_params(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, _t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        for i in 0..self.dim {
+            out[i] = params[i] * x[i];
+        }
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval(t, x, params, out);
+        Box::new(StateTrace { t, x: x.to_vec() })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let st = trace.as_any().downcast_ref::<StateTrace>().unwrap();
+        for i in 0..self.dim {
+            g_x[i] = params[i] * lam[i];
+            g_p[i] += st.x[i] * lam[i];
+        }
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        (self.dim * 8 + 8) as u64
+    }
+}
+
+impl DiagonalLinear {
+    /// Exact `∂(Σᵢ x_i(T))/∂a` and `∂(Σᵢ x_i(T))/∂x₀` for [`crate::ode::losses::SumLoss`].
+    pub fn exact_sum_gradients(&self, x0: &[f64], a: &[f64], t1: f64) -> (Vec<f64>, Vec<f64>) {
+        let gp = (0..self.dim).map(|i| t1 * x0[i] * (a[i] * t1).exp()).collect();
+        let gx = (0..self.dim).map(|i| (a[i] * t1).exp()).collect();
+        (gp, gx)
+    }
+
+    pub fn exact_solution(&self, x0: &[f64], a: &[f64], t: f64) -> Vec<f64> {
+        (0..self.dim).map(|i| x0[i] * (a[i] * t).exp()).collect()
+    }
+}
+
+/// Harmonic oscillator `dq/dt = p·ω, dp/dt = -q·ω` with `θ = [ω]`.
+/// Solution is a rotation by angle `ωt`.
+pub struct Harmonic;
+
+impl OdeSystem for Harmonic {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn n_params(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, _t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        let w = params[0];
+        out[0] = w * x[1];
+        out[1] = -w * x[0];
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval(t, x, params, out);
+        Box::new(StateTrace { t, x: x.to_vec() })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let st = trace.as_any().downcast_ref::<StateTrace>().unwrap();
+        let w = params[0];
+        // J = [[0, w], [-w, 0]]; g_x = Jᵀ λ
+        g_x[0] = -w * lam[1];
+        g_x[1] = w * lam[0];
+        // ∂f/∂ω = [x₁, -x₀]
+        g_p[0] += st.x[1] * lam[0] - st.x[0] * lam[1];
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        24
+    }
+}
+
+impl Harmonic {
+    pub fn exact_solution(x0: &[f64], w: f64, t: f64) -> Vec<f64> {
+        let (s, c) = (w * t).sin_cos();
+        vec![c * x0[0] + s * x0[1], -s * x0[0] + c * x0[1]]
+    }
+}
+
+/// The Van der Pol oscillator `dx/dt = y, dy/dt = μ(1-x²)y - x` with
+/// `θ = [μ]`. No closed form — used for stiffness-ish stress tests and
+/// cross-method gradient agreement.
+pub struct VanDerPol;
+
+impl OdeSystem for VanDerPol {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn n_params(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, _t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        let mu = params[0];
+        out[0] = x[1];
+        out[1] = mu * (1.0 - x[0] * x[0]) * x[1] - x[0];
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval(t, x, params, out);
+        Box::new(StateTrace { t, x: x.to_vec() })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let st = trace.as_any().downcast_ref::<StateTrace>().unwrap();
+        let (x0, x1) = (st.x[0], st.x[1]);
+        let mu = params[0];
+        // J = [[0, 1], [-2μx₀x₁ - 1, μ(1-x₀²)]]
+        g_x[0] = lam[1] * (-2.0 * mu * x0 * x1 - 1.0);
+        g_x[1] = lam[0] + lam[1] * mu * (1.0 - x0 * x0);
+        g_p[0] += lam[1] * (1.0 - x0 * x0) * x1;
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        24
+    }
+}
+
+/// Time-dependent scalar system `dx/dt = sin(ωt)·x`, exercising correct
+/// handling of the stage abscissae `t_n + c_i h` in forward and adjoint
+/// integrators. Exact: `x(t) = x₀ exp((1 - cos ωt)/ω)` for `θ = [ω]`.
+pub struct TimeDependent;
+
+impl OdeSystem for TimeDependent {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn n_params(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        out[0] = (params[0] * t).sin() * x[0];
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval(t, x, params, out);
+        Box::new(StateTrace { t, x: x.to_vec() })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let st = trace.as_any().downcast_ref::<StateTrace>().unwrap();
+        let w = params[0];
+        g_x[0] = (w * st.t).sin() * lam[0];
+        g_p[0] += st.t * (w * st.t).cos() * st.x[0] * lam[0];
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        16
+    }
+}
+
+impl TimeDependent {
+    pub fn exact_solution(x0: f64, w: f64, t: f64) -> f64 {
+        x0 * ((1.0 - (w * t).cos()) / w).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fd_check(sys: &dyn OdeSystem, t: f64, x: &[f64], p: &[f64]) {
+        let d = sys.dim();
+        let np = sys.n_params();
+        let mut rng = crate::util::Rng::new(123);
+        let lam = rng.normal_vec(d);
+        let mut g_x = vec![0.0; d];
+        let mut g_p = vec![0.0; np];
+        sys.vjp(t, x, p, &lam, &mut g_x, &mut g_p);
+
+        let eps = 1e-7;
+        let f_dot_lam = |xx: &[f64], pp: &[f64]| -> f64 {
+            let mut out = vec![0.0; d];
+            sys.eval(t, xx, pp, &mut out);
+            out.iter().zip(&lam).map(|(a, b)| a * b).sum()
+        };
+        for i in 0..d {
+            let mut xp = x.to_vec();
+            xp[i] += eps;
+            let mut xm = x.to_vec();
+            xm[i] -= eps;
+            let fd = (f_dot_lam(&xp, p) - f_dot_lam(&xm, p)) / (2.0 * eps);
+            assert!((g_x[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()), "g_x[{i}]: {} vs {fd}", g_x[i]);
+        }
+        for i in 0..np {
+            let mut pp = p.to_vec();
+            pp[i] += eps;
+            let mut pm = p.to_vec();
+            pm[i] -= eps;
+            let fd = (f_dot_lam(x, &pp) - f_dot_lam(x, &pm)) / (2.0 * eps);
+            assert!((g_p[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()), "g_p[{i}]: {} vs {fd}", g_p[i]);
+        }
+    }
+
+    #[test]
+    fn analytic_vjps_match_fd() {
+        fd_check(&DiagonalLinear { dim: 3 }, 0.3, &[1.0, -0.5, 2.0], &[0.4, -0.2, 0.1]);
+        fd_check(&Harmonic, 0.0, &[1.0, 0.5], &[2.0]);
+        fd_check(&VanDerPol, 0.0, &[1.2, -0.7], &[1.5]);
+        fd_check(&TimeDependent, 0.7, &[1.3], &[2.2]);
+    }
+
+    #[test]
+    fn diagonal_linear_solution() {
+        let sys = DiagonalLinear { dim: 2 };
+        let x = sys.exact_solution(&[1.0, 2.0], &[0.5, -0.5], 2.0);
+        assert!((x[0] - 1.0f64.exp()).abs() < 1e-12);
+        assert!((x[1] - 2.0 * (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_rotation() {
+        let x = Harmonic::exact_solution(&[1.0, 0.0], 1.0, std::f64::consts::PI / 2.0);
+        assert!(x[0].abs() < 1e-12 && (x[1] + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,79 @@
+//! Terminal-loss functions used across tests and experiments.
+
+use super::Loss;
+
+/// `L(x) = Σᵢ xᵢ` — the simplest loss; its gradient is all-ones, which
+/// makes adjoint seeds easy to reason about in tests.
+pub struct SumLoss;
+
+impl Loss for SumLoss {
+    fn loss(&self, x_t: &[f64]) -> f64 {
+        x_t.iter().sum()
+    }
+
+    fn grad(&self, x_t: &[f64], out: &mut [f64]) {
+        out[..x_t.len()].fill(1.0);
+    }
+}
+
+/// `L(x) = ½‖x‖²`.
+pub struct HalfSquaredNorm;
+
+impl Loss for HalfSquaredNorm {
+    fn loss(&self, x_t: &[f64]) -> f64 {
+        0.5 * x_t.iter().map(|v| v * v).sum::<f64>()
+    }
+
+    fn grad(&self, x_t: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(x_t);
+    }
+}
+
+/// Mean-squared error to a fixed target — the training loss of the
+/// dynamical-system experiments (§5.2: interpolate two successive
+/// snapshots).
+pub struct MseLoss {
+    pub target: Vec<f64>,
+}
+
+impl MseLoss {
+    pub fn new(target: Vec<f64>) -> MseLoss {
+        MseLoss { target }
+    }
+}
+
+impl Loss for MseLoss {
+    fn loss(&self, x_t: &[f64]) -> f64 {
+        assert_eq!(x_t.len(), self.target.len());
+        let n = x_t.len() as f64;
+        x_t.iter()
+            .zip(&self.target)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / n
+    }
+
+    fn grad(&self, x_t: &[f64], out: &mut [f64]) {
+        let n = x_t.len() as f64;
+        for ((o, a), b) in out.iter_mut().zip(x_t).zip(&self.target) {
+            *o = 2.0 * (a - b) / n;
+        }
+    }
+}
+
+/// Weighted linear loss `L(x) = wᵀx` — used by property tests to probe
+/// arbitrary directions of the terminal Jacobian.
+pub struct LinearLoss {
+    pub w: Vec<f64>,
+}
+
+impl Loss for LinearLoss {
+    fn loss(&self, x_t: &[f64]) -> f64 {
+        x_t.iter().zip(&self.w).map(|(a, b)| a * b).sum()
+    }
+
+    fn grad(&self, x_t: &[f64], out: &mut [f64]) {
+        assert_eq!(x_t.len(), self.w.len());
+        out.copy_from_slice(&self.w);
+    }
+}

@@ -1,0 +1,128 @@
+//! The ODE-system abstraction every gradient method is written against.
+//!
+//! `dx/dt = f(x, t, θ)` with a state vector `x ∈ R^dim` and a flat
+//! parameter vector `θ ∈ R^n_params`. Implementations:
+//!
+//! - [`NativeMlpSystem`] — a tanh-MLP vector field on the pure-Rust
+//!   backend (tests, property sweeps, scaling benches);
+//! - [`crate::cnf::CnfSystem`] — the continuous-normalizing-flow augmented
+//!   dynamics of §5.1;
+//! - [`crate::physics::HnnSystem`] — the `f = G∇H` Hamiltonian-style
+//!   field of §5.2;
+//! - [`crate::runtime::PjrtSystem`] — AOT-compiled JAX/Pallas artifacts
+//!   executed through PJRT (the deployment path);
+//! - [`analytic`] — closed-form systems used by exactness tests.
+//!
+//! The trait exposes both a plain evaluation and a *traced* evaluation
+//! that retains the per-use computation graph (the `L` bytes of Table 1),
+//! so gradient methods can choose — per the scheme they implement —
+//! what to keep and what to recompute.
+
+pub mod analytic;
+pub mod losses;
+pub mod native;
+
+pub use native::NativeMlpSystem;
+
+use std::any::Any;
+
+/// An opaque retained computation graph for one evaluation of `f`.
+pub trait Trace: Any {
+    /// Bytes retained by this trace (registered as `Tape` memory by
+    /// whoever keeps it alive).
+    fn bytes(&self) -> u64;
+    fn as_any(&self) -> &dyn Any;
+}
+
+/// A parametric ODE vector field with VJP support.
+pub trait OdeSystem {
+    /// State dimension.
+    fn dim(&self) -> usize;
+
+    /// Flat parameter count.
+    fn n_params(&self) -> usize;
+
+    /// `out = f(x, t, θ)`. No computation graph is retained.
+    fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]);
+
+    /// Like [`OdeSystem::eval`], but retains the computation graph so
+    /// [`OdeSystem::vjp_traced`] can run without recomputation.
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace>;
+
+    /// Vector–Jacobian products from a retained trace:
+    /// `g_x = λᵀ ∂f/∂x` (overwritten), `g_p += λᵀ ∂f/∂θ` (accumulated).
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    );
+
+    /// Bytes one trace retains — the per-use graph size `L` of Table 1.
+    fn trace_bytes(&self) -> u64;
+
+    /// Convenience: recompute-and-backprop in one call (transient trace).
+    /// This is what the adjoint and symplectic adjoint methods do per
+    /// stage — only one `L` is ever live.
+    fn vjp(
+        &self,
+        t: f64,
+        x: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let mut out = vec![0.0; self.dim()];
+        let trace = self.eval_traced(t, x, params, &mut out);
+        self.vjp_traced(trace.as_ref(), params, lam, g_x, g_p);
+    }
+}
+
+/// Terminal loss `L(x(T))` with its gradient — what seeds the adjoint
+/// variable `λ_N = (∂L/∂x_N)ᵀ` (Remark 2 of the paper).
+pub trait Loss {
+    /// Loss value.
+    fn loss(&self, x_t: &[f64]) -> f64;
+    /// `out = ∂L/∂x(T)`.
+    fn grad(&self, x_t: &[f64], out: &mut [f64]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::losses::*;
+    use super::*;
+
+    #[test]
+    fn sum_loss_grad_is_ones() {
+        let l = SumLoss;
+        let x = vec![1.0, -2.0, 3.0];
+        assert_eq!(l.loss(&x), 2.0);
+        let mut g = vec![0.0; 3];
+        l.grad(&x, &mut g);
+        assert_eq!(g, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn quadratic_loss() {
+        let l = HalfSquaredNorm;
+        let x = vec![3.0, 4.0];
+        assert_eq!(l.loss(&x), 12.5);
+        let mut g = vec![0.0; 2];
+        l.grad(&x, &mut g);
+        assert_eq!(g, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn mse_to_target_loss() {
+        let target = vec![1.0, 1.0];
+        let l = MseLoss::new(target);
+        let x = vec![2.0, 0.0];
+        assert!((l.loss(&x) - 1.0).abs() < 1e-15);
+        let mut g = vec![0.0; 2];
+        l.grad(&x, &mut g);
+        assert_eq!(g, vec![1.0, -1.0]);
+    }
+}

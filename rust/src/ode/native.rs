@@ -1,0 +1,212 @@
+//! The native (pure-Rust) neural vector field: `f(x, t, θ)` is a tanh MLP
+//! over `[x ‖ t]`, evaluated with the hand-rolled kernels in [`crate::nn`].
+//!
+//! This mirrors the FFJORD-style `f` of the paper's §5.1 (an MLP that
+//! takes the state and the time), batched over `batch` independent samples
+//! so one `OdeSystem` integration advances a whole mini-batch, exactly as
+//! torchdiffeq does.
+
+use super::{OdeSystem, Trace};
+use crate::nn::{Mlp, MlpTrace};
+use crate::util::Rng;
+
+/// MLP-based ODE system. State layout: `[batch, state_dim]` flattened
+/// row-major; the network input is `[x_i ‖ t]` per sample.
+pub struct NativeMlpSystem {
+    pub net: Mlp,
+    pub state_dim: usize,
+    pub batch: usize,
+}
+
+struct NativeTrace {
+    mlp: MlpTrace,
+}
+
+impl Trace for NativeTrace {
+    fn bytes(&self) -> u64 {
+        self.mlp.bytes()
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl NativeMlpSystem {
+    /// `dims` are the *state-side* layer sizes `[state_dim, h1, …, state_dim]`;
+    /// the actual network input gains one time feature.
+    pub fn new(dims: &[usize], seed: u64) -> NativeMlpSystem {
+        Self::with_batch(dims, 1, seed)
+    }
+
+    pub fn with_batch(dims: &[usize], batch: usize, _seed: u64) -> NativeMlpSystem {
+        assert!(dims.len() >= 2);
+        assert_eq!(
+            dims[0],
+            *dims.last().unwrap(),
+            "vector field must map state_dim -> state_dim"
+        );
+        let state_dim = dims[0];
+        let mut net_dims = dims.to_vec();
+        net_dims[0] = state_dim + 1; // time feature
+        NativeMlpSystem { net: Mlp::new(&net_dims), state_dim, batch }
+    }
+
+    pub fn init_params(&self) -> Vec<f64> {
+        let mut rng = Rng::new(0xC0FFEE);
+        self.net.init_params(&mut rng)
+    }
+
+    pub fn init_params_seeded(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        self.net.init_params(&mut rng)
+    }
+
+    /// Build the `[batch, state_dim+1]` network input `[x ‖ t]`.
+    fn net_input(&self, t: f64, x: &[f64]) -> Vec<f64> {
+        let d = self.state_dim;
+        let mut inp = Vec::with_capacity(self.batch * (d + 1));
+        for s in 0..self.batch {
+            inp.extend_from_slice(&x[s * d..(s + 1) * d]);
+            inp.push(t);
+        }
+        inp
+    }
+}
+
+impl OdeSystem for NativeMlpSystem {
+    fn dim(&self) -> usize {
+        self.batch * self.state_dim
+    }
+
+    fn n_params(&self) -> usize {
+        self.net.param_len()
+    }
+
+    fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        let inp = self.net_input(t, x);
+        let y = self.net.forward(&inp, self.batch, params);
+        out.copy_from_slice(&y);
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        let inp = self.net_input(t, x);
+        let (y, trace) = self.net.forward_traced(&inp, self.batch, params);
+        out.copy_from_slice(&y);
+        Box::new(NativeTrace { mlp: trace })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let tr = trace.as_any().downcast_ref::<NativeTrace>().unwrap();
+        let d = self.state_dim;
+        let mut g_in = vec![0.0; self.batch * (d + 1)];
+        self.net.backward(&tr.mlp, params, lam, &mut g_in, g_p);
+        // strip the time-feature column
+        for s in 0..self.batch {
+            g_x[s * d..(s + 1) * d].copy_from_slice(&g_in[s * (d + 1)..s * (d + 1) + d]);
+        }
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        self.net.trace_bytes(self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_traced_agree() {
+        let sys = NativeMlpSystem::with_batch(&[3, 16, 3], 4, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(sys.dim());
+        let mut a = vec![0.0; sys.dim()];
+        let mut b = vec![0.0; sys.dim()];
+        sys.eval(0.3, &x, &p, &mut a);
+        let _tr = sys.eval_traced(0.3, &x, &p, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        let sys = NativeMlpSystem::with_batch(&[2, 8, 2], 3, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec(sys.dim());
+        let lam = rng.normal_vec(sys.dim());
+        let t = 0.4;
+
+        let mut g_x = vec![0.0; sys.dim()];
+        let mut g_p = vec![0.0; sys.n_params()];
+        sys.vjp(t, &x, &p, &lam, &mut g_x, &mut g_p);
+
+        let f_dot = |xx: &[f64], pp: &[f64]| {
+            let mut out = vec![0.0; sys.dim()];
+            sys.eval(t, xx, pp, &mut out);
+            out.iter().zip(&lam).map(|(a, b)| a * b).sum::<f64>()
+        };
+        let eps = 1e-6;
+        for i in 0..sys.dim() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (f_dot(&xp, &p) - f_dot(&xm, &p)) / (2.0 * eps);
+            assert!((g_x[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()));
+        }
+        for i in (0..sys.n_params()).step_by(7) {
+            let mut pp = p.clone();
+            pp[i] += eps;
+            let mut pm = p.clone();
+            pm[i] -= eps;
+            let fd = (f_dot(&x, &pp) - f_dot(&x, &pm)) / (2.0 * eps);
+            assert!((g_p[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_samples_are_independent() {
+        // changing sample 0's state must not affect sample 1's derivative
+        let sys = NativeMlpSystem::with_batch(&[2, 8, 2], 2, 0);
+        let p = sys.init_params();
+        let x1 = vec![0.1, 0.2, 0.5, -0.3];
+        let x2 = vec![9.9, -7.0, 0.5, -0.3];
+        let mut o1 = vec![0.0; 4];
+        let mut o2 = vec![0.0; 4];
+        sys.eval(0.0, &x1, &p, &mut o1);
+        sys.eval(0.0, &x2, &p, &mut o2);
+        assert_eq!(&o1[2..], &o2[2..]);
+        assert_ne!(&o1[..2], &o2[..2]);
+    }
+
+    #[test]
+    fn time_feature_matters() {
+        let sys = NativeMlpSystem::new(&[2, 8, 2], 0);
+        let p = sys.init_params();
+        let x = vec![0.3, -0.4];
+        let mut a = vec![0.0; 2];
+        let mut b = vec![0.0; 2];
+        sys.eval(0.0, &x, &p, &mut a);
+        sys.eval(1.0, &x, &p, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn trace_bytes_consistent() {
+        let sys = NativeMlpSystem::with_batch(&[3, 32, 32, 3], 8, 0);
+        let p = sys.init_params();
+        let x = vec![0.1; sys.dim()];
+        let mut out = vec![0.0; sys.dim()];
+        let tr = sys.eval_traced(0.0, &x, &p, &mut out);
+        assert_eq!(tr.bytes(), sys.trace_bytes());
+    }
+}

@@ -1,0 +1,395 @@
+//! The trainable energy-based model `du/dt = G ∇H(u)` (HNN++-style).
+//!
+//! `H(u)` is a translation-invariant energy: a periodic 1-D convolution
+//! (receptive field `K`), tanh, a per-position linear energy density, and
+//! a sum over the grid — mirroring the conv + FC architecture of the
+//! HNN++ code the paper builds on. The vector field takes the *gradient*
+//! of `H` on the autodiff tape (`∇H = grad(H, u)`), then applies the
+//! structure operator `G` (a periodic finite-difference stencil), so a
+//! gradient-method VJP of this system differentiates *through* a
+//! gradient — exercising the tape's higher-order machinery exactly the
+//! way PyTorch's double-backward is exercised by the original HNN++.
+
+use super::GOperator;
+use crate::autodiff::{Tape, Tensor, Var};
+use crate::ode::{OdeSystem, Trace};
+use crate::util::Rng;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// Energy-based PDE model over a periodic grid.
+pub struct HnnSystem {
+    /// Grid points per sample.
+    pub grid: usize,
+    /// Samples integrated simultaneously.
+    pub batch: usize,
+    /// Conv kernel width (odd).
+    pub k: usize,
+    /// Conv channels.
+    pub channels: usize,
+    pub g_op: GOperator,
+    /// Grid spacing (for the stencils).
+    pub dx: f64,
+    im2col_idx: Rc<Vec<usize>>,
+    params_cache: RefCell<Vec<f64>>,
+    trace_bytes_cache: RefCell<Option<u64>>,
+}
+
+struct HnnTrace {
+    tape: RefCell<Tape>,
+    u_var: Var,
+    param_vars: Vec<Var>,
+    f_var: Var,
+    bytes: u64,
+}
+
+impl Trace for HnnTrace {
+    fn bytes(&self) -> u64 {
+        self.bytes
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl HnnSystem {
+    pub fn new(grid: usize, batch: usize, k: usize, channels: usize, g_op: GOperator, dx: f64) -> HnnSystem {
+        assert!(k % 2 == 1, "kernel width must be odd");
+        // im2col over [batch, grid] -> [batch*grid, k] periodic windows
+        let half = k / 2;
+        let mut idx = Vec::with_capacity(batch * grid * k);
+        for b in 0..batch {
+            for g in 0..grid {
+                for o in 0..k {
+                    let pos = (g + grid + o - half) % grid;
+                    idx.push(b * grid + pos);
+                }
+            }
+        }
+        HnnSystem {
+            grid,
+            batch,
+            k,
+            channels,
+            g_op,
+            dx,
+            im2col_idx: Rc::new(idx),
+            params_cache: RefCell::new(Vec::new()),
+            trace_bytes_cache: RefCell::new(None),
+        }
+    }
+
+    /// Parameter layout: `[Wc (k×C), bc (C), w2 (C×C), b2 (C), w3 (C), b3 (1)]`.
+    pub fn param_len(&self) -> usize {
+        let c = self.channels;
+        self.k * c + c + c * c + c + c + 1
+    }
+
+    pub fn init_params(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let c = self.channels;
+        let mut p = Vec::with_capacity(self.param_len());
+        let bound1 = (6.0 / (self.k + c) as f64).sqrt();
+        for _ in 0..self.k * c {
+            p.push(rng.range(-bound1, bound1));
+        }
+        p.extend(std::iter::repeat(0.0).take(c));
+        let bound2 = (6.0 / (2 * c) as f64).sqrt();
+        for _ in 0..c * c {
+            p.push(rng.range(-bound2, bound2));
+        }
+        p.extend(std::iter::repeat(0.0).take(c));
+        let bound3 = (6.0 / (c + 1) as f64).sqrt();
+        for _ in 0..c {
+            p.push(rng.range(-bound3, bound3));
+        }
+        p.push(0.0);
+        p
+    }
+
+    /// Build `H` and `f = G∇H` on the tape; returns `(u_var, params, f_var)`.
+    fn build(&self, tape: &mut Tape, u: &[f64]) -> (Var, Vec<Var>, Var) {
+        let (b, w, c, k) = (self.batch, self.grid, self.channels, self.k);
+        let params = self.params_cache.borrow().clone();
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Vec<f64> {
+            let v = params[off..off + n].to_vec();
+            off += n;
+            v
+        };
+
+        let u_var = tape.input(Tensor::matrix(u.to_vec(), b, w));
+        let wc = tape.input(Tensor::matrix(take(k * c), k, c));
+        let bc = tape.input(Tensor::vector(take(c)));
+        let w2 = tape.input(Tensor::matrix(take(c * c), c, c));
+        let b2 = tape.input(Tensor::vector(take(c)));
+        let w3 = tape.input(Tensor::matrix(take(c), c, 1));
+        let b3 = tape.input(Tensor::vector(take(1)));
+        let param_vars = vec![wc, bc, w2, b2, w3, b3];
+
+        // H(u): im2col → conv-as-matmul → tanh → linear → tanh → density → sum
+        let cols = tape.gather(u_var, self.im2col_idx.clone(), vec![b * w, k]);
+        let a1 = tape.matmul(cols, wc);
+        let a1 = tape.bias_add(a1, bc);
+        let h1 = tape.tanh(a1); // [b·w, c]
+        let a2 = tape.matmul(h1, w2);
+        let a2 = tape.bias_add(a2, b2);
+        let h2 = tape.tanh(a2);
+        let dens = tape.matmul(h2, w3); // [b·w, 1]
+        let dens = tape.bias_add(dens, b3);
+        let h_total = tape.sum(dens);
+        let h_scaled = tape.scale(h_total, self.dx); // Riemann sum over the grid
+
+        // ∇H per sample — the inner gradient
+        let grads = tape.grad(h_scaled, &[u_var]);
+        let grad_h = grads[0]; // [b, w]
+
+        // f = G ∇H via periodic stencils (built from gathers, all linear)
+        let f_var = match self.g_op {
+            GOperator::Dx => {
+                // (v_{i+1} − v_{i−1}) / (2Δx)
+                let plus = self.shift(tape, grad_h, 1);
+                let minus = self.shift(tape, grad_h, -1);
+                let diff = tape.sub(plus, minus);
+                tape.scale(diff, 1.0 / (2.0 * self.dx))
+            }
+            GOperator::Dxx => {
+                // (v_{i+1} − 2v_i + v_{i−1}) / Δx²
+                let plus = self.shift(tape, grad_h, 1);
+                let minus = self.shift(tape, grad_h, -1);
+                let sum = tape.add(plus, minus);
+                let two = tape.scale(grad_h, 2.0);
+                let diff = tape.sub(sum, two);
+                tape.scale(diff, 1.0 / (self.dx * self.dx))
+            }
+        };
+        (u_var, param_vars, f_var)
+    }
+
+    /// Periodic shift by `o` grid points along the grid axis of `[b, w]`.
+    fn shift(&self, tape: &mut Tape, v: Var, o: isize) -> Var {
+        let (b, w) = (self.batch, self.grid);
+        let mut idx = Vec::with_capacity(b * w);
+        for s in 0..b {
+            for g in 0..w {
+                let pos = ((g as isize + o).rem_euclid(w as isize)) as usize;
+                idx.push(s * w + pos);
+            }
+        }
+        tape.gather(v, Rc::new(idx), vec![b, w])
+    }
+
+    /// Evaluate the learned energy `H` per batch (for conservation checks).
+    pub fn energy(&self, u: &[f64], params: &[f64]) -> f64 {
+        self.params_cache.borrow_mut().clear();
+        self.params_cache.borrow_mut().extend_from_slice(params);
+        let mut tape = Tape::new();
+        let (b, w, c, k) = (self.batch, self.grid, self.channels, self.k);
+        let _ = (b, w, c, k);
+        let (_u, _p, _f) = self.build(&mut tape, u);
+        // H was an intermediate node; rebuild just H instead:
+        // (cheap enough: reuse build and read the scaled-H node is not
+        // exposed, so recompute the density sum here)
+        // For simplicity, recompute via a fresh tape:
+        let mut t2 = Tape::new();
+        let params2 = self.params_cache.borrow().clone();
+        let mut off = 0usize;
+        let mut take = |n: usize| -> Vec<f64> {
+            let v = params2[off..off + n].to_vec();
+            off += n;
+            v
+        };
+        let u_var = t2.input(Tensor::matrix(u.to_vec(), self.batch, self.grid));
+        let wc = t2.input(Tensor::matrix(take(self.k * self.channels), self.k, self.channels));
+        let bc = t2.input(Tensor::vector(take(self.channels)));
+        let w2 = t2.input(Tensor::matrix(
+            take(self.channels * self.channels),
+            self.channels,
+            self.channels,
+        ));
+        let b2 = t2.input(Tensor::vector(take(self.channels)));
+        let w3 = t2.input(Tensor::matrix(take(self.channels), self.channels, 1));
+        let b3 = t2.input(Tensor::vector(take(1)));
+        let cols = t2.gather(u_var, self.im2col_idx.clone(), vec![self.batch * self.grid, self.k]);
+        let a1 = t2.matmul(cols, wc);
+        let a1 = t2.bias_add(a1, bc);
+        let h1 = t2.tanh(a1);
+        let a2 = t2.matmul(h1, w2);
+        let a2 = t2.bias_add(a2, b2);
+        let h2 = t2.tanh(a2);
+        let dens = t2.matmul(h2, w3);
+        let dens = t2.bias_add(dens, b3);
+        let h_total = t2.sum(dens);
+        let h_scaled = t2.scale(h_total, self.dx);
+        t2.val(h_scaled).item()
+    }
+}
+
+impl OdeSystem for HnnSystem {
+    fn dim(&self) -> usize {
+        self.batch * self.grid
+    }
+
+    fn n_params(&self) -> usize {
+        self.param_len()
+    }
+
+    fn eval(&self, _t: f64, u: &[f64], params: &[f64], out: &mut [f64]) {
+        self.params_cache.borrow_mut().clear();
+        self.params_cache.borrow_mut().extend_from_slice(params);
+        let mut tape = Tape::new();
+        let (_u, _p, f) = self.build(&mut tape, u);
+        out.copy_from_slice(&tape.val(f).data);
+    }
+
+    fn eval_traced(&self, _t: f64, u: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.params_cache.borrow_mut().clear();
+        self.params_cache.borrow_mut().extend_from_slice(params);
+        let mut tape = Tape::new();
+        let (u_var, param_vars, f_var) = self.build(&mut tape, u);
+        out.copy_from_slice(&tape.val(f_var).data);
+        let bytes = tape.mem_bytes() as u64;
+        Box::new(HnnTrace { tape: RefCell::new(tape), u_var, param_vars, f_var, bytes })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        _params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let tr = trace.as_any().downcast_ref::<HnnTrace>().unwrap();
+        let mut tape = tr.tape.borrow_mut();
+        let lam_var = tape.constant(Tensor::matrix(lam.to_vec(), self.batch, self.grid));
+        let prod = tape.mul(lam_var, tr.f_var);
+        let total = tape.sum(prod);
+        let mut wrt = vec![tr.u_var];
+        wrt.extend_from_slice(&tr.param_vars);
+        let grads = tape.grad(total, &wrt);
+        g_x.copy_from_slice(&tape.val(grads[0]).data);
+        let mut off = 0usize;
+        for g in &grads[1..] {
+            let v = &tape.val(*g).data;
+            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
+                *dst += src;
+            }
+            off += v.len();
+        }
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        *self.trace_bytes_cache.borrow_mut().get_or_insert_with(|| {
+            let u = vec![0.1; self.dim()];
+            let p = self.init_params(1);
+            let mut out = vec![0.0; self.dim()];
+            let tr = self.eval_traced(0.0, &u, &p, &mut out);
+            tr.bytes()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::{BackpropMethod, GradientMethod, SymplecticAdjoint};
+    use crate::integrate::SolverConfig;
+    use crate::ode::losses::MseLoss;
+    use crate::tableau::Tableau;
+    use crate::testkit::{assert_all_close, fd_gradient};
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn gradient_field_matches_fd_of_energy() {
+        // f = G∇H: check ∇H itself via Dx-inverse-free route — compare
+        // eval against finite differences of H through the G stencil.
+        let sys = HnnSystem::new(16, 1, 3, 4, GOperator::Dx, 0.3);
+        let p = sys.init_params(2);
+        let mut rng = Rng::new(3);
+        let u = rng.normal_vec(16);
+        let mut f = vec![0.0; 16];
+        sys.eval(0.0, &u, &p, &mut f);
+
+        // FD of H wrt u, then apply the stencil manually
+        let gh = fd_gradient(|uu| sys.energy(uu, &p), &u, 1e-6);
+        let mut expect = vec![0.0; 16];
+        for i in 0..16 {
+            let ip = (i + 1) % 16;
+            let im = (i + 15) % 16;
+            expect[i] = (gh[ip] - gh[im]) / (2.0 * 0.3);
+        }
+        assert_all_close(&f, &expect, 1e-5, "G∇H");
+    }
+
+    #[test]
+    fn dx_field_conserves_learned_energy_direction() {
+        // For G = ∂x (skew-adjoint), dH/dt = ∇Hᵀ G ∇H = 0.
+        let sys = HnnSystem::new(16, 1, 3, 4, GOperator::Dx, 0.2);
+        let p = sys.init_params(4);
+        let mut rng = Rng::new(5);
+        let u = rng.normal_vec(16);
+        let mut f = vec![0.0; 16];
+        sys.eval(0.0, &u, &p, &mut f);
+        let gh = fd_gradient(|uu| sys.energy(uu, &p), &u, 1e-6);
+        let dhdt: f64 = gh.iter().zip(&f).map(|(a, b)| a * b).sum();
+        assert!(dhdt.abs() < 1e-7, "dH/dt = {dhdt}");
+    }
+
+    #[test]
+    fn dxx_field_dissipates_learned_energy() {
+        // For G = ∂xx (negative semi-definite), dH/dt = ∇Hᵀ ∂xx ∇H ≤ 0.
+        let sys = HnnSystem::new(16, 1, 3, 4, GOperator::Dxx, 0.2);
+        let p = sys.init_params(6);
+        let mut rng = Rng::new(7);
+        let u = rng.normal_vec(16);
+        let mut f = vec![0.0; 16];
+        sys.eval(0.0, &u, &p, &mut f);
+        let gh = fd_gradient(|uu| sys.energy(uu, &p), &u, 1e-6);
+        let dhdt: f64 = gh.iter().zip(&f).map(|(a, b)| a * b).sum();
+        assert!(dhdt < 1e-9, "dH/dt = {dhdt} should be ≤ 0");
+    }
+
+    /// The VJP (second derivative of H) against finite differences.
+    #[test]
+    fn hnn_vjp_matches_fd() {
+        let sys = HnnSystem::new(8, 2, 3, 3, GOperator::Dx, 0.5);
+        let p = sys.init_params(8);
+        let mut rng = Rng::new(9);
+        let u = rng.normal_vec(sys.dim());
+        let lam = rng.normal_vec(sys.dim());
+
+        let mut g_x = vec![0.0; sys.dim()];
+        let mut g_p = vec![0.0; sys.n_params()];
+        sys.vjp(0.0, &u, &p, &lam, &mut g_x, &mut g_p);
+
+        let f_dot = |uu: &[f64], pp: &[f64]| -> f64 {
+            let mut out = vec![0.0; sys.dim()];
+            sys.eval(0.0, uu, pp, &mut out);
+            out.iter().zip(&lam).map(|(a, b)| a * b).sum()
+        };
+        let fd_x = fd_gradient(|uu| f_dot(uu, &p), &u, 1e-6);
+        assert_all_close(&g_x, &fd_x, 1e-4, "g_u");
+        let fd_p = fd_gradient(|pp| f_dot(&u, pp), &p, 1e-6);
+        assert_all_close(&g_p, &fd_p, 1e-4, "g_p");
+    }
+
+    /// End-to-end on the PDE model: symplectic adjoint == backprop.
+    #[test]
+    fn hnn_training_gradient_exactness() {
+        let sys = HnnSystem::new(8, 1, 3, 3, GOperator::Dxx, 0.5);
+        let p = sys.init_params(10);
+        let mut rng = Rng::new(11);
+        let u0 = rng.normal_vec(8);
+        let target = rng.normal_vec(8);
+        let loss = MseLoss::new(target);
+        let cfg = SolverConfig::fixed(Tableau::dopri8(), 0.05);
+
+        let bp = BackpropMethod.gradient(&sys, &p, &u0, 0.0, 0.1, &cfg, &loss).unwrap();
+        let sa = SymplecticAdjoint.gradient(&sys, &p, &u0, 0.0, 0.1, &cfg, &loss).unwrap();
+        let err = rel_l2(&sa.grad_params, &bp.grad_params);
+        assert!(err < 1e-11, "err {err}");
+        // dopri8 memory gap should be visible even on this tiny problem
+        assert!(sa.stats.peak_tape_bytes < bp.stats.peak_tape_bytes / 10);
+    }
+}

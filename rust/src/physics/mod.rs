@@ -1,0 +1,32 @@
+//! Continuous-time physical systems (§5.2 of the paper).
+//!
+//! The paper learns PDE dynamics of the form `du/dt = G ∇H(u)` (the
+//! energy-based HNN++ formulation of Matsubara et al. 2020) on two 1-D
+//! periodic systems:
+//!
+//! - the **Korteweg–De Vries equation** `u_t = −u u_x − δ² u_xxx`
+//!   (`G = ∂x`, skew-adjoint → energy-conserving), and
+//! - the **Cahn–Hilliard system** `u_t = ∂xx(u³ − u − γ u_xx)`
+//!   (`G = ∂xx`, negative semi-definite → energy-dissipating).
+//!
+//! [`spectral`] generates ground-truth trajectories with an ETDRK4
+//! pseudo-spectral integrator on the in-repo FFT (the data substrate the
+//! paper obtained from the HNN++ code release). [`HnnSystem`] is the
+//! trainable model: a small conv + MLP energy `H(u)` whose gradient field
+//! is taken on the autodiff tape (`∇H` is itself a tape `grad`, so the
+//! adjoint methods' VJPs exercise third... second-order differentiation).
+
+pub mod hnn;
+pub mod spectral;
+
+pub use hnn::HnnSystem;
+pub use spectral::{generate_cahn_hilliard, generate_kdv, Trajectory};
+
+/// The structure matrix `G` relating energy gradient to dynamics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GOperator {
+    /// Central-difference `∂x` (periodic) — conservative (KdV).
+    Dx,
+    /// Central-difference `∂xx` (periodic) — dissipative (Cahn–Hilliard).
+    Dxx,
+}

@@ -1,0 +1,133 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One exported model configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigEntry {
+    /// State-side layer dims `[d, h…, d]`.
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub d: usize,
+    pub param_len: usize,
+    /// Estimated retained-activation bytes of one traced use (`L`).
+    pub trace_bytes: u64,
+    /// Estimated per-program VMEM bytes of the Pallas kernel (TPU estimate).
+    pub vmem_footprint_bytes: u64,
+    /// function name → artifact file name.
+    pub functions: BTreeMap<String, String>,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest JSON: {e}"))?;
+        let mut configs = BTreeMap::new();
+        let cfgs = json
+            .get("configs")
+            .and_then(|c| match c {
+                Json::Obj(m) => Some(m),
+                _ => None,
+            })
+            .context("manifest missing configs object")?;
+        for (name, entry) in cfgs {
+            let usize_field = |key: &str| -> Result<usize> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("config {name} missing {key}"))
+            };
+            let dims = entry
+                .get("dims")
+                .and_then(Json::as_arr)
+                .context("dims")?
+                .iter()
+                .map(|v| v.as_usize().context("dims element"))
+                .collect::<Result<Vec<_>>>()?;
+            let mut functions = BTreeMap::new();
+            if let Some(Json::Obj(fns)) = entry.get("functions") {
+                for (fname, meta) in fns {
+                    let file = meta
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .with_context(|| format!("function {fname} missing file"))?;
+                    functions.insert(fname.clone(), file.to_string());
+                }
+            }
+            configs.insert(
+                name.clone(),
+                ConfigEntry {
+                    dims,
+                    batch: usize_field("batch")?,
+                    d: usize_field("d")?,
+                    param_len: usize_field("param_len")?,
+                    trace_bytes: usize_field("trace_bytes")? as u64,
+                    vmem_footprint_bytes: usize_field("vmem_footprint_bytes")? as u64,
+                    functions,
+                },
+            );
+        }
+        Ok(Manifest { configs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "configs": {
+        "small": {
+          "dims": [4, 16, 4], "batch": 4, "d": 4, "param_len": 148,
+          "trace_bytes": 672, "vmem_footprint_bytes": 2304,
+          "functions": {
+            "f_eval": {"file": "small_f_eval.hlo.txt", "args": [[4,4],[ ],[148]]},
+            "f_vjp": {"file": "small_f_vjp.hlo.txt", "args": []}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = &m.configs["small"];
+        assert_eq!(c.dims, vec![4, 16, 4]);
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.param_len, 148);
+        assert_eq!(c.trace_bytes, 672);
+        assert_eq!(c.functions["f_eval"], "small_f_eval.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"configs": {"x": {"dims": [1,1]}}}"#).is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.configs.contains_key("small"));
+            let c = &m.configs["small"];
+            assert_eq!(c.d, c.dims[0]);
+            assert!(c.functions.contains_key("cnf_vjp"));
+        }
+    }
+}

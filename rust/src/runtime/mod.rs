@@ -1,0 +1,94 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and expose
+//! them behind the same [`crate::ode::OdeSystem`] trait the native backend
+//! uses — so every gradient method, integrator, and experiment runs
+//! unchanged against the compiled HLO.
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation` → `PjRtClient::compile` → `execute`. Python never runs
+//! on this path; the artifacts are produced once by `make artifacts`.
+
+pub mod manifest;
+pub mod system;
+
+pub use manifest::{ConfigEntry, Manifest};
+pub use system::PjrtSystem;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the artifact directory it loads from.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub artifact_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and read `<dir>/manifest.json`.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, artifact_dir: dir, manifest })
+    }
+
+    /// Compile one artifact to a loaded executable.
+    pub fn compile(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifact_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {file}: {e:?}"))
+    }
+
+    /// Build a [`PjrtSystem`] for a named manifest config.
+    ///
+    /// `cnf = false` loads the plain vector field (`f_eval`/`f_vjp`);
+    /// `cnf = true` loads the augmented CNF dynamics with the Hutchinson
+    /// probe input.
+    pub fn system(&self, config: &str, cnf: bool) -> Result<PjrtSystem> {
+        let entry = self
+            .manifest
+            .configs
+            .get(config)
+            .with_context(|| format!("config {config} not in manifest"))?
+            .clone();
+        let (eval_name, vjp_name) =
+            if cnf { ("cnf_eval", "cnf_vjp") } else { ("f_eval", "f_vjp") };
+        let eval_file = entry
+            .functions
+            .get(eval_name)
+            .with_context(|| format!("{eval_name} missing"))?
+            .clone();
+        let vjp_file = entry
+            .functions
+            .get(vjp_name)
+            .with_context(|| format!("{vjp_name} missing"))?
+            .clone();
+        let exe_eval = self.compile(&eval_file)?;
+        let exe_vjp = self.compile(&vjp_file)?;
+        Ok(PjrtSystem::new(entry, cnf, exe_eval, exe_vjp))
+    }
+}
+
+/// Convert an `f64` slice into an `f32` literal of the given shape.
+pub(crate) fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    let lit = xla::Literal::vec1(&f32s);
+    if dims.len() == 1 && dims[0] as usize == f32s.len() {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow::anyhow!("reshaping literal: {e:?}"))
+}
+
+/// Read an `f32` literal back into an `f64` vec.
+pub(crate) fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("reading literal: {e:?}"))?;
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}

@@ -1,0 +1,180 @@
+//! [`PjrtSystem`]: an [`OdeSystem`] whose `eval` and `vjp` run compiled
+//! HLO artifacts through PJRT.
+//!
+//! The "trace" of a traced evaluation is just the `(t, x)` input pair: the
+//! VJP artifact recomputes the forward pass internally (that is how
+//! `jax.vjp` lowered it), so nothing else needs to be retained on the Rust
+//! side. The per-use graph size `L` reported for memory accounting comes
+//! from the manifest's activation estimate, which mirrors
+//! `Mlp::trace_bytes` on the native backend.
+
+use super::{literal_f32, literal_to_f64, ConfigEntry};
+use crate::ode::{OdeSystem, Trace};
+use anyhow::Result;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// An ODE system backed by compiled PJRT executables.
+pub struct PjrtSystem {
+    pub entry: ConfigEntry,
+    /// CNF mode: augmented `[b, d+1]` state + Hutchinson probe input.
+    pub cnf: bool,
+    exe_eval: xla::PjRtLoadedExecutable,
+    exe_vjp: xla::PjRtLoadedExecutable,
+    /// Hutchinson probe (CNF mode), `[batch, d]` flattened, f64.
+    pub eps: Vec<f64>,
+    /// Executions performed (diagnostics).
+    pub n_executions: AtomicUsize,
+    /// Parameters of the current call (set by eval/vjp before packing
+    /// PJRT arguments; single-threaded hot loop).
+    params_stash: RefCell<Vec<f64>>,
+}
+
+struct InputTrace {
+    t: f64,
+    x: Vec<f64>,
+    reported_bytes: u64,
+}
+
+impl Trace for InputTrace {
+    fn bytes(&self) -> u64 {
+        self.reported_bytes
+    }
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+impl PjrtSystem {
+    pub fn new(
+        entry: ConfigEntry,
+        cnf: bool,
+        exe_eval: xla::PjRtLoadedExecutable,
+        exe_vjp: xla::PjRtLoadedExecutable,
+    ) -> PjrtSystem {
+        let eps = vec![1.0; entry.batch * entry.d];
+        PjrtSystem {
+            entry,
+            cnf,
+            exe_eval,
+            exe_vjp,
+            eps,
+            n_executions: AtomicUsize::new(0),
+            params_stash: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// State width per sample (`d` plain, `d+1` augmented).
+    fn width(&self) -> usize {
+        if self.cnf {
+            self.entry.d + 1
+        } else {
+            self.entry.d
+        }
+    }
+
+    pub fn resample_eps(&mut self, rng: &mut crate::util::Rng) {
+        self.eps = rng.rademacher_vec(self.entry.batch * self.entry.d);
+    }
+
+    fn exec_eval(&self, t: f64, x: &[f64]) -> Result<Vec<f64>> {
+        let b = self.entry.batch as i64;
+        let w = self.width() as i64;
+        let mut args = vec![
+            literal_f32(x, &[b, w])?,
+            xla::Literal::scalar(t as f32),
+            literal_f32(&self.params_scratch(), &[self.entry.param_len as i64])?,
+        ];
+        if self.cnf {
+            args.push(literal_f32(&self.eps, &[b, self.entry.d as i64])?);
+        }
+        let result = self
+            .exe_eval
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("pjrt execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        self.n_executions.fetch_add(1, Ordering::Relaxed);
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        literal_to_f64(&out)
+    }
+
+    fn exec_vjp(&self, t: f64, x: &[f64], lam: &[f64]) -> Result<(Vec<f64>, Vec<f64>)> {
+        let b = self.entry.batch as i64;
+        let w = self.width() as i64;
+        let mut args = vec![
+            literal_f32(x, &[b, w])?,
+            xla::Literal::scalar(t as f32),
+            literal_f32(&self.params_scratch(), &[self.entry.param_len as i64])?,
+        ];
+        if self.cnf {
+            args.push(literal_f32(&self.eps, &[b, self.entry.d as i64])?);
+        }
+        args.push(literal_f32(lam, &[b, w])?);
+        let result = self
+            .exe_vjp
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("pjrt execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        self.n_executions.fetch_add(1, Ordering::Relaxed);
+        let (gx, gp) = result.to_tuple2().map_err(|e| anyhow::anyhow!("untuple2: {e:?}"))?;
+        Ok((literal_to_f64(&gx)?, literal_to_f64(&gp)?))
+    }
+
+    // The OdeSystem trait passes params per call; PJRT argument packing
+    // needs them in the closure above. We stash them per call (single-
+    // threaded hot loop) — set in eval/vjp below.
+    fn params_scratch(&self) -> Vec<f64> {
+        self.params_stash.borrow().clone()
+    }
+}
+
+impl PjrtSystem {
+    fn set_params(&self, p: &[f64]) {
+        self.params_stash.borrow_mut().clear();
+        self.params_stash.borrow_mut().extend_from_slice(p);
+    }
+}
+
+impl OdeSystem for PjrtSystem {
+    fn dim(&self) -> usize {
+        self.entry.batch * self.width()
+    }
+
+    fn n_params(&self) -> usize {
+        self.entry.param_len
+    }
+
+    fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        self.set_params(params);
+        let y = self.exec_eval(t, x).expect("pjrt eval failed");
+        out.copy_from_slice(&y);
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        self.eval(t, x, params, out);
+        Box::new(InputTrace { t, x: x.to_vec(), reported_bytes: self.entry.trace_bytes })
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let tr = trace.as_any().downcast_ref::<InputTrace>().unwrap();
+        self.set_params(params);
+        let (gx, gp) = self.exec_vjp(tr.t, &tr.x, lam).expect("pjrt vjp failed");
+        g_x.copy_from_slice(&gx);
+        for (dst, src) in g_p.iter_mut().zip(&gp) {
+            *dst += src;
+        }
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        self.entry.trace_bytes
+    }
+}

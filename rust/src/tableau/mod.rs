@@ -1,0 +1,499 @@
+//! Butcher tableaux for explicit Runge–Kutta methods.
+//!
+//! A tableau `(A, b, c)` defines the RK update of Eq. (5) in the paper:
+//!
+//! ```text
+//! X_{n,i} = x_n + h Σ_j a_{i,j} k_{n,j},   k_{n,i} = f(X_{n,i}, t_n + c_i h)
+//! x_{n+1} = x_n + h Σ_i b_i k_{n,i}
+//! ```
+//!
+//! The same tableau also determines the *symplectic adjoint* integrator of
+//! Eq. (7)/(8): the backward coefficients are derived from `(A, b)` under
+//! Condition 1, with the `I₀ = {i : b_i = 0}` set handled by `b̃_i = h`.
+//! [`Tableau::i0_set`] exposes `I₀`; several shipped tableaux exercise it
+//! (midpoint has `b₁ = 0`, dopri5 `b₂ = b₇ = 0`, dopri8 `b₂…b₅ = 0`).
+//!
+//! Adaptive methods carry an embedded error estimate; DOP853 uses its
+//! distinctive combined 5th/3rd-order estimator, reproduced here from
+//! Hairer's coefficients (generated into [`dopri8_coeffs`] by
+//! `tools/gen_dopri8.py`).
+
+pub mod dopri8_coeffs;
+
+/// How a tableau estimates local error for adaptive step control.
+#[derive(Debug, Clone)]
+pub enum ErrorSpec {
+    /// Fixed-step only (no embedded method).
+    None,
+    /// Classic embedded pair: `err = h Σ e_i k_i` with `e = b − b̂`.
+    /// `weights.len() == s`.
+    Embedded { weights: Vec<f64> },
+    /// DOP853's combined 5th/3rd-order estimate. `e3`/`e5` have length
+    /// `s + 1`; the final weight multiplies `f(t_{n+1}, x_{n+1})`.
+    Dop853 { e3: Vec<f64>, e5: Vec<f64> },
+}
+
+/// An explicit Runge–Kutta tableau.
+#[derive(Debug, Clone)]
+pub struct Tableau {
+    pub name: &'static str,
+    /// Classical order of the propagated solution.
+    pub order: u32,
+    /// Number of stages (rows of `A`).
+    pub s: usize,
+    /// Strictly lower-triangular stage matrix, row-major `s×s`.
+    pub a: Vec<f64>,
+    /// Solution weights.
+    pub b: Vec<f64>,
+    /// Stage abscissae.
+    pub c: Vec<f64>,
+    pub err: ErrorSpec,
+    /// First-same-as-last: the last stage of an accepted step equals
+    /// `f(t_{n+1}, x_{n+1})` and is reused as stage 1 of the next step.
+    pub fsal: bool,
+}
+
+impl Tableau {
+    #[inline]
+    pub fn a(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.s + j]
+    }
+
+    /// Indices `i` with `b_i = 0` — the set `I₀` of Eq. (8).
+    pub fn i0_set(&self) -> Vec<usize> {
+        (0..self.s).filter(|&i| self.b[i] == 0.0).collect()
+    }
+
+    /// Whether the tableau supports adaptive stepping.
+    pub fn adaptive(&self) -> bool {
+        !matches!(self.err, ErrorSpec::None)
+    }
+
+    /// Does the error estimate need an extra `f(t_{n+1}, x_{n+1})` eval?
+    pub fn error_uses_new_f(&self) -> bool {
+        matches!(self.err, ErrorSpec::Dop853 { .. })
+    }
+
+    /// Function evaluations per *accepted* step once the integration is
+    /// warm (FSAL stages reused). This is the paper's `s` in Table 1
+    /// (e.g. 6 for dopri5, 12 for dopri8).
+    pub fn evals_per_step(&self) -> usize {
+        let mut n = self.s;
+        if self.fsal {
+            n -= 1;
+        }
+        if self.error_uses_new_f() {
+            n += 1; // DOP853's k13 (reused as next k1 — net 12)
+        }
+        n
+    }
+
+    /// Check structural invariants (explicitness, row-sum condition).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.a.len() != self.s * self.s {
+            return Err("A has wrong size".into());
+        }
+        if self.b.len() != self.s || self.c.len() != self.s {
+            return Err("b/c have wrong size".into());
+        }
+        for i in 0..self.s {
+            for j in i..self.s {
+                if self.a(i, j) != 0.0 {
+                    return Err(format!("not explicit: a[{i}][{j}] != 0"));
+                }
+            }
+        }
+        // Row-sum condition c_i = Σ_j a_ij (all shipped tableaux satisfy it).
+        for i in 0..self.s {
+            let row: f64 = (0..self.s).map(|j| self.a(i, j)).sum();
+            if (row - self.c[i]).abs() > 1e-12 {
+                return Err(format!("row-sum violated at stage {i}: {row} vs {}", self.c[i]));
+            }
+        }
+        if let ErrorSpec::Embedded { weights } = &self.err {
+            if weights.len() != self.s {
+                return Err("embedded weights have wrong size".into());
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // The shipped methods
+    // ------------------------------------------------------------------
+
+    /// Forward Euler (order 1, fixed-step).
+    pub fn euler() -> Tableau {
+        Tableau {
+            name: "euler",
+            order: 1,
+            s: 1,
+            a: vec![0.0],
+            b: vec![1.0],
+            c: vec![0.0],
+            err: ErrorSpec::None,
+            fsal: false,
+        }
+    }
+
+    /// Explicit midpoint (order 2, fixed-step). Note `b₁ = 0`, so this is
+    /// the smallest method exercising the `I₀` branch of Eq. (7).
+    pub fn midpoint() -> Tableau {
+        Tableau {
+            name: "midpoint",
+            order: 2,
+            s: 2,
+            a: vec![0.0, 0.0, 0.5, 0.0],
+            b: vec![0.0, 1.0],
+            c: vec![0.0, 0.5],
+            err: ErrorSpec::None,
+            fsal: false,
+        }
+    }
+
+    /// The classic RK4 (order 4, fixed-step).
+    pub fn rk4() -> Tableau {
+        #[rustfmt::skip]
+        let a = vec![
+            0.0, 0.0, 0.0, 0.0,
+            0.5, 0.0, 0.0, 0.0,
+            0.0, 0.5, 0.0, 0.0,
+            0.0, 0.0, 1.0, 0.0,
+        ];
+        Tableau {
+            name: "rk4",
+            order: 4,
+            s: 4,
+            a,
+            b: vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+            c: vec![0.0, 0.5, 0.5, 1.0],
+            err: ErrorSpec::None,
+            fsal: false,
+        }
+    }
+
+    /// Heun–Euler 2(1) — torchdiffeq's `adaptive_heun` (`p=2, s=2` in the
+    /// paper's Table 3).
+    pub fn heun_euler() -> Tableau {
+        let b = vec![0.5, 0.5];
+        let bh = vec![1.0, 0.0];
+        let weights = b.iter().zip(&bh).map(|(x, y)| x - y).collect();
+        Tableau {
+            name: "heun_euler",
+            order: 2,
+            s: 2,
+            a: vec![0.0, 0.0, 1.0, 0.0],
+            b,
+            c: vec![0.0, 1.0],
+            err: ErrorSpec::Embedded { weights },
+            fsal: false,
+        }
+    }
+
+    /// Bogacki–Shampine 3(2) — torchdiffeq's `bosh3` (`p=3, s=3`; FSAL).
+    pub fn bosh3() -> Tableau {
+        #[rustfmt::skip]
+        let a = vec![
+            0.0,       0.0,       0.0,       0.0,
+            0.5,       0.0,       0.0,       0.0,
+            0.0,       0.75,      0.0,       0.0,
+            2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0,
+        ];
+        let b = vec![2.0 / 9.0, 1.0 / 3.0, 4.0 / 9.0, 0.0];
+        let bh = vec![7.0 / 24.0, 0.25, 1.0 / 3.0, 0.125];
+        let weights = b.iter().zip(&bh).map(|(x, y)| x - y).collect();
+        Tableau {
+            name: "bosh3",
+            order: 3,
+            s: 4,
+            a,
+            b,
+            c: vec![0.0, 0.5, 0.75, 1.0],
+            err: ErrorSpec::Embedded { weights },
+            fsal: true,
+        }
+    }
+
+    /// Dormand–Prince 5(4) — torchdiffeq's `dopri5`, the paper's default
+    /// integrator (`p=5, s=6` thanks to FSAL; `b₂ = b₇ = 0` puts two
+    /// stages in `I₀`).
+    pub fn dopri5() -> Tableau {
+        let s = 7;
+        let mut a = vec![0.0; s * s];
+        let rows: [&[f64]; 7] = [
+            &[],
+            &[1.0 / 5.0],
+            &[3.0 / 40.0, 9.0 / 40.0],
+            &[44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0],
+            &[19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0],
+            &[9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0],
+            &[35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0],
+        ];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                a[i * s + j] = v;
+            }
+        }
+        let b = vec![
+            35.0 / 384.0,
+            0.0,
+            500.0 / 1113.0,
+            125.0 / 192.0,
+            -2187.0 / 6784.0,
+            11.0 / 84.0,
+            0.0,
+        ];
+        let bh = vec![
+            5179.0 / 57600.0,
+            0.0,
+            7571.0 / 16695.0,
+            393.0 / 640.0,
+            -92097.0 / 339200.0,
+            187.0 / 2100.0,
+            1.0 / 40.0,
+        ];
+        let weights = b.iter().zip(&bh).map(|(x, y)| x - y).collect();
+        Tableau {
+            name: "dopri5",
+            order: 5,
+            s,
+            a,
+            b,
+            c: vec![0.0, 0.2, 0.3, 0.8, 8.0 / 9.0, 1.0, 1.0],
+            err: ErrorSpec::Embedded { weights },
+            fsal: true,
+        }
+    }
+
+    /// Fehlberg 4(5) — the classic RKF45 (order 5 propagated here, as in
+    /// scipy's convention of advancing with the higher-order solution).
+    /// Not FSAL; `b₂ = 0` exercises `I₀`.
+    pub fn fehlberg45() -> Tableau {
+        let s = 6;
+        let mut a = vec![0.0; s * s];
+        let rows: [&[f64]; 6] = [
+            &[],
+            &[1.0 / 4.0],
+            &[3.0 / 32.0, 9.0 / 32.0],
+            &[1932.0 / 2197.0, -7200.0 / 2197.0, 7296.0 / 2197.0],
+            &[439.0 / 216.0, -8.0, 3680.0 / 513.0, -845.0 / 4104.0],
+            &[-8.0 / 27.0, 2.0, -3544.0 / 2565.0, 1859.0 / 4104.0, -11.0 / 40.0],
+        ];
+        for (i, row) in rows.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                a[i * s + j] = v;
+            }
+        }
+        let b = vec![
+            16.0 / 135.0,
+            0.0,
+            6656.0 / 12825.0,
+            28561.0 / 56430.0,
+            -9.0 / 50.0,
+            2.0 / 55.0,
+        ];
+        let bh = vec![
+            25.0 / 216.0,
+            0.0,
+            1408.0 / 2565.0,
+            2197.0 / 4104.0,
+            -1.0 / 5.0,
+            0.0,
+        ];
+        let weights = b.iter().zip(&bh).map(|(x, y)| x - y).collect();
+        Tableau {
+            name: "fehlberg45",
+            order: 5,
+            s,
+            a,
+            b,
+            c: vec![0.0, 0.25, 0.375, 12.0 / 13.0, 1.0, 0.5],
+            err: ErrorSpec::Embedded { weights },
+            fsal: false,
+        }
+    }
+
+    /// Hairer's 8th-order Dormand–Prince (DOP853) — torchdiffeq's `dopri8`
+    /// (`p=8, s=12`; `b₂…b₅ = 0` gives a four-element `I₀`).
+    pub fn dopri8() -> Tableau {
+        use dopri8_coeffs as d;
+        let s = d::S;
+        let mut a = vec![0.0; s * s];
+        for i in 0..s {
+            for j in 0..s {
+                a[i * s + j] = d::A[i][j];
+            }
+        }
+        Tableau {
+            name: "dopri8",
+            order: 8,
+            s,
+            a,
+            b: d::B.to_vec(),
+            c: d::C.to_vec(),
+            err: ErrorSpec::Dop853 {
+                e3: d::E3.to_vec(),
+                e5: d::E5.to_vec(),
+            },
+            fsal: true, // k13 = f(t+h, x_{n+1}) is computed for the error estimate and reused
+        }
+    }
+
+    /// Look up a tableau by its CLI/config name.
+    pub fn by_name(name: &str) -> Option<Tableau> {
+        Some(match name {
+            "euler" => Tableau::euler(),
+            "midpoint" => Tableau::midpoint(),
+            "rk4" => Tableau::rk4(),
+            "heun_euler" | "adaptive_heun" | "heun" => Tableau::heun_euler(),
+            "bosh3" => Tableau::bosh3(),
+            "dopri5" => Tableau::dopri5(),
+            "fehlberg45" | "rkf45" => Tableau::fehlberg45(),
+            "dopri8" | "dop853" => Tableau::dopri8(),
+            _ => return None,
+        })
+    }
+
+    /// All shipped tableaux (used by sweep tests and Table 3).
+    pub fn all() -> Vec<Tableau> {
+        vec![
+            Tableau::euler(),
+            Tableau::midpoint(),
+            Tableau::rk4(),
+            Tableau::heun_euler(),
+            Tableau::bosh3(),
+            Tableau::dopri5(),
+            Tableau::fehlberg45(),
+            Tableau::dopri8(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tableaux_validate() {
+        for t in Tableau::all() {
+            t.validate().unwrap_or_else(|e| panic!("{}: {e}", t.name));
+        }
+    }
+
+    /// First-order condition Σ b_i = 1 for every method.
+    #[test]
+    fn order1_condition() {
+        for t in Tableau::all() {
+            let sum: f64 = t.b.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-12, "{}: Σb = {sum}", t.name);
+        }
+    }
+
+    /// Σ b_i c_i = 1/2 for every method of order ≥ 2.
+    #[test]
+    fn order2_condition() {
+        for t in Tableau::all().into_iter().filter(|t| t.order >= 2) {
+            let sum: f64 = t.b.iter().zip(&t.c).map(|(b, c)| b * c).sum();
+            assert!((sum - 0.5).abs() < 1e-12, "{}: Σbc = {sum}", t.name);
+        }
+    }
+
+    /// Order-3 conditions: Σ b c² = 1/3 and Σ b_i a_ij c_j = 1/6.
+    #[test]
+    fn order3_conditions() {
+        for t in Tableau::all().into_iter().filter(|t| t.order >= 3) {
+            let s1: f64 = t.b.iter().zip(&t.c).map(|(b, c)| b * c * c).sum();
+            assert!((s1 - 1.0 / 3.0).abs() < 1e-12, "{}: Σbc² = {s1}", t.name);
+            let mut s2 = 0.0;
+            for i in 0..t.s {
+                for j in 0..t.s {
+                    s2 += t.b[i] * t.a(i, j) * t.c[j];
+                }
+            }
+            assert!((s2 - 1.0 / 6.0).abs() < 1e-12, "{}: Σb·A·c = {s2}", t.name);
+        }
+    }
+
+    /// Order-4 conditions (the remaining four trees).
+    #[test]
+    fn order4_conditions() {
+        for t in Tableau::all().into_iter().filter(|t| t.order >= 4) {
+            let s = t.s;
+            let mut t1 = 0.0; // Σ b c³ = 1/4
+            let mut t2 = 0.0; // Σ b_i c_i a_ij c_j = 1/8
+            let mut t3 = 0.0; // Σ b_i a_ij c_j² = 1/12
+            let mut t4 = 0.0; // Σ b_i a_ij a_jk c_k = 1/24
+            for i in 0..s {
+                t1 += t.b[i] * t.c[i].powi(3);
+                for j in 0..s {
+                    t2 += t.b[i] * t.c[i] * t.a(i, j) * t.c[j];
+                    t3 += t.b[i] * t.a(i, j) * t.c[j] * t.c[j];
+                    for k in 0..s {
+                        t4 += t.b[i] * t.a(i, j) * t.a(j, k) * t.c[k];
+                    }
+                }
+            }
+            assert!((t1 - 0.25).abs() < 1e-12, "{}: {t1}", t.name);
+            assert!((t2 - 0.125).abs() < 1e-12, "{}: {t2}", t.name);
+            assert!((t3 - 1.0 / 12.0).abs() < 1e-12, "{}: {t3}", t.name);
+            assert!((t4 - 1.0 / 24.0).abs() < 1e-12, "{}: {t4}", t.name);
+        }
+    }
+
+    #[test]
+    fn i0_sets_match_paper() {
+        assert_eq!(Tableau::midpoint().i0_set(), vec![0]);
+        assert_eq!(Tableau::dopri5().i0_set(), vec![1, 6]);
+        assert_eq!(Tableau::bosh3().i0_set(), vec![3]);
+        // DOP853: b₂…b₅ (0-based 1..=4) vanish.
+        assert_eq!(Tableau::dopri8().i0_set(), vec![1, 2, 3, 4]);
+        assert!(Tableau::rk4().i0_set().is_empty());
+    }
+
+    #[test]
+    fn evals_per_step_match_paper_s() {
+        // Table 3 of the paper: s = 2, 3, 6, 12.
+        assert_eq!(Tableau::heun_euler().evals_per_step(), 2);
+        assert_eq!(Tableau::bosh3().evals_per_step(), 3);
+        assert_eq!(Tableau::dopri5().evals_per_step(), 6);
+        assert_eq!(Tableau::dopri8().evals_per_step(), 12);
+    }
+
+    #[test]
+    fn fsal_rows_equal_b() {
+        for t in [Tableau::bosh3(), Tableau::dopri5()] {
+            let last = t.s - 1;
+            for j in 0..t.s {
+                assert!(
+                    (t.a(last, j) - t.b[j]).abs() < 1e-15,
+                    "{}: a[last][{j}] != b[{j}]",
+                    t.name
+                );
+            }
+            assert_eq!(t.c[last], 1.0);
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(Tableau::by_name("dopri5").is_some());
+        assert!(Tableau::by_name("adaptive_heun").is_some());
+        assert!(Tableau::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dop853_error_weights_sane() {
+        let t = Tableau::dopri8();
+        if let ErrorSpec::Dop853 { e3, e5 } = &t.err {
+            assert_eq!(e3.len(), t.s + 1);
+            assert_eq!(e5.len(), t.s + 1);
+            // error weights must each sum to ~0 (consistency of the pair)
+            let s3: f64 = e3.iter().sum();
+            let s5: f64 = e5.iter().sum();
+            assert!(s3.abs() < 1e-12, "Σe3 = {s3}");
+            assert!(s5.abs() < 1e-12, "Σe5 = {s5}");
+        } else {
+            panic!("dopri8 must use the Dop853 error spec");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Property-test helpers (a light stand-in for `proptest`, which is not
+//! available in the offline build environment).
+//!
+//! Tests express "for all" properties as seeded sweeps: a [`Sweep`] runs a
+//! closure over `n` reproducible random cases and reports the failing seed
+//! on panic, so failures can be replayed by constructing `Rng::new(seed)`.
+
+use crate::util::Rng;
+
+/// Runs a property over `n` seeded cases; on failure the panic message
+/// contains the case index and seed for replay.
+pub struct Sweep {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Sweep {
+    pub fn new(cases: usize) -> Sweep {
+        Sweep { cases, seed: 0x5EED }
+    }
+
+    pub fn with_seed(cases: usize, seed: u64) -> Sweep {
+        Sweep { cases, seed }
+    }
+
+    /// Run `prop` for each case with a fresh, case-specific RNG.
+    pub fn run(&self, mut prop: impl FnMut(&mut Rng)) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng);
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!("property failed at case {case} (seed {case_seed:#x}): {msg}");
+            }
+        }
+    }
+}
+
+/// Assert two slices are elementwise close with mixed abs/rel tolerance.
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let denom = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * denom,
+            "{ctx}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Central finite-difference gradient of a scalar function.
+pub fn fd_gradient(f: impl Fn(&[f64]) -> f64, x: &[f64], eps: f64) -> Vec<f64> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let orig = xp[i];
+        xp[i] = orig + eps;
+        let fp = f(&xp);
+        xp[i] = orig - eps;
+        let fm = f(&xp);
+        xp[i] = orig;
+        g[i] = (fp - fm) / (2.0 * eps);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_runs_all_cases() {
+        let mut count = 0;
+        Sweep::new(17).run(|_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn sweep_cases_are_deterministic() {
+        let mut first = Vec::new();
+        Sweep::new(5).run(|rng| first.push(rng.next_u64()));
+        let mut second = Vec::new();
+        Sweep::new(5).run(|rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn sweep_reports_failing_case() {
+        Sweep::new(10).run(|rng| {
+            let v = rng.uniform();
+            assert!(v >= 0.0); // always true
+            if rng.below(3) == 0 {
+                panic!("intentional");
+            }
+        });
+    }
+
+    #[test]
+    fn fd_gradient_of_quadratic() {
+        let g = fd_gradient(|x| x.iter().map(|v| v * v).sum(), &[1.0, -2.0], 1e-6);
+        assert_all_close(&g, &[2.0, -4.0], 1e-8, "fd");
+    }
+}

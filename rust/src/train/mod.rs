@@ -1,0 +1,334 @@
+//! Training loops: CNF stacks (§5.1) and PDE models (§5.2).
+//!
+//! The trainer owns the per-component parameters and optimizer states and
+//! drives one [`crate::adjoint::GradientMethod`] per step, aggregating the
+//! per-component memory/cost stats the way a single-process framework
+//! would experience them (see [`StackStats::aggregate`]).
+
+use crate::adjoint::{GradResult, GradientMethod};
+use crate::cnf::{CnfNllLoss, CnfSystem, Dataset};
+use crate::integrate::SolverConfig;
+use crate::nn::{Adam, Optimizer};
+use crate::ode::losses::{LinearLoss, MseLoss};
+use crate::ode::Loss;
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Aggregated stats of one training step across `M` stacked components.
+#[derive(Debug, Clone, Default)]
+pub struct StackStats {
+    pub loss: f64,
+    pub peak_mem_bytes: u64,
+    pub nfe_forward: usize,
+    pub nfe_backward: usize,
+    pub n_steps_forward: usize,
+    pub n_steps_backward: usize,
+    pub wall_seconds: f64,
+}
+
+impl StackStats {
+    /// Combine per-component gradient stats into a training-step peak.
+    ///
+    /// In a single-process framework the retained structures of stacked
+    /// components coexist: naive backprop holds all `M` graphs at once, the
+    /// checkpointing schemes hold all `M` checkpoint trails, while the
+    /// transient per-stage tape of ACA/symplectic/adjoint exists for one
+    /// component at a time. We therefore **sum checkpoint bytes and sum
+    /// retained-tape peaks for graph-retaining methods, but take the max of
+    /// transient tape peaks**, mirroring `torch.cuda.max_memory_allocated`
+    /// over the PyTorch reference implementations.
+    pub fn aggregate(results: &[GradResult], graph_retaining: bool, wall: f64) -> StackStats {
+        let mut s = StackStats { wall_seconds: wall, ..Default::default() };
+        let mut tape_sum = 0u64;
+        let mut tape_max = 0u64;
+        let mut ckpt_sum = 0u64;
+        let mut other_max = 0u64;
+        for r in results {
+            s.loss = r.loss; // the final component's loss is the objective
+            s.nfe_forward += r.stats.nfe_forward;
+            s.nfe_backward += r.stats.nfe_backward;
+            s.n_steps_forward += r.stats.n_steps_forward;
+            s.n_steps_backward += r.stats.n_steps_backward;
+            tape_sum += r.stats.peak_tape_bytes;
+            tape_max = tape_max.max(r.stats.peak_tape_bytes);
+            ckpt_sum += r.stats.peak_checkpoint_bytes;
+            other_max = other_max.max(
+                r.stats
+                    .peak_mem_bytes
+                    .saturating_sub(r.stats.peak_tape_bytes + r.stats.peak_checkpoint_bytes),
+            );
+        }
+        let tape = if graph_retaining { tape_sum } else { tape_max };
+        s.peak_mem_bytes = tape + ckpt_sum + other_max;
+        s
+    }
+}
+
+/// Trainer for a stack of `M` CNF components sharing one dataset.
+pub struct CnfTrainer {
+    pub stack: Vec<CnfSystem>,
+    pub params: Vec<Vec<f64>>,
+    pub opts: Vec<Adam>,
+    pub cfg: SolverConfig,
+    pub t1: f64,
+}
+
+impl CnfTrainer {
+    pub fn new(m: usize, dims: &[usize], batch: usize, cfg: SolverConfig, seed: u64) -> CnfTrainer {
+        let mut stack = Vec::new();
+        let mut params = Vec::new();
+        let mut opts = Vec::new();
+        for i in 0..m {
+            let sys = CnfSystem::new(dims, batch, crate::cnf::TraceEstimator::Hutchinson);
+            params.push(sys.init_params(seed.wrapping_add(i as u64 * 7919)));
+            opts.push(Adam::new(1e-3));
+            stack.push(sys);
+        }
+        CnfTrainer { stack, params, opts, cfg, t1: 1.0 }
+    }
+
+    pub fn d(&self) -> usize {
+        self.stack[0].d
+    }
+
+    pub fn batch(&self) -> usize {
+        self.stack[0].batch
+    }
+
+    /// Lift a `[b, d]` data batch into the augmented `[b, d+1]` state.
+    pub fn augment(&self, x: &[f64]) -> Vec<f64> {
+        let (b, d) = (self.batch(), self.d());
+        let mut z = vec![0.0; b * (d + 1)];
+        for row in 0..b {
+            z[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&x[row * d..(row + 1) * d]);
+        }
+        z
+    }
+
+    /// Forward through all components (no gradient), returning the final
+    /// augmented state.
+    pub fn forward(&self, z0: &[f64]) -> Vec<f64> {
+        let mut z = z0.to_vec();
+        for (sys, p) in self.stack.iter().zip(&self.params) {
+            let sol = crate::integrate::solve_ivp(sys, p, &z, 0.0, self.t1, &self.cfg);
+            z = sol.final_state().to_vec();
+        }
+        z
+    }
+
+    /// Mean NLL of a `[b, d]` batch under the current model.
+    pub fn nll_of_batch(&self, x: &[f64]) -> f64 {
+        let z = self.forward(&self.augment(x));
+        CnfNllLoss { batch: self.batch(), d: self.d() }.loss(&z)
+    }
+
+    /// Mean NLL over (a prefix of) a dataset, batched deterministically.
+    pub fn eval_nll(&self, data: &Dataset, max_batches: usize) -> f64 {
+        let b = self.batch();
+        let n_batches = (data.n / b).clamp(1, max_batches);
+        let mut acc = 0.0;
+        for i in 0..n_batches {
+            acc += self.nll_of_batch(&data.batch_at(i * b, b));
+        }
+        acc / n_batches as f64
+    }
+
+    /// One training step with the given gradient method: forward chain,
+    /// per-component backward (chained adjoint seeds), Adam update.
+    pub fn train_step(
+        &mut self,
+        x_batch: &[f64],
+        method: &dyn GradientMethod,
+        rng: &mut Rng,
+    ) -> anyhow::Result<StackStats> {
+        let start = Instant::now();
+        let m = self.stack.len();
+        let (b, d) = (self.batch(), self.d());
+        for sys in self.stack.iter_mut() {
+            sys.resample_eps(rng);
+        }
+
+        // forward chain, recording component inputs
+        let mut inputs = Vec::with_capacity(m);
+        let mut z = self.augment(x_batch);
+        for i in 0..m {
+            inputs.push(z.clone());
+            let sol = crate::integrate::solve_ivp(&self.stack[i], &self.params[i], &z, 0.0, self.t1, &self.cfg);
+            z = sol.final_state().to_vec();
+        }
+
+        // backward chain: component M gets the NLL loss; earlier components
+        // get the linear loss seeded by the next component's ∂L/∂x₀.
+        let mut results: Vec<Option<GradResult>> = (0..m).map(|_| None).collect();
+        let mut seed_grad: Option<Vec<f64>> = None;
+        let mut final_loss = 0.0;
+        for i in (0..m).rev() {
+            let res = match &seed_grad {
+                None => {
+                    let loss = CnfNllLoss { batch: b, d };
+                    let r = method.gradient(
+                        &self.stack[i],
+                        &self.params[i],
+                        &inputs[i],
+                        0.0,
+                        self.t1,
+                        &self.cfg,
+                        &loss,
+                    )?;
+                    final_loss = r.loss;
+                    r
+                }
+                Some(w) => {
+                    let loss = LinearLoss { w: w.clone() };
+                    method.gradient(
+                        &self.stack[i],
+                        &self.params[i],
+                        &inputs[i],
+                        0.0,
+                        self.t1,
+                        &self.cfg,
+                        &loss,
+                    )?
+                }
+            };
+            seed_grad = Some(res.grad_x0.clone());
+            results[i] = Some(res);
+        }
+
+        // optimizer updates
+        for i in 0..m {
+            let g = results[i].as_ref().unwrap().grad_params.clone();
+            self.opts[i].step(&mut self.params[i], &g);
+        }
+
+        let flat: Vec<GradResult> = results.into_iter().map(|r| r.unwrap()).collect();
+        let graph_retaining = matches!(method.name(), "backprop" | "baseline");
+        let mut stats =
+            StackStats::aggregate(&flat, graph_retaining, start.elapsed().as_secs_f64());
+        stats.loss = final_loss;
+        Ok(stats)
+    }
+}
+
+/// Trainer for the §5.2 PDE models: interpolate successive snapshots.
+pub struct PhysicsTrainer {
+    pub sys: crate::physics::HnnSystem,
+    pub params: Vec<f64>,
+    pub opt: Adam,
+    pub cfg: SolverConfig,
+    /// Time between snapshots (the integration horizon of each pair).
+    pub dt: f64,
+}
+
+impl PhysicsTrainer {
+    pub fn new(sys: crate::physics::HnnSystem, cfg: SolverConfig, dt: f64, seed: u64) -> Self {
+        let params = sys.init_params(seed);
+        PhysicsTrainer { sys, params, opt: Adam::new(1e-3), cfg, dt }
+    }
+
+    /// One step on a batch of snapshot pairs (`u_t → u_{t+dt}`), flattened
+    /// `[batch, grid]`.
+    pub fn train_step(
+        &mut self,
+        u0: &[f64],
+        u1: &[f64],
+        method: &dyn GradientMethod,
+    ) -> anyhow::Result<StackStats> {
+        let start = Instant::now();
+        let loss = MseLoss::new(u1.to_vec());
+        let r = method.gradient(&self.sys, &self.params, u0, 0.0, self.dt, &self.cfg, &loss)?;
+        self.opt.step(&mut self.params, &r.grad_params);
+        let graph_retaining = matches!(method.name(), "backprop" | "baseline");
+        Ok(StackStats::aggregate(
+            &[r],
+            graph_retaining,
+            start.elapsed().as_secs_f64(),
+        ))
+    }
+
+    /// Long-term prediction MSE from `u0` against ground-truth snapshots.
+    pub fn rollout_mse(&self, u0: &[f64], truth: &[&[f64]]) -> f64 {
+        let mut u = u0.to_vec();
+        let mut acc = 0.0;
+        for snap in truth {
+            let sol = crate::integrate::solve_ivp(&self.sys, &self.params, &u, 0.0, self.dt, &self.cfg);
+            u = sol.final_state().to_vec();
+            acc += crate::util::stats::mse(&u, snap);
+        }
+        acc / truth.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::SymplecticAdjoint;
+    use crate::cnf::TabularSpec;
+    use crate::physics::{GOperator, HnnSystem};
+    use crate::tableau::Tableau;
+
+    /// A few CNF steps on a tiny 2-D problem must reduce the NLL.
+    #[test]
+    fn cnf_training_reduces_nll() {
+        let spec = TabularSpec { name: "tiny", d: 2, m: 1, modes: 2, hidden: 16 };
+        let data = spec.generate(256, 42);
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+        let mut trainer = CnfTrainer::new(1, &[2, 16, 2], 32, cfg, 1);
+        let mut rng = Rng::new(2);
+
+        let before = trainer.eval_nll(&data, 4);
+        let method = SymplecticAdjoint;
+        for _ in 0..30 {
+            let xb = data.minibatch(32, &mut rng);
+            trainer.train_step(&xb, &method, &mut rng).unwrap();
+        }
+        let after = trainer.eval_nll(&data, 4);
+        assert!(
+            after < before - 0.05,
+            "NLL did not improve: {before} -> {after}"
+        );
+    }
+
+    /// Stacked components (M = 2) train and chain gradients correctly
+    /// (loss decreases through both).
+    #[test]
+    fn stacked_cnf_trains() {
+        let spec = TabularSpec { name: "tiny2", d: 2, m: 2, modes: 2, hidden: 12 };
+        let data = spec.generate(128, 5);
+        let cfg = SolverConfig::fixed(Tableau::bosh3(), 0.25);
+        let mut trainer = CnfTrainer::new(2, &[2, 12, 2], 16, cfg, 3);
+        let mut rng = Rng::new(4);
+        let before = trainer.eval_nll(&data, 2);
+        for _ in 0..25 {
+            let xb = data.minibatch(16, &mut rng);
+            trainer.train_step(&xb, &SymplecticAdjoint, &mut rng).unwrap();
+        }
+        let after = trainer.eval_nll(&data, 2);
+        assert!(after < before, "{before} -> {after}");
+    }
+
+    /// Physics training on a generated KdV pair reduces one-step MSE.
+    #[test]
+    fn physics_training_reduces_mse() {
+        let traj = crate::physics::generate_kdv(32, 4, 0.02, 0.3, 9);
+        let dx = traj.domain_len / traj.grid as f64;
+        let sys = HnnSystem::new(32, 1, 3, 4, GOperator::Dx, dx);
+        let cfg = SolverConfig::fixed(Tableau::rk4(), 0.01);
+        let mut trainer = PhysicsTrainer::new(sys, cfg, traj.dt_snap, 7);
+        trainer.opt = Adam::new(1e-2); // small problem: larger lr converges in few steps
+
+        let u0 = traj.snapshot(0).to_vec();
+        let u1 = traj.snapshot(1).to_vec();
+        let mse_of = |tr: &PhysicsTrainer| {
+            let sol =
+                crate::integrate::solve_ivp(&tr.sys, &tr.params, &u0, 0.0, tr.dt, &tr.cfg);
+            crate::util::stats::mse(sol.final_state(), &u1)
+        };
+        let before = mse_of(&trainer);
+        for _ in 0..40 {
+            trainer.train_step(&u0, &u1, &SymplecticAdjoint).unwrap();
+        }
+        let after = mse_of(&trainer);
+        assert!(after < before * 0.9, "{before} -> {after}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so general-purpose utility crates (`rand`, `serde`,
+//! `criterion`, …) are unavailable. The pieces we actually need are small
+//! and are implemented (and tested) here instead:
+//!
+//! - [`rng`]: a seedable, reproducible PCG-family random generator.
+//! - [`json`]: a minimal JSON value type with writer and parser, used for
+//!   experiment results and the artifact manifest.
+//! - [`stats`]: medians/means/std-devs for reporting experiment rows.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,134 @@
+//! Integration tests over the PJRT runtime: artifacts → compile → execute
+//! → gradient methods, and cross-backend agreement with the native tape.
+//!
+//! These tests skip (pass trivially) when `artifacts/` has not been built
+//! (`make artifacts`); CI runs them after the artifact step.
+
+use sympode::adjoint::{BackpropMethod, GradientMethod, SymplecticAdjoint};
+use sympode::cnf::{CnfNllLoss, CnfSystem, TraceEstimator};
+use sympode::integrate::SolverConfig;
+use sympode::nn::Mlp;
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::runtime::PjrtRuntime;
+use sympode::tableau::Tableau;
+use sympode::util::stats::rel_l2;
+use sympode::util::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::cpu(dir).expect("pjrt runtime"))
+}
+
+/// PJRT f_eval must match the native MLP to f32 accuracy with shared
+/// parameters (the layouts are pinned to each other).
+#[test]
+fn pjrt_field_matches_native_backend() {
+    let Some(rt) = runtime() else { return };
+    let sys = rt.system("small", false).unwrap();
+    let (b, d) = (sys.entry.batch, sys.entry.d);
+
+    let native = NativeMlpSystem::with_batch(&[d, sys.entry.dims[1], d], b, 0);
+    assert_eq!(native.n_params(), sys.n_params(), "param layouts must agree");
+    let p = native.init_params();
+    let mut rng = Rng::new(3);
+    let x = rng.normal_vec(sys.dim());
+
+    let mut out_pjrt = vec![0.0; sys.dim()];
+    sys.eval(0.4, &x, &p, &mut out_pjrt);
+    let mut out_native = vec![0.0; native.dim()];
+    native.eval(0.4, &x, &p, &mut out_native);
+    let err = rel_l2(&out_pjrt, &out_native);
+    assert!(err < 1e-5, "field mismatch: {err}");
+}
+
+/// PJRT VJP artifact vs the native backward pass.
+#[test]
+fn pjrt_vjp_matches_native_backend() {
+    let Some(rt) = runtime() else { return };
+    let sys = rt.system("small", false).unwrap();
+    let (b, d) = (sys.entry.batch, sys.entry.d);
+    let native = NativeMlpSystem::with_batch(&[d, sys.entry.dims[1], d], b, 0);
+    let p = native.init_params();
+    let mut rng = Rng::new(4);
+    let x = rng.normal_vec(sys.dim());
+    let lam = rng.normal_vec(sys.dim());
+
+    let mut gx_p = vec![0.0; sys.dim()];
+    let mut gp_p = vec![0.0; sys.n_params()];
+    sys.vjp(0.2, &x, &p, &lam, &mut gx_p, &mut gp_p);
+
+    let mut gx_n = vec![0.0; native.dim()];
+    let mut gp_n = vec![0.0; native.n_params()];
+    native.vjp(0.2, &x, &p, &lam, &mut gx_n, &mut gp_n);
+
+    assert!(rel_l2(&gx_p, &gx_n) < 1e-4, "g_x mismatch: {}", rel_l2(&gx_p, &gx_n));
+    assert!(rel_l2(&gp_p, &gp_n) < 1e-4, "g_p mismatch: {}", rel_l2(&gp_p, &gp_n));
+}
+
+/// Every gradient method runs unchanged on the PJRT backend, and the
+/// exact methods agree with each other (f32-level: the artifacts compute
+/// in f32).
+#[test]
+fn gradient_methods_work_on_pjrt_backend() {
+    let Some(rt) = runtime() else { return };
+    let sys = rt.system("small", false).unwrap();
+    let p = {
+        let d = sys.entry.d;
+        let net = Mlp::new(&[d + 1, sys.entry.dims[1], d]);
+        let mut rng = Rng::new(5);
+        net.init_params(&mut rng)
+    };
+    let mut rng = Rng::new(6);
+    let x0 = rng.normal_vec(sys.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+
+    let bp = BackpropMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+    let sa = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+    let err = rel_l2(&sa.grad_params, &bp.grad_params);
+    // f32 artifacts: agreement bounded by single-precision rounding
+    assert!(err < 1e-5, "symplectic vs backprop on PJRT: {err}");
+    assert!(sa.stats.peak_tape_bytes < bp.stats.peak_tape_bytes);
+}
+
+/// The CNF artifacts (Hutchinson dynamics + second-order VJP) against the
+/// native tape CNF.
+#[test]
+fn pjrt_cnf_matches_native_tape() {
+    let Some(rt) = runtime() else { return };
+    let mut sys = rt.system("small", true).unwrap();
+    let (b, d) = (sys.entry.batch, sys.entry.d);
+    let mut rng = Rng::new(7);
+    sys.resample_eps(&mut rng);
+
+    let mut native = CnfSystem::new(&sys.entry.dims, b, TraceEstimator::Hutchinson);
+    native.eps = sys.eps.clone();
+    let p = native.init_params(8);
+
+    let z = rng.normal_vec(sys.dim());
+    let mut out_p = vec![0.0; sys.dim()];
+    sys.eval(0.1, &z, &p, &mut out_p);
+    let mut out_n = vec![0.0; native.dim()];
+    native.eval(0.1, &z, &p, &mut out_n);
+    assert!(rel_l2(&out_p, &out_n) < 1e-4, "cnf eval: {}", rel_l2(&out_p, &out_n));
+
+    let lam = rng.normal_vec(sys.dim());
+    let mut gx_p = vec![0.0; sys.dim()];
+    let mut gp_p = vec![0.0; sys.n_params()];
+    sys.vjp(0.1, &z, &p, &lam, &mut gx_p, &mut gp_p);
+    let mut gx_n = vec![0.0; native.dim()];
+    let mut gp_n = vec![0.0; native.n_params()];
+    native.vjp(0.1, &z, &p, &lam, &mut gx_n, &mut gp_n);
+    assert!(rel_l2(&gp_p, &gp_n) < 1e-3, "cnf vjp θ: {}", rel_l2(&gp_p, &gp_n));
+
+    // and a full NLL gradient through the solver
+    let loss = CnfNllLoss { batch: b, d };
+    let cfg = SolverConfig::fixed(Tableau::bosh3(), 0.5);
+    let g = SymplecticAdjoint.gradient(&sys, &p, &z, 0.0, 1.0, &cfg, &loss).unwrap();
+    assert!(g.loss.is_finite());
+    assert!(g.grad_params.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,316 @@
+//! Property-based sweeps over the whole stack (seeded cases via
+//! `testkit::Sweep`; failures report the case seed for replay).
+
+use sympode::adjoint::{
+    AcaMethod, BackpropMethod, GradientMethod, MaliMethod, SegmentCheckpoint, SymplecticAdjoint,
+};
+use sympode::cnf::{CnfNllLoss, CnfSystem, TraceEstimator};
+use sympode::integrate::{alf, solve_ivp, SolverConfig};
+use sympode::ode::losses::{LinearLoss, SumLoss};
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::physics::{GOperator, HnnSystem};
+use sympode::tableau::Tableau;
+use sympode::testkit::Sweep;
+use sympode::util::stats::rel_l2;
+use sympode::util::Rng;
+use sympode::ode::Loss;
+
+fn random_tableau(rng: &mut Rng) -> Tableau {
+    let all = Tableau::all();
+    all[rng.below(all.len())].clone()
+}
+
+/// For every tableau and random problem: the symplectic adjoint equals
+/// backprop to rounding — with random dims, batch, horizon, direction of
+/// loss, and fixed or adaptive stepping.
+#[test]
+fn exactness_sweep() {
+    Sweep::new(12).run(|rng| {
+        let d = 1 + rng.below(4);
+        let hidden = 4 + rng.below(16);
+        let batch = 1 + rng.below(3);
+        let sys = NativeMlpSystem::with_batch(&[d, hidden, d], batch, 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(sys.dim());
+        let w = rng.normal_vec(sys.dim());
+        let loss = LinearLoss { w };
+        let t1 = 0.2 + rng.uniform();
+        let tab = random_tableau(rng);
+        let cfg = if tab.adaptive() && rng.uniform() < 0.5 {
+            SolverConfig::adaptive(tab, 1e-6, 1e-4)
+        } else {
+            SolverConfig::fixed(tab, t1 / (4 + rng.below(12)) as f64)
+        };
+        let bp = BackpropMethod.gradient(&sys, &p, &x0, 0.0, t1, &cfg, &loss).unwrap();
+        let sa = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, t1, &cfg, &loss).unwrap();
+        let e1 = rel_l2(&sa.grad_params, &bp.grad_params);
+        let e2 = rel_l2(&sa.grad_x0, &bp.grad_x0);
+        assert!(e1 < 1e-11 && e2 < 1e-11, "θ {e1:.2e}, x₀ {e2:.2e}");
+    });
+}
+
+/// The whole exact-method family agrees pairwise on random problems.
+#[test]
+fn family_agreement_sweep() {
+    Sweep::new(6).run(|rng| {
+        let sys = NativeMlpSystem::with_batch(&[2, 8 + rng.below(8), 2], 2, 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.1);
+        let methods: Vec<Box<dyn GradientMethod>> = vec![
+            Box::new(BackpropMethod),
+            Box::new(AcaMethod),
+            Box::new(SymplecticAdjoint),
+            Box::new(SegmentCheckpoint::new(1 + rng.below(5))),
+        ];
+        let grads: Vec<_> = methods
+            .iter()
+            .map(|m| m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap())
+            .collect();
+        for g in &grads[1..] {
+            assert!(rel_l2(&g.grad_params, &grads[0].grad_params) < 1e-12);
+            assert!((g.loss - grads[0].loss).abs() < 1e-12);
+        }
+    });
+}
+
+/// λᵀδ conservation across every shipped tableau on random systems
+/// (Theorem 2 as a sweep): contract the one-step adjoint with a forward
+/// directional derivative of the step map.
+#[test]
+fn bilinear_conservation_sweep() {
+    use sympode::adjoint::{adjoint_step, StageSource};
+    use sympode::integrate::{rk_combine, rk_stages};
+    use sympode::memory::MemTracker;
+    Sweep::new(8).run(|rng| {
+        let d = 2 + rng.below(3);
+        let sys = NativeMlpSystem::with_batch(&[d, 8 + rng.below(8), d], 1, 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(d);
+        let lam1 = rng.normal_vec(d);
+        let dx0 = rng.normal_vec(d);
+        let h = 0.02 + 0.1 * rng.uniform();
+        let tab = random_tableau(rng);
+        let mem = MemTracker::new();
+
+        let step_map = |xx: &[f64]| -> Vec<f64> {
+            let mut k = Vec::new();
+            rk_stages(&sys, &p, &tab, 0.0, xx, h, None, &mut k, None);
+            rk_combine(&tab, xx, h, &k)
+        };
+        let eps = 1e-7;
+        let mut xp = x0.clone();
+        let mut xm = x0.clone();
+        for i in 0..d {
+            xp[i] += eps * dx0[i];
+            xm[i] -= eps * dx0[i];
+        }
+        let (sp, sm) = (step_map(&xp), step_map(&xm));
+        let dx1: Vec<f64> = sp.iter().zip(&sm).map(|(a, b)| (a - b) / (2.0 * eps)).collect();
+
+        let mut k = Vec::new();
+        let mut stages = Vec::new();
+        rk_stages(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages));
+        let stage_t: Vec<f64> = tab.c.iter().map(|&c| c * h).collect();
+        let mut lam0 = lam1.clone();
+        let mut lam_th = vec![0.0; sys.n_params()];
+        adjoint_step(
+            &sys,
+            &p,
+            &tab,
+            0.0,
+            h,
+            &mut lam0,
+            &mut lam_th,
+            StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+            &mem,
+        );
+        let s1: f64 = lam1.iter().zip(&dx1).map(|(a, b)| a * b).sum();
+        let s0: f64 = lam0.iter().zip(&dx0).map(|(a, b)| a * b).sum();
+        assert!(
+            (s1 - s0).abs() < 1e-6 * (1.0 + s1.abs()),
+            "{}: λᵀδ drift {s0} vs {s1}",
+            tab.name
+        );
+    });
+}
+
+/// Solves are deterministic and direction-consistent: integrate forward
+/// then backward returns to the start within tolerance.
+#[test]
+fn reversibility_sweep() {
+    Sweep::new(6).run(|rng| {
+        let sys = NativeMlpSystem::new(&[3, 12, 3], 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(3);
+        let t1 = 0.3 + rng.uniform();
+        let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-10, 1e-8);
+        let fwd = solve_ivp(&sys, &p, &x0, 0.0, t1, &cfg);
+        let fwd2 = solve_ivp(&sys, &p, &x0, 0.0, t1, &cfg);
+        assert_eq!(fwd.xs, fwd2.xs, "determinism");
+        let bwd = solve_ivp(&sys, &p, fwd.final_state(), t1, 0.0, &cfg);
+        assert!(rel_l2(bwd.final_state(), &x0) < 1e-6);
+    });
+}
+
+/// MALI: ALF round trips exactly and its gradient matches FD on random
+/// nets and step counts.
+#[test]
+fn mali_sweep() {
+    Sweep::new(5).run(|rng| {
+        let sys = NativeMlpSystem::new(&[2, 6 + rng.below(10), 2], 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(2);
+        let n = 5 + rng.below(20);
+        let h = 1.0 / n as f64;
+
+        // reversibility
+        let mut x = x0.clone();
+        let mut v = vec![0.0; 2];
+        sys.eval(0.0, &x, &p, &mut v);
+        let v0 = v.clone();
+        for i in 0..n {
+            alf::alf_step(&sys, &p, i as f64 * h, h, &mut x, &mut v);
+        }
+        for i in (0..n).rev() {
+            alf::alf_step_reverse(&sys, &p, i as f64 * h, h, &mut x, &mut v);
+        }
+        assert!(rel_l2(&x, &x0) < 1e-9 && rel_l2(&v, &v0) < 1e-9);
+
+        // gradient vs finite differences of the ALF map
+        let cfg = SolverConfig::fixed(Tableau::euler(), h);
+        let g = MaliMethod.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        let run = |pp: &[f64]| -> f64 {
+            let mut x = x0.clone();
+            let mut v = vec![0.0; 2];
+            sys.eval(0.0, &x, pp, &mut v);
+            for i in 0..n {
+                alf::alf_step(&sys, pp, i as f64 * h, h, &mut x, &mut v);
+            }
+            x.iter().sum()
+        };
+        let i = rng.below(sys.n_params());
+        let eps = 1e-6;
+        let mut pp = p.clone();
+        pp[i] += eps;
+        let mut pm = p.clone();
+        pm[i] -= eps;
+        let fd = (run(&pp) - run(&pm)) / (2.0 * eps);
+        assert!((g.grad_params[i] - fd).abs() < 1e-5 * (1.0 + fd.abs()));
+    });
+}
+
+/// CNF invariances: with all-zero parameters the flow is the identity and
+/// the NLL is exactly the standard-normal NLL of the data; batch rows are
+/// independent (permuting inputs permutes outputs).
+#[test]
+fn cnf_invariances_sweep() {
+    Sweep::new(5).run(|rng| {
+        let d = 2 + rng.below(3);
+        let b = 2 + rng.below(3);
+        let mut sys = CnfSystem::new(&[d, 8, d], b, TraceEstimator::Hutchinson);
+        sys.resample_eps(rng);
+
+        // zero params → f ≡ 0, trace ≡ 0 → z(T) = z(0), ℓ(T) = 0
+        let p0 = vec![0.0; sys.n_params()];
+        let z0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::rk4(), 0.25);
+        let sol = solve_ivp(&sys, &p0, &z0, 0.0, 1.0, &cfg);
+        assert!(rel_l2(sol.final_state(), &z0) < 1e-14, "identity flow");
+
+        // permutation equivariance with real params
+        let p = sys.init_params(rng.next_u64());
+        let mut out = vec![0.0; sys.dim()];
+        sys.eval(0.3, &z0, &p, &mut out);
+        // swap rows 0 and 1 of the state AND the probe
+        let w = d + 1;
+        let mut z_swap = z0.clone();
+        for j in 0..w {
+            z_swap.swap(j, w + j);
+        }
+        for j in 0..d {
+            sys.eps.swap(j, d + j);
+        }
+        let mut out_swap = vec![0.0; sys.dim()];
+        sys.eval(0.3, &z_swap, &p, &mut out_swap);
+        for j in 0..w {
+            assert!((out[j] - out_swap[w + j]).abs() < 1e-12, "row equivariance");
+            assert!((out[w + j] - out_swap[j]).abs() < 1e-12);
+        }
+    });
+}
+
+/// NLL of the identity flow equals the analytic standard-normal NLL.
+#[test]
+fn cnf_identity_nll() {
+    let d = 3;
+    let b = 4;
+    let loss = CnfNllLoss { batch: b, d };
+    let mut rng = Rng::new(55);
+    let mut z = vec![0.0; b * (d + 1)];
+    let mut expect = 0.0;
+    for row in 0..b {
+        let x = rng.normal_vec(d);
+        z[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&x);
+        expect += 0.5 * x.iter().map(|v| v * v).sum::<f64>()
+            + 0.5 * d as f64 * (2.0 * std::f64::consts::PI).ln();
+    }
+    expect /= b as f64;
+    assert!((loss.loss(&z) - expect).abs() < 1e-12);
+}
+
+/// HNN translation equivariance: the conv+sum energy is shift-invariant,
+/// so the vector field commutes with circular shifts.
+#[test]
+fn hnn_shift_equivariance_sweep() {
+    Sweep::new(4).run(|rng| {
+        let grid = 12;
+        let sys = HnnSystem::new(grid, 1, 3, 4, GOperator::Dx, 0.4);
+        let p = sys.init_params(rng.next_u64());
+        let u = rng.normal_vec(grid);
+        let shift = 1 + rng.below(grid - 1);
+        let u_shift: Vec<f64> = (0..grid).map(|i| u[(i + shift) % grid]).collect();
+
+        assert!(
+            (sys.energy(&u, &p) - sys.energy(&u_shift, &p)).abs() < 1e-10,
+            "energy shift invariance"
+        );
+        let mut f = vec![0.0; grid];
+        sys.eval(0.0, &u, &p, &mut f);
+        let mut f_shift = vec![0.0; grid];
+        sys.eval(0.0, &u_shift, &p, &mut f_shift);
+        for i in 0..grid {
+            assert!(
+                (f_shift[i] - f[(i + shift) % grid]).abs() < 1e-9,
+                "field equivariance at {i}"
+            );
+        }
+    });
+}
+
+/// Gradient-method stats are internally consistent on random problems.
+#[test]
+fn stats_consistency_sweep() {
+    Sweep::new(5).run(|rng| {
+        let sys = NativeMlpSystem::with_batch(&[3, 16, 3], 2, 0);
+        let p = sys.init_params_seeded(rng.next_u64());
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-6, 1e-4);
+        for m in [
+            Box::new(SymplecticAdjoint) as Box<dyn GradientMethod>,
+            Box::new(AcaMethod),
+            Box::new(BackpropMethod),
+        ] {
+            let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+            assert!(g.loss.is_finite());
+            assert!(g.grad_params.iter().all(|v| v.is_finite()));
+            assert!(g.stats.peak_mem_bytes >= g.stats.peak_tape_bytes);
+            assert!(
+                g.stats.peak_mem_bytes
+                    >= g.stats.peak_tape_bytes + g.stats.peak_checkpoint_bytes
+            );
+            assert!(g.stats.n_steps_forward > 0);
+            assert!(g.stats.nfe_forward >= g.stats.n_steps_forward);
+        }
+    });
+}
