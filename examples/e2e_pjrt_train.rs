@@ -4,20 +4,34 @@
 //! layers compose: L1 Pallas kernel → L2 JAX model → HLO text →
 //! L3 Rust coordinator (symplectic adjoint + Adam), loss logged per step.
 //!
+//! Requires the `pjrt` cargo feature, the vendored `xla` bindings added
+//! to Cargo.toml (`xla = { path = "vendor/xla" }` — see
+//! `rust/src/runtime/mod.rs`), and built artifacts:
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_pjrt_train
+//! make artifacts && cargo run --release --features pjrt --example e2e_pjrt_train
 //! ```
 
-use sympode::adjoint::{GradientMethod, SymplecticAdjoint};
-use sympode::cnf::{CnfNllLoss, TabularSpec};
-use sympode::integrate::SolverConfig;
-use sympode::nn::{Adam, Optimizer};
-use sympode::ode::{Loss, OdeSystem};
-use sympode::runtime::PjrtRuntime;
-use sympode::tableau::Tableau;
-use sympode::util::Rng;
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!(
+        "e2e_pjrt_train requires the `pjrt` cargo feature plus the vendored \
+         xla bindings added as a dependency (see rust/src/runtime/mod.rs); \
+         the default build gates this example out."
+    );
+}
 
+#[cfg(feature = "pjrt")]
 fn main() -> anyhow::Result<()> {
+    use sympode::adjoint::{GradientMethod, SymplecticAdjoint};
+    use sympode::cnf::{CnfNllLoss, TabularSpec};
+    use sympode::integrate::SolverConfig;
+    use sympode::nn::{Adam, Optimizer};
+    use sympode::ode::{Loss, OdeSystem};
+    use sympode::runtime::PjrtRuntime;
+    use sympode::tableau::Tableau;
+    use sympode::util::Rng;
+
     let art = std::env::var("SYMPODE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let rt = PjrtRuntime::cpu(&art)?;
     println!("PJRT platform: {}", rt.client.platform_name());

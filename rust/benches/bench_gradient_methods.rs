@@ -1,16 +1,166 @@
 //! Gradient-method benchmarks — the end-to-end cost behind Tables 2–4:
-//! wall time and peak memory of each method on the same problem.
+//! wall time and peak memory of each method on the same problem, plus
+//! two before/after probes for the workspace + parallel work:
+//!
+//! - an **allocation audit** (counting global allocator) showing the
+//!   warm `adjoint_step_ws` inner loop performs zero heap allocations,
+//!   vs the reference allocating step;
+//! - a **serial vs sharded-parallel** mini-batch gradient comparison
+//!   (`ShardedMlpGradient`), whose results are bit-identical by
+//!   construction.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use sympode::adjoint::{
-    AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint, GradientMethod,
-    MaliMethod, SymplecticAdjoint,
+    adjoint_step, adjoint_step_ws, AcaMethod, BackpropMethod, BaselineCheckpoint,
+    ContinuousAdjoint, GradientMethod, MaliMethod, StageSource, SymplecticAdjoint,
 };
 use sympode::benchkit::Bench;
-use sympode::integrate::SolverConfig;
+use sympode::integrate::{rk_stages, SolverConfig};
+use sympode::memory::MemTracker;
 use sympode::ode::losses::SumLoss;
 use sympode::ode::{NativeMlpSystem, OdeSystem};
 use sympode::tableau::Tableau;
+use sympode::train::ShardedMlpGradient;
 use sympode::util::Rng;
+use sympode::workspace::Workspace;
+
+/// Counts every heap allocation so the zero-allocation claim of the
+/// workspace hot path is measured, not assumed.
+struct CountingAlloc;
+
+static N_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        N_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        N_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    N_ALLOCS.load(Ordering::Relaxed)
+}
+
+fn alloc_audit() {
+    println!("\n# allocation audit: one backward adjoint step (dopri5, batch 16)");
+    let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(7);
+    let x0 = rng.normal_vec(sys.dim());
+    let tab = Tableau::dopri5();
+    let h = 1.0 / 32.0;
+    let mem = MemTracker::new();
+
+    let mut k = Vec::new();
+    let mut stages = Vec::new();
+    rk_stages(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages));
+    let stage_t: Vec<f64> = tab.c.iter().map(|&c| c * h).collect();
+    let mut lam = rng.normal_vec(sys.dim());
+    let mut lam_th = vec![0.0; sys.n_params()];
+    let mut ws = Workspace::new();
+
+    // warm-up: populates the workspace pool and the fused-trace scratch
+    for _ in 0..2 {
+        adjoint_step_ws(
+            &sys,
+            &p,
+            &tab,
+            0.0,
+            h,
+            &mut lam,
+            &mut lam_th,
+            StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+            &mem,
+            &mut ws,
+        );
+    }
+
+    let before = allocs();
+    adjoint_step_ws(
+        &sys,
+        &p,
+        &tab,
+        0.0,
+        h,
+        &mut lam,
+        &mut lam_th,
+        StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+        &mem,
+        &mut ws,
+    );
+    let ws_allocs = allocs() - before;
+
+    let before = allocs();
+    adjoint_step(
+        &sys,
+        &p,
+        &tab,
+        0.0,
+        h,
+        &mut lam,
+        &mut lam_th,
+        StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+        &mem,
+    );
+    let ref_allocs = allocs() - before;
+
+    println!("adjoint_step heap allocations/step: workspace path = {ws_allocs}, reference path = {ref_allocs}");
+    assert_eq!(
+        ws_allocs, 0,
+        "warm adjoint_step_ws inner loop must not allocate"
+    );
+    assert!(ref_allocs > 0, "reference path is the allocating baseline");
+}
+
+fn sharded_parallel() {
+    println!("\n# mini-batch gradient: serial vs sharded-parallel (symplectic, batch 64)");
+    let dims = [8usize, 64, 64, 8];
+    let batch = 64;
+    let probe = NativeMlpSystem::with_batch(&dims, batch, 0);
+    let p = probe.init_params();
+    let mut rng = Rng::new(11);
+    let x0 = rng.normal_vec(probe.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / 32.0);
+
+    let driver = ShardedMlpGradient::new(&dims);
+    let serial = driver
+        .gradient_serial("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg)
+        .unwrap();
+    let parallel = driver.gradient("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg).unwrap();
+    assert_eq!(
+        serial.grad_params, parallel.grad_params,
+        "parallel sharded gradient must be bit-identical to serial"
+    );
+
+    let b = Bench::default();
+    b.run("grad/batch64/serial shards", || {
+        std::hint::black_box(
+            driver.gradient_serial("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg).unwrap(),
+        );
+    });
+    b.run(
+        &format!("grad/batch64/parallel x{} shards", driver.shards),
+        || {
+            std::hint::black_box(
+                driver.gradient("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg).unwrap(),
+            );
+        },
+    );
+}
 
 fn main() {
     let b = Bench::default();
@@ -48,4 +198,7 @@ fn main() {
             std::hint::black_box(m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap());
         });
     }
+
+    alloc_audit();
+    sharded_parallel();
 }

@@ -1,11 +1,14 @@
-//! Hot-path kernel benchmarks: GEMM variants, MLP forward/backward, and
-//! the autodiff tape vs the hand-rolled backward (the §Perf comparison).
+//! Hot-path kernel benchmarks: GEMM variants, MLP forward/backward —
+//! each in its original allocating form *and* its workspace form, so the
+//! buffer-reuse win is measured head-to-head — and the autodiff tape vs
+//! the hand-rolled backward (the §Perf comparison).
 
 use sympode::autodiff::{Tape, Tensor};
 use sympode::benchkit::Bench;
 use sympode::linalg;
-use sympode::nn::Mlp;
+use sympode::nn::{Mlp, MlpTrace};
 use sympode::util::Rng;
+use sympode::workspace::Workspace;
 
 fn main() {
     let b = Bench::default();
@@ -32,25 +35,67 @@ fn main() {
         });
     }
 
+    println!("\n# GEMM tn: allocate-and-add vs accumulate-in-place (the dW kernel)");
+    {
+        let n = 64;
+        let a = rng.normal_vec(n * n);
+        let g = rng.normal_vec(n * n);
+        let mut acc = vec![0.0; n * n];
+        b.run("gemm_tn/alloc+add", || {
+            let mut dw = vec![0.0; n * n];
+            linalg::gemm_tn(n, n, n, &a, &g, &mut dw);
+            for (c, d) in acc.iter_mut().zip(&dw) {
+                *c += d;
+            }
+            std::hint::black_box(&acc);
+        });
+        b.run("gemm_tn_acc/in-place", || {
+            linalg::gemm_tn_acc(n, n, n, &a, &g, &mut acc);
+            std::hint::black_box(&acc);
+        });
+    }
+
     println!("\n# MLP forward / traced / backward (batch 32, 64-64 hidden)");
+    println!("#   seed (allocating) path vs workspace path, same math");
     let m = Mlp::new(&[9, 64, 64, 8]);
     let p = m.init_params(&mut rng);
     let x = rng.normal_vec(32 * 9);
     let lam = rng.normal_vec(32 * 8);
-    b.run("mlp/forward", || {
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0; 32 * 8];
+    b.run("mlp/forward (alloc)", || {
         std::hint::black_box(m.forward(&x, 32, &p));
     });
-    b.run("mlp/forward_traced", || {
+    b.run("mlp/forward_ws", || {
+        m.forward_ws(&x, 32, &p, &mut out, &mut ws);
+        std::hint::black_box(&out);
+    });
+    b.run("mlp/forward_traced (alloc)", || {
         std::hint::black_box(m.forward_traced(&x, 32, &p));
+    });
+    let mut tr_ws = MlpTrace::empty();
+    b.run("mlp/forward_traced_ws", || {
+        m.forward_traced_ws(&x, 32, &p, &mut out, &mut tr_ws, &mut ws);
+        std::hint::black_box(&out);
     });
     let (_, tr) = m.forward_traced(&x, 32, &p);
     let mut gx = vec![0.0; 32 * 9];
     let mut gp = vec![0.0; m.param_len()];
-    b.run("mlp/backward", || {
+    b.run("mlp/backward (alloc)", || {
         gp.fill(0.0);
         m.backward(&tr, &p, &lam, &mut gx, &mut gp);
         std::hint::black_box(&gp);
     });
+    b.run("mlp/backward_ws", || {
+        gp.fill(0.0);
+        m.backward_ws(&tr, &p, &lam, &mut gx, &mut gp, &mut ws);
+        std::hint::black_box(&gp);
+    });
+    println!(
+        "#   workspace steady state: {} buffer allocations over {} takes",
+        ws.misses(),
+        ws.takes()
+    );
 
     println!("\n# autodiff tape vs hand-rolled (same network)");
     b.run("tape/forward+grad", || {

@@ -12,11 +12,12 @@
 //! method grows with the order of the integrator (Table 3).
 
 use super::backprop::rk_stages_traced;
-use super::step::{adjoint_step, StageSource};
+use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
 use crate::integrate::{solve_ivp_tracked, SolverConfig};
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem};
+use crate::workspace::Workspace;
 
 /// The ACA checkpointing scheme.
 #[derive(Debug, Default, Clone)]
@@ -57,6 +58,7 @@ impl GradientMethod for AcaMethod {
             ..Default::default()
         };
 
+        let mut ws = Workspace::new();
         let mut k: Vec<Vec<f64>> = Vec::new();
         for n in (0..n_steps).rev() {
             mem.free_f64(MemCategory::Checkpoint, dim); // discard x_{n+1}
@@ -69,7 +71,7 @@ impl GradientMethod for AcaMethod {
             let tape_bytes: u64 = traces.iter().map(|t| t.bytes()).sum();
             mem.alloc(MemCategory::Tape, tape_bytes);
 
-            let cost = adjoint_step(
+            let cost = adjoint_step_ws(
                 sys,
                 params,
                 tab,
@@ -79,6 +81,7 @@ impl GradientMethod for AcaMethod {
                 &mut lam_theta,
                 StageSource::Stored { traces: &traces },
                 &mem,
+                &mut ws,
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
             mem.free(MemCategory::Tape, tape_bytes);

@@ -11,7 +11,7 @@
 //! `O(M + NsL)` memory, `O(3MNsL)` cost. This is the "baseline scheme" the
 //! paper implements as the one-checkpoint-per-component variant.
 
-use super::step::{adjoint_step, StageSource};
+use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
 use crate::integrate::{
     error_norm, error_norm_dop853, rk_combine, select_initial_step, solve_ivp_final, Solution,
@@ -20,6 +20,7 @@ use crate::integrate::{
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem, Trace};
 use crate::tableau::{ErrorSpec, Tableau};
+use crate::workspace::Workspace;
 
 /// One accepted step with its retained per-stage computation graphs.
 pub(crate) struct StepRecord {
@@ -158,9 +159,7 @@ pub(crate) fn traced_forward(
                         let mut fn_new = vec![0.0; dim];
                         sys.eval(t + h_signed, &x_new, params, &mut fn_new);
                         stats.nfe += 1;
-                        let mut k_ext = k.clone();
-                        k_ext.push(fn_new);
-                        error_norm_dop853(e3, e5, &k_ext, h_signed, &x, &x_new, atol, rtol)
+                        error_norm_dop853(e3, e5, &k, &fn_new, h_signed, &x, &x_new, atol, rtol)
                     }
                     ErrorSpec::None => anyhow::bail!("adaptive mode needs an error estimate"),
                 };
@@ -208,8 +207,10 @@ pub(crate) fn backward_over_records(
     mem: &MemTracker,
     stats: &mut GradStats,
 ) {
+    // one workspace for the whole sweep: adjoint-step scratch reused
+    let mut ws = Workspace::new();
     for rec in records.into_iter().rev() {
-        let cost = adjoint_step(
+        let cost = adjoint_step_ws(
             sys,
             params,
             tab,
@@ -219,6 +220,7 @@ pub(crate) fn backward_over_records(
             lam_theta,
             StageSource::Stored { traces: &rec.traces },
             mem,
+            &mut ws,
         );
         stats.nfe_backward += cost.nfe + cost.nvjp;
         stats.n_steps_backward += 1;

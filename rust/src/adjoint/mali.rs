@@ -40,9 +40,13 @@ impl GradientMethod for MaliMethod {
     ) -> anyhow::Result<GradResult> {
         let h_req = match cfg.mode {
             StepMode::Fixed { h } => h,
-            StepMode::Adaptive { .. } => anyhow::bail!(
-                "MALI is implemented for fixed-step integration only (the ALF \
-                 integrator is second-order; see Table 3 of the paper)"
+            StepMode::Adaptive { atol, rtol, .. } => anyhow::bail!(
+                "MALI supports fixed-step integration only: the asynchronous \
+                 leapfrog update is reversed step-by-step on the same grid, so \
+                 an adaptive schedule (atol={atol:.1e}, rtol={rtol:.1e}) has no \
+                 reproducible reverse trajectory and would silently yield wrong \
+                 gradients. Use SolverConfig::fixed(..), or pick another exact \
+                 method (aca/symplectic) for adaptive configs"
             ),
         };
         let mem = MemTracker::new();

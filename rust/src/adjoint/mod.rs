@@ -17,6 +17,26 @@
 //! adjoint of the forward Runge–Kutta step. What distinguishes the
 //! methods is purely the checkpoint/recompute schedule feeding it, i.e.
 //! which traces are alive when; that is what the memory tracker observes.
+//!
+//! ## Workspace hot path
+//!
+//! Every method drives the allocation-free form [`adjoint_step_ws`] with
+//! one [`crate::workspace::Workspace`] spanning its whole backward sweep:
+//! the per-stage `seed`/`jx` vectors, the stage-slope rows `m_i`, the
+//! stage-state recomputation scratch, and (on the native backend) the
+//! fused recompute+VJP intermediates are checked out of the pool and
+//! returned every stage, so the steady-state inner loop performs zero
+//! heap allocations. [`adjoint_step`] remains as the reference allocating
+//! entry point; both forms are numerically identical and the byte-level
+//! [`crate::memory::MemTracker`] accounting (the paper's Table 1 model)
+//! is the same for both — buffer reuse is real memory behavior, not a
+//! change to `peak_tape_bytes`/`peak_checkpoint_bytes` semantics.
+//!
+//! For multi-core execution, [`crate::parallel`] fans independent
+//! gradient computations (sweep cells, batch shards) out across scoped
+//! threads, one system + workspace per worker; see
+//! [`crate::train::ShardedMlpGradient`] and the sweep helpers in
+//! [`crate::coordinator`].
 
 pub mod aca;
 pub mod backprop;
@@ -31,7 +51,7 @@ pub use backprop::{BackpropMethod, BaselineCheckpoint};
 pub use continuous::ContinuousAdjoint;
 pub use mali::MaliMethod;
 pub use segment::SegmentCheckpoint;
-pub use step::{adjoint_step, StageSource};
+pub use step::{adjoint_step, adjoint_step_ws, StageSource};
 pub use symplectic::SymplecticAdjoint;
 
 use crate::integrate::SolverConfig;
@@ -98,14 +118,20 @@ pub trait GradientMethod {
     ) -> anyhow::Result<GradResult>;
 }
 
-/// All methods, for experiment sweeps. `MaliMethod` requires fixed-step
-/// configs; the experiment harness handles that.
+/// All methods, for experiment sweeps.
+///
+/// Includes [`MaliMethod`], which supports fixed-step configs only: when
+/// handed a [`crate::integrate::StepMode::Adaptive`] config its
+/// `gradient` returns a descriptive `anyhow::Error` instead of a wrong
+/// gradient — sweep harnesses iterating this list must propagate or skip
+/// that error for adaptive configurations.
 pub fn all_methods() -> Vec<Box<dyn GradientMethod>> {
     vec![
         Box::new(ContinuousAdjoint::default()),
         Box::new(BackpropMethod),
         Box::new(BaselineCheckpoint),
         Box::new(AcaMethod),
+        Box::new(MaliMethod),
         Box::new(SymplecticAdjoint::default()),
     ]
 }

@@ -17,6 +17,7 @@
 use crate::memory::{MemCategory, MemGuard, MemTracker};
 use crate::ode::{OdeSystem, Trace};
 use crate::tableau::Tableau;
+use crate::workspace::Workspace;
 
 /// Where the backward step gets the per-stage VJPs from.
 pub enum StageSource<'a> {
@@ -43,7 +44,39 @@ pub struct StepCost {
 /// `mem` sees a transient tape (`Recompute`) or nothing extra (`Stored` —
 /// the caller owns those tapes' accounting), plus the `s` stage adjoint
 /// buffers as solver working memory.
+///
+/// This is the reference allocating form; the gradient methods call
+/// [`adjoint_step_ws`], which computes the identical recursion with all
+/// per-stage scratch drawn from a caller-owned [`Workspace`].
 pub fn adjoint_step(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    t_n: f64,
+    h: f64,
+    lam: &mut [f64],
+    lam_theta: &mut [f64],
+    source: StageSource<'_>,
+    mem: &MemTracker,
+) -> StepCost {
+    let mut ws = Workspace::new();
+    adjoint_step_ws(sys, params, tab, t_n, h, lam, lam_theta, source, mem, &mut ws)
+}
+
+/// [`adjoint_step`] with caller-provided scratch: the `seed`, `jx`, and
+/// stage-slope buffers `m_i` are checked out of `ws` and returned on
+/// exit, and the per-stage recompute+VJP goes through
+/// [`OdeSystem::vjp_fused_ws`] — so a backward sweep that passes one
+/// workspace through every step performs **zero heap allocations** in
+/// this inner loop once the workspace is warm.
+///
+/// Memory accounting is unchanged from the reference form: the same
+/// `(s+1)·dim` solver working set is registered for the duration of the
+/// step, and in `Recompute` mode one transient tape — the actual byte
+/// count reported by [`OdeSystem::vjp_fused_ws`] — is registered per
+/// stage (buffer reuse is real memory behavior; the tracker models the
+/// paper's Table 1, see [`crate::workspace`]).
+pub fn adjoint_step_ws(
     sys: &dyn OdeSystem,
     params: &[f64],
     tab: &Tableau,
@@ -53,30 +86,33 @@ pub fn adjoint_step(
     lam_theta: &mut [f64],
     source: StageSource<'_>,
     mem: &MemTracker,
+    ws: &mut Workspace,
 ) -> StepCost {
     let s = tab.s;
     let dim = lam.len();
     let mut cost = StepCost::default();
 
-    // m_i := h·b̃_i·l_{n,i} — the scaled stage adjoint slopes. Working
-    // memory of the backward stage loop (the "O(s)" of Algorithm 2).
+    // m_i := h·b̃_i·l_{n,i} — the scaled stage adjoint slopes, stored as
+    // `s` rows of one flat buffer. Working memory of the backward stage
+    // loop (the "O(s)" of Algorithm 2).
     let _work = MemGuard::f64s(mem, MemCategory::Solver, (s + 1) * dim);
-    let mut m: Vec<Option<Vec<f64>>> = vec![None; s];
-    let mut lambda_stage = vec![0.0; dim];
+    let mut m = ws.take(s * dim);
+    let mut lambda_stage = ws.take(dim);
+    let mut seed = ws.take(dim);
+    let mut jx = ws.take(dim);
 
     for i in (0..s).rev() {
         let bi = tab.b[i];
         // Λ_{n,i} per Eq. (22), written in terms of m_j = h·b̃_j·l_j:
         //   i ∉ I₀: Λ_i = λ_{n+1} − Σ_j (a_{j,i}/b_i) m_j
         //   i ∈ I₀: Λ_i = −(1/h) Σ_j a_{j,i} m_j
+        // (rows j > i of `m` are always already computed here)
         if bi != 0.0 {
             lambda_stage.copy_from_slice(lam);
             for j in (i + 1)..s {
                 let aji = tab.a(j, i);
                 if aji != 0.0 {
-                    if let Some(mj) = &m[j] {
-                        crate::linalg::axpy(-aji / bi, mj, &mut lambda_stage);
-                    }
+                    crate::linalg::axpy(-aji / bi, &m[j * dim..(j + 1) * dim], &mut lambda_stage);
                 }
             }
         } else {
@@ -84,9 +120,7 @@ pub fn adjoint_step(
             for j in (i + 1)..s {
                 let aji = tab.a(j, i);
                 if aji != 0.0 {
-                    if let Some(mj) = &m[j] {
-                        crate::linalg::axpy(-aji / h, mj, &mut lambda_stage);
-                    }
+                    crate::linalg::axpy(-aji / h, &m[j * dim..(j + 1) * dim], &mut lambda_stage);
                 }
             }
         }
@@ -96,17 +130,24 @@ pub fn adjoint_step(
         // scaled adjoint seed: (h·b̃_i)·Λ_i, so the VJP directly yields
         // m_i = −(h·b̃_i)·l_i = (h·b̃_i)·Jᵀ Λ_i and the θ-adjoint
         // accumulates h·b̃_i·(∂f/∂θ)ᵀ Λ_i.
-        let seed: Vec<f64> = lambda_stage.iter().map(|&v| w * v).collect();
+        for (sd, &lv) in seed.iter_mut().zip(lambda_stage.iter()) {
+            *sd = w * lv;
+        }
 
-        let mut jx = vec![0.0; dim];
+        jx.fill(0.0);
         match &source {
             StageSource::Recompute { stage_states, stage_t } => {
                 // Algorithm 2, lines 10–12: recompute ONE traced network
-                // use, take the VJP, discard the tape.
-                let mut f_out = vec![0.0; dim];
-                let trace = sys.eval_traced(stage_t[i], &stage_states[i], params, &mut f_out);
-                let _tape = MemGuard::new(mem, MemCategory::Tape, trace.bytes());
-                sys.vjp_traced(trace.as_ref(), params, &seed, &mut jx, lam_theta);
+                // use, take the VJP, discard the tape. The actual tape
+                // byte count is registered post-hoc: everything live
+                // during the fused call is still live here, so the
+                // recorded peak is identical to holding a guard across
+                // the call, and the bytes are the real trace size (not
+                // the trace_bytes() probe estimate).
+                let bytes =
+                    sys.vjp_fused_ws(stage_t[i], &stage_states[i], params, &seed, &mut jx, lam_theta, ws);
+                mem.alloc(MemCategory::Tape, bytes);
+                mem.free(MemCategory::Tape, bytes);
                 cost.nfe += 1;
                 cost.nvjp += 1;
             }
@@ -117,16 +158,19 @@ pub fn adjoint_step(
         }
         // jx = (h·b̃_i)·(∂f/∂x)ᵀ Λ_i = −m_i… with sign: l_i = −Jᵀ Λ_i so
         // m_i = h·b̃_i·l_i = −jx.
-        for v in jx.iter_mut() {
-            *v = -*v;
+        for (mi, &v) in m[i * dim..(i + 1) * dim].iter_mut().zip(jx.iter()) {
+            *mi = -v;
         }
-        m[i] = Some(jx);
     }
 
     // λ_n = λ_{n+1} − Σ_i m_i
-    for mi in m.iter().flatten() {
-        crate::linalg::axpy(-1.0, mi, lam);
+    for i in 0..s {
+        crate::linalg::axpy(-1.0, &m[i * dim..(i + 1) * dim], lam);
     }
+    ws.put(m);
+    ws.put(lambda_stage);
+    ws.put(seed);
+    ws.put(jx);
     cost
 }
 

@@ -16,11 +16,12 @@
 //! Total: memory `O(MN + s + L)`, cost `O(4MNsL)`, gradient exact to
 //! rounding (Theorem 2) — the full Table-1 row of the proposed method.
 
-use super::step::{adjoint_step, StageSource};
+use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::{rk_stages, solve_ivp_tracked, SolverConfig};
+use crate::integrate::{rk_stages_ws, solve_ivp_tracked, SolverConfig};
 use crate::memory::{MemCategory, MemGuard, MemTracker};
 use crate::ode::{Loss, OdeSystem};
+use crate::workspace::Workspace;
 
 /// The paper's proposed gradient method.
 #[derive(Debug, Default, Clone)]
@@ -62,8 +63,15 @@ impl GradientMethod for SymplecticAdjoint {
         };
 
         // ---- Algorithm 2: backward ----------------------------------
+        // One workspace spans the whole sweep: the stage/slope rows, the
+        // adjoint-step scratch, and the fused-VJP intermediates are all
+        // reused, so the per-step inner loop is allocation-free once warm
+        // (the MemTracker accounting below is unchanged — it models the
+        // paper's memory, not the allocator).
+        let mut ws = Workspace::new();
         let mut k: Vec<Vec<f64>> = Vec::new();
         let mut stages: Vec<Vec<f64>> = Vec::new();
+        let mut stage_t: Vec<f64> = Vec::new();
         for n in (0..n_steps).rev() {
             // x_{n+1} is no longer needed (its only uses were the loss and
             // the previous backward step) — Algorithm 2's "discard".
@@ -76,14 +84,16 @@ impl GradientMethod for SymplecticAdjoint {
             // checkpoints (O(s)), discarding all graphs.
             let stage_guard = MemGuard::f64s(&mem, MemCategory::Checkpoint, tab.s * dim);
             let kwork = MemGuard::f64s(&mem, MemCategory::Solver, tab.s * dim);
-            let nfe =
-                rk_stages(sys, params, tab, t_n, &sol.xs[n], h, None, &mut k, Some(&mut stages));
+            let nfe = rk_stages_ws(
+                sys, params, tab, t_n, &sol.xs[n], h, None, &mut k, Some(&mut stages), &mut ws,
+            );
             stats.nfe_backward += nfe;
-            let stage_t: Vec<f64> = tab.c.iter().map(|&c| t_n + c * h).collect();
+            stage_t.clear();
+            stage_t.extend(tab.c.iter().map(|&c| t_n + c * h));
             drop(kwork); // the slopes k are not needed by the adjoint recursion
 
             // lines 8–14: symplectic adjoint recursion, one tape at a time.
-            let cost = adjoint_step(
+            let cost = adjoint_step_ws(
                 sys,
                 params,
                 tab,
@@ -93,6 +103,7 @@ impl GradientMethod for SymplecticAdjoint {
                 &mut lam_theta,
                 StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
                 &mem,
+                &mut ws,
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
             drop(stage_guard); // line 12/15: discard stage checkpoints

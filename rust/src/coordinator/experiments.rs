@@ -2,8 +2,8 @@
 
 use super::{mib, write_results, ExpOpts};
 use crate::adjoint::{
-    AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint, GradientMethod,
-    MaliMethod, SymplecticAdjoint,
+    method_by_name, AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint,
+    GradResult, GradientMethod, SymplecticAdjoint,
 };
 use crate::cnf::TabularSpec;
 use crate::integrate::SolverConfig;
@@ -31,15 +31,17 @@ fn comparison_methods() -> Vec<Box<dyn GradientMethod>> {
 
 /// A controlled fixed-grid MLP ODE where `N`, `s`, `L` are all known, so
 /// the measured peaks can be compared against Table 1's formulas.
+///
+/// The per-method sweep fans out across worker threads: each cell builds
+/// its own (deterministically seeded) system — and therefore its own
+/// workspace — so the parallel run prints exactly what a serial run
+/// would.
 pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
     let n_steps = if opts.quick { 16 } else { 64 };
-    let sys = NativeMlpSystem::with_batch(&[4, 64, 64, 4], 8, 0);
-    let p = sys.init_params();
-    let mut rng = Rng::new(1);
-    let x0 = rng.normal_vec(sys.dim());
+    let make_sys = || NativeMlpSystem::with_batch(&[4, 64, 64, 4], 8, 0);
     let tab = Tableau::dopri5();
     let s = tab.s as u64;
-    let l = sys.trace_bytes();
+    let l = make_sys().trace_bytes();
     let cfg = SolverConfig::fixed(tab, 1.0 / n_steps as f64);
     let n = n_steps as u64;
 
@@ -48,12 +50,31 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
         "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
         "method", "tape[B]", "theory", "checkpoint[B]", "nfe fwd", "nfe bwd"
     );
+    // (method, theoretical tape peak): adjoint O(L), backprop/baseline
+    // O(NsL), aca O(sL), mali O(L), symplectic O(L) + s state checkpoints
+    let cells: [(&str, u64); 6] = [
+        ("adjoint", l),
+        ("backprop", n * s * l),
+        ("baseline", n * s * l),
+        ("aca", s * l),
+        ("mali", l),
+        ("symplectic", l),
+    ];
+    let results: Vec<anyhow::Result<GradResult>> =
+        crate::parallel::parallel_map_indexed(cells.len(), |i| {
+            let sys = make_sys();
+            let p = sys.init_params();
+            let mut rng = Rng::new(1);
+            let x0 = rng.normal_vec(sys.dim());
+            let m = method_by_name(cells[i].0).expect("table1 method is registered");
+            m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+        });
     let mut rows = Vec::new();
-    let mut run = |m: &dyn GradientMethod, theory_tape: u64| -> anyhow::Result<()> {
-        let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
+    for (&(name, theory_tape), res) in cells.iter().zip(results) {
+        let g = res?;
         println!(
             "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
-            m.name(),
+            name,
             g.stats.peak_tape_bytes,
             theory_tape,
             g.stats.peak_checkpoint_bytes,
@@ -61,7 +82,7 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
             g.stats.nfe_backward
         );
         let mut j = Json::obj();
-        j.set("method", m.name())
+        j.set("method", name)
             .set("tape_bytes", g.stats.peak_tape_bytes)
             .set("theory_tape_bytes", theory_tape)
             .set("checkpoint_bytes", g.stats.peak_checkpoint_bytes)
@@ -69,14 +90,7 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
             .set("nfe_forward", g.stats.nfe_forward)
             .set("nfe_backward", g.stats.nfe_backward);
         rows.push(j);
-        Ok(())
-    };
-    run(&ContinuousAdjoint::default(), l)?; // O(L)
-    run(&BackpropMethod, n * s * l)?; // O(NsL)
-    run(&BaselineCheckpoint, n * s * l)?; // O(NsL) + x0
-    run(&AcaMethod, s * l)?; // O(sL)
-    run(&MaliMethod, l)?; // O(L)
-    run(&SymplecticAdjoint, l)?; // O(L) (+ s state checkpoints)
+    }
     write_results(opts, "table1", Json::Arr(rows))?;
     Ok(())
 }
@@ -335,37 +349,49 @@ pub fn table3(opts: &ExpOpts) -> anyhow::Result<()> {
 // ---------------------------------------------------------------------
 
 pub fn fig2(opts: &ExpOpts) -> anyhow::Result<()> {
-    // mnist-like dimensionality scaled down; fixed-grid dopri5, vary N
+    // mnist-like dimensionality scaled down; fixed-grid dopri5, vary N.
+    // The (N × method) grid is embarrassingly parallel: every cell runs
+    // on its own worker with a freshly (identically) seeded system, so
+    // the table is byte-identical to a serial sweep, just wall-clock
+    // faster by roughly the core count.
     let d = if opts.quick { 32 } else { 128 };
-    let sys = NativeMlpSystem::with_batch(&[d, 64, 64, d], 4, 0);
-    let p = sys.init_params();
-    let mut rng = Rng::new(17);
-    let x0 = rng.normal_vec(sys.dim());
     let ns: &[usize] = if opts.quick {
         &[8, 16, 32, 64, 128]
     } else {
         &[8, 16, 32, 64, 128, 256, 512, 1024]
     };
+    const METHODS: [&str; 4] = ["adjoint", "aca", "symplectic", "backprop"];
     println!("Figure 2 — peak memory [MiB] vs number of steps N (fixed-grid dopri5)");
     println!(
         "{:<6} {:>12} {:>12} {:>12} {:>12}",
         "N", "adjoint", "aca", "symplectic", "backprop"
     );
+    let grid: Vec<(usize, &str)> = ns
+        .iter()
+        .flat_map(|&n| METHODS.iter().map(move |&m| (n, m)))
+        .collect();
+    let peaks: Vec<anyhow::Result<u64>> =
+        crate::parallel::parallel_map_indexed(grid.len(), |i| {
+            let (n, mname) = grid[i];
+            let sys = NativeMlpSystem::with_batch(&[d, 64, 64, d], 4, 0);
+            let p = sys.init_params();
+            let mut rng = Rng::new(17);
+            let x0 = rng.normal_vec(sys.dim());
+            let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
+            let m = method_by_name(mname).expect("fig2 method is registered");
+            m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+                .map(|g| g.stats.peak_mem_bytes)
+        });
     let mut rows = Vec::new();
+    let mut peaks = peaks.into_iter();
     for &n in ns {
-        let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
         let mut row = Json::obj();
         row.set("n_steps", n);
         let mut cells = Vec::new();
-        for (name, method) in [
-            ("adjoint", Box::new(ContinuousAdjoint::default()) as Box<dyn GradientMethod>),
-            ("aca", Box::new(AcaMethod)),
-            ("symplectic", Box::new(SymplecticAdjoint)),
-            ("backprop", Box::new(BackpropMethod)),
-        ] {
-            let g = method.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
-            row.set(name, g.stats.peak_mem_bytes);
-            cells.push(mib(g.stats.peak_mem_bytes));
+        for name in METHODS {
+            let bytes = peaks.next().expect("grid covers ns × methods")?;
+            row.set(name, bytes);
+            cells.push(mib(bytes));
         }
         println!(
             "{:<6} {:>12.4} {:>12.4} {:>12.4} {:>12.4}",

@@ -12,6 +12,14 @@
 //! symplectic adjoint method replay steps through it (Algorithm 2 lines
 //! 3–6).
 //!
+//! All step loops reuse their stage/state/error buffers across steps
+//! (see [`crate::workspace`]): `rk_stages` refills caller-kept rows in
+//! place, [`rk_combine_into`] writes into a persistent trial-state
+//! buffer, and the FSAL slot recycles its allocation — the steady-state
+//! cost of a step is the `f` evaluations, not the allocator. The
+//! [`crate::memory::MemTracker`] accounting (checkpoints + solver
+//! working set) is unchanged by this reuse.
+//!
 //! [`alf`] implements the asynchronous leapfrog integrator MALI is built
 //! on.
 
@@ -86,13 +94,22 @@ impl Solution {
     }
 }
 
+/// Floor on the error-norm scale `atol + rtol·max(|x|, |x_new|)`.
+///
+/// With `atol = 0` a state component crossing zero makes the scale
+/// vanish and the division below produce Inf/NaN, wedging step control
+/// (rejections with `h → 0`). The floor is far below any meaningful
+/// tolerance (so normal configurations are bit-for-bit unaffected) but
+/// large enough that `(err/scale)²` stays finite.
+pub(crate) const SCALE_FLOOR: f64 = 1e-128;
+
 /// RMS error norm used for step acceptance: `sqrt(mean((err/scale)²))`
-/// with `scale = atol + rtol·max(|x|, |x_new|)`.
+/// with `scale = max(atol + rtol·max(|x|, |x_new|), SCALE_FLOOR)`.
 pub(crate) fn error_norm(err: &[f64], x: &[f64], x_new: &[f64], atol: f64, rtol: f64) -> f64 {
     let n = err.len();
     let mut acc = 0.0;
     for i in 0..n {
-        let scale = atol + rtol * x[i].abs().max(x_new[i].abs());
+        let scale = (atol + rtol * x[i].abs().max(x_new[i].abs())).max(SCALE_FLOOR);
         let r = err[i] / scale;
         acc += r * r;
     }
@@ -100,10 +117,15 @@ pub(crate) fn error_norm(err: &[f64], x: &[f64], x_new: &[f64], atol: f64, rtol:
 }
 
 /// DOP853's combined 5th/3rd error norm (Hairer dop853.f / scipy).
+///
+/// `k` are the step's stage slopes and `k_last` the extra
+/// `f(t_{n+1}, x_{n+1})` evaluation (the 13th slope) — passed separately
+/// so callers don't have to build a concatenated copy per trial step.
 pub(crate) fn error_norm_dop853(
     e3: &[f64],
     e5: &[f64],
     k: &[Vec<f64>],
+    k_last: &[f64],
     h: f64,
     x: &[f64],
     x_new: &[f64],
@@ -111,16 +133,21 @@ pub(crate) fn error_norm_dop853(
     rtol: f64,
 ) -> f64 {
     let n = x.len();
+    let s = k.len();
+    debug_assert_eq!(e3.len(), s + 1);
+    debug_assert_eq!(e5.len(), s + 1);
     let mut err5_sq = 0.0;
     let mut err3_sq = 0.0;
     for i in 0..n {
-        let scale = atol + rtol * x[i].abs().max(x_new[i].abs());
+        let scale = (atol + rtol * x[i].abs().max(x_new[i].abs())).max(SCALE_FLOOR);
         let mut a5 = 0.0;
         let mut a3 = 0.0;
         for (j, kj) in k.iter().enumerate() {
             a5 += e5[j] * kj[i];
             a3 += e3[j] * kj[i];
         }
+        a5 += e5[s] * k_last[i];
+        a3 += e3[s] * k_last[i];
         let r5 = a5 / scale;
         let r3 = a3 / scale;
         err5_sq += r5 * r5;
@@ -133,11 +160,33 @@ pub(crate) fn error_norm_dop853(
     h.abs() * err5_sq / (denom * n as f64).sqrt()
 }
 
+/// Resize a rows-of-`dim` buffer to `n` rows, reusing row allocations.
+///
+/// Rows keep their previous contents when already the right length —
+/// every consumer (`rk_stages_into`) fully overwrites each row via
+/// `sys.eval`/`copy_from_slice` before reading it, so re-zeroing here
+/// would be pure memset traffic in the step loop.
+pub(crate) fn resize_rows(rows: &mut Vec<Vec<f64>>, n: usize, dim: usize) {
+    rows.resize_with(n, Vec::new);
+    for r in rows.iter_mut() {
+        if r.len() != dim {
+            r.clear();
+            r.resize(dim, 0.0);
+        }
+    }
+}
+
 /// Compute the stage slopes `k_{n,i}` (and optionally the stage states
 /// `X_{n,i}`) of one RK step from `(t, x)` with step `h`.
 ///
 /// If `k1` is provided (FSAL reuse) the first evaluation is skipped.
 /// Returns the number of fresh `f` evaluations performed.
+///
+/// `k_out` (and `x_stages_out`) rows are reused in place, so callers that
+/// keep the buffers across steps — every solve/adjoint loop in this crate
+/// does — pay no per-step allocation for them. The only remaining
+/// per-call allocation is the stage-state scratch `xi`;
+/// [`rk_stages_ws`] eliminates that too.
 pub fn rk_stages(
     sys: &dyn OdeSystem,
     params: &[f64],
@@ -149,53 +198,93 @@ pub fn rk_stages(
     k_out: &mut Vec<Vec<f64>>,
     x_stages_out: Option<&mut Vec<Vec<f64>>>,
 ) -> usize {
+    let mut xi = vec![0.0; x.len()];
+    rk_stages_into(sys, params, tab, t, x, h, k1, k_out, x_stages_out, &mut xi)
+}
+
+/// [`rk_stages`] with workspace-provided stage scratch: fully
+/// allocation-free once `ws` and the row buffers are warm.
+pub fn rk_stages_ws(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    t: f64,
+    x: &[f64],
+    h: f64,
+    k1: Option<&[f64]>,
+    k_out: &mut Vec<Vec<f64>>,
+    x_stages_out: Option<&mut Vec<Vec<f64>>>,
+    ws: &mut crate::workspace::Workspace,
+) -> usize {
+    let mut xi = ws.take(x.len());
+    let nfe = rk_stages_into(sys, params, tab, t, x, h, k1, k_out, x_stages_out, &mut xi);
+    ws.put(xi);
+    nfe
+}
+
+fn rk_stages_into(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    tab: &Tableau,
+    t: f64,
+    x: &[f64],
+    h: f64,
+    k1: Option<&[f64]>,
+    k_out: &mut Vec<Vec<f64>>,
+    x_stages_out: Option<&mut Vec<Vec<f64>>>,
+    xi: &mut [f64],
+) -> usize {
     let s = tab.s;
     let dim = x.len();
-    k_out.clear();
+    resize_rows(k_out, s, dim);
     let mut nfe = 0;
     let mut stages: Option<&mut Vec<Vec<f64>>> = x_stages_out;
     if let Some(st) = stages.as_deref_mut() {
-        st.clear();
+        resize_rows(st, s, dim);
     }
-    let mut xi = vec![0.0; dim];
     for i in 0..s {
         // X_{n,i} = x + h Σ_{j<i} a_ij k_j
         xi.copy_from_slice(x);
         for j in 0..i {
             let aij = tab.a(i, j);
             if aij != 0.0 {
-                crate::linalg::axpy(h * aij, &k_out[j], &mut xi);
+                crate::linalg::axpy(h * aij, &k_out[j], xi);
             }
         }
         if let Some(st) = stages.as_deref_mut() {
-            st.push(xi.clone());
+            st[i].copy_from_slice(xi);
         }
-        let mut ki = vec![0.0; dim];
         if i == 0 {
             if let Some(k1v) = k1 {
-                ki.copy_from_slice(k1v);
+                k_out[0].copy_from_slice(k1v);
             } else {
-                sys.eval(t + tab.c[i] * h, &xi, params, &mut ki);
+                sys.eval(t + tab.c[i] * h, xi, params, &mut k_out[i]);
                 nfe += 1;
             }
         } else {
-            sys.eval(t + tab.c[i] * h, &xi, params, &mut ki);
+            sys.eval(t + tab.c[i] * h, xi, params, &mut k_out[i]);
             nfe += 1;
         }
-        k_out.push(ki);
     }
     nfe
 }
 
 /// Combine stage slopes into the next state: `x_new = x + h Σ b_i k_i`.
 pub fn rk_combine(tab: &Tableau, x: &[f64], h: f64, k: &[Vec<f64>]) -> Vec<f64> {
-    let mut x_new = x.to_vec();
+    let mut x_new = vec![0.0; x.len()];
+    rk_combine_into(tab, x, h, k, &mut x_new);
+    x_new
+}
+
+/// [`rk_combine`] writing into a caller-provided buffer (reused across
+/// steps by the solve loops).
+pub fn rk_combine_into(tab: &Tableau, x: &[f64], h: f64, k: &[Vec<f64>], x_new: &mut [f64]) {
+    x_new.copy_from_slice(x);
     for (i, ki) in k.iter().enumerate().take(tab.s) {
         if tab.b[i] != 0.0 {
-            crate::linalg::axpy(h * tab.b[i], ki, &mut x_new);
+            crate::linalg::axpy(h * tab.b[i], ki, x_new);
         }
     }
-    x_new
 }
 
 /// Pick an initial step size (simplified scipy `_select_initial_step`).
@@ -213,7 +302,7 @@ pub(crate) fn select_initial_step(
     nfe: &mut usize,
 ) -> f64 {
     let n = x0.len() as f64;
-    let scale: Vec<f64> = x0.iter().map(|&v| atol + rtol * v.abs()).collect();
+    let scale: Vec<f64> = x0.iter().map(|&v| (atol + rtol * v.abs()).max(SCALE_FLOOR)).collect();
     let d0 = (x0.iter().zip(&scale).map(|(v, s)| (v / s) * (v / s)).sum::<f64>() / n).sqrt();
     let d1 = (f0.iter().zip(&scale).map(|(v, s)| (v / s) * (v / s)).sum::<f64>() / n).sqrt();
     let h0 = if d0 < 1e-5 || d1 < 1e-5 { 1e-6 } else { 0.01 * d0 / d1 };
@@ -285,7 +374,6 @@ pub fn solve_ivp_final(
     solve_core(sys, params, x0, t0, t1, cfg, mem, false)
 }
 
-#[allow(clippy::too_many_arguments)]
 fn solve_core(
     sys: &dyn OdeSystem,
     params: &[f64],
@@ -315,10 +403,26 @@ fn solve_core(
     let solver_guard =
         crate::memory::MemGuard::f64s(mem, MemCategory::Solver, (tab.s + 3) * dim);
 
+    // Persistent per-solve buffers: the stage slopes `k`, the trial state
+    // `x_new`, the error vector, the FSAL slot, and the `rk_stages`
+    // scratch are all reused across steps — the steady-state step loop
+    // performs no heap allocation beyond the recorded checkpoints.
+    let mut ws = crate::workspace::Workspace::new();
     let mut t = t0;
     let mut x = x0.to_vec();
+    let mut x_new = vec![0.0; dim];
     let mut k: Vec<Vec<f64>> = Vec::new();
     let mut k1_fsal: Option<Vec<f64>> = None;
+    // Store `src` in the FSAL slot, reusing its allocation.
+    fn set_k1(slot: &mut Option<Vec<f64>>, src: &[f64]) {
+        match slot {
+            Some(v) => {
+                v.clear();
+                v.extend_from_slice(src);
+            }
+            None => *slot = Some(src.to_vec()),
+        }
+    }
 
     match cfg.mode {
         StepMode::Fixed { h } => {
@@ -326,7 +430,7 @@ fn solve_core(
             let n_steps = (span / h).round().max(1.0) as usize;
             let h_signed = direction * span / n_steps as f64;
             for _ in 0..n_steps {
-                let nfe = rk_stages(
+                let nfe = rk_stages_ws(
                     sys,
                     params,
                     tab,
@@ -336,16 +440,17 @@ fn solve_core(
                     k1_fsal.as_deref(),
                     &mut k,
                     None,
+                    &mut ws,
                 );
                 stats.nfe += nfe;
-                let x_new = rk_combine(tab, &x, h_signed, &k);
+                rk_combine_into(tab, &x, h_signed, &k, &mut x_new);
                 if tab.fsal && !tab.error_uses_new_f() {
-                    k1_fsal = Some(k[tab.s - 1].clone());
+                    set_k1(&mut k1_fsal, &k[tab.s - 1]);
                 } else {
                     k1_fsal = None; // dop853's k13 is only computed in adaptive mode
                 }
                 t += h_signed;
-                x = x_new;
+                std::mem::swap(&mut x, &mut x_new);
                 if record {
                     ts.push(t);
                     xs.push(x.clone());
@@ -366,6 +471,8 @@ fn solve_core(
                 ),
             };
             k1_fsal = Some(f0);
+            let mut err = vec![0.0; dim];
+            let mut fn_new = vec![0.0; dim];
             const SAFETY: f64 = 0.9;
             const MIN_FACTOR: f64 = 0.2;
             const MAX_FACTOR: f64 = 10.0;
@@ -385,7 +492,7 @@ fn solve_core(
                 }
                 let h_signed = direction * h;
 
-                let nfe = rk_stages(
+                let nfe = rk_stages_ws(
                     sys,
                     params,
                     tab,
@@ -395,30 +502,30 @@ fn solve_core(
                     k1_fsal.as_deref(),
                     &mut k,
                     None,
+                    &mut ws,
                 );
                 stats.nfe += nfe;
-                let x_new = rk_combine(tab, &x, h_signed, &k);
+                rk_combine_into(tab, &x, h_signed, &k, &mut x_new);
 
-                let (err_norm, f_new) = match &tab.err {
+                let (err_norm, have_fnew) = match &tab.err {
                     ErrorSpec::Embedded { weights } => {
-                        let mut err = vec![0.0; dim];
+                        err.fill(0.0);
                         for (i, ki) in k.iter().enumerate() {
                             if weights[i] != 0.0 {
                                 crate::linalg::axpy(h_signed * weights[i], ki, &mut err);
                             }
                         }
-                        (error_norm(&err, &x, &x_new, atol, rtol), None)
+                        (error_norm(&err, &x, &x_new, atol, rtol), false)
                     }
                     ErrorSpec::Dop853 { e3, e5 } => {
                         // needs f(t+h, x_new) as the extra slope
-                        let mut fn_new = vec![0.0; dim];
                         sys.eval(t + h_signed, &x_new, params, &mut fn_new);
                         stats.nfe += 1;
-                        let mut k_ext: Vec<Vec<f64>> = k.clone();
-                        k_ext.push(fn_new.clone());
                         (
-                            error_norm_dop853(e3, e5, &k_ext, h_signed, &x, &x_new, atol, rtol),
-                            Some(fn_new),
+                            error_norm_dop853(
+                                e3, e5, &k, &fn_new, h_signed, &x, &x_new, atol, rtol,
+                            ),
+                            true,
                         )
                     }
                     ErrorSpec::None => unreachable!("adaptive mode requires an error estimate"),
@@ -427,20 +534,20 @@ fn solve_core(
                 if err_norm <= 1.0 {
                     // accept
                     t += h_signed;
-                    x = x_new;
+                    std::mem::swap(&mut x, &mut x_new);
                     if record {
                         ts.push(t);
                         xs.push(x.clone());
                         mem.alloc_f64(MemCategory::Checkpoint, dim);
                     }
                     stats.n_steps += 1;
-                    k1_fsal = if let Some(fnew) = f_new {
-                        Some(fnew)
+                    if have_fnew {
+                        set_k1(&mut k1_fsal, &fn_new);
                     } else if tab.fsal {
-                        Some(k[tab.s - 1].clone())
+                        set_k1(&mut k1_fsal, &k[tab.s - 1]);
                     } else {
-                        None
-                    };
+                        k1_fsal = None;
+                    }
                     let factor = if err_norm == 0.0 {
                         MAX_FACTOR
                     } else {
@@ -450,7 +557,7 @@ fn solve_core(
                 } else {
                     stats.n_rejected += 1;
                     // k[0] = f(t, x) is still valid for the retried step
-                    k1_fsal = Some(k[0].clone());
+                    set_k1(&mut k1_fsal, &k[0]);
                     let factor =
                         (SAFETY * err_norm.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
                     h *= factor;

@@ -183,6 +183,37 @@ fn memory_tracking_of_checkpoints() {
     assert!(mem.peak(crate::memory::MemCategory::Solver) > 0);
 }
 
+/// Regression: with `atol = 0` and a state component that is identically
+/// zero, the error-norm scale `atol + rtol·max(|x|, |x_new|)` vanishes
+/// and the unclamped norm was `0/0 = NaN` — every trial step was
+/// rejected and step control panicked with a step-size underflow. The
+/// [`SCALE_FLOOR`] clamp keeps the norm finite (and exactly unchanged
+/// whenever the scale is above the floor).
+#[test]
+fn error_norm_scale_is_clamped_for_pure_relative_control() {
+    // direct: zero error / zero scale must not poison the norm
+    let n = error_norm(&[0.0, 1e-3], &[0.0, 1.0], &[0.0, 1.0], 0.0, 1e-8);
+    assert!(n.is_finite(), "norm = {n}");
+    // unaffected above the floor: identical to the unclamped value
+    let reference = ((1e-3f64 / 1e-8) * (1e-3 / 1e-8) / 2.0).sqrt();
+    assert!((n - reference).abs() < 1e-9 * reference);
+
+    // end to end: adaptive solve with atol = 0 and an identically-zero
+    // second component (params · 0 stays exactly 0 through every stage)
+    let sys = DiagonalLinear { dim: 2 };
+    let a = vec![0.5, -0.3];
+    let x0 = vec![1.0, 0.0];
+    let cfg = SolverConfig {
+        tableau: Tableau::dopri5(),
+        mode: StepMode::Adaptive { atol: 0.0, rtol: 1e-8, h0: None, max_steps: 100_000 },
+    };
+    let sol = solve_ivp(&sys, &a, &x0, 0.0, 1.0, &cfg);
+    let exact = sys.exact_solution(&x0, &a, 1.0);
+    let err = crate::util::stats::max_abs_diff(sol.final_state(), &exact);
+    assert!(err < 1e-6, "err = {err}");
+    assert!(sol.final_state().iter().all(|v| v.is_finite()));
+}
+
 #[test]
 #[should_panic]
 fn zero_interval_panics() {

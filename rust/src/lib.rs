@@ -20,6 +20,11 @@
 //! [`ode::OdeSystem`] trait the native (pure-Rust autodiff) backend uses,
 //! so every gradient method runs unchanged on either backend.
 
+// The numeric kernel APIs (solver steps, adjoint recursions, GEMM
+// wrappers) take flat argument lists by design; the arity lint would
+// otherwise need an allow on nearly every hot-path function.
+#![allow(clippy::too_many_arguments)]
+
 pub mod adjoint;
 pub mod autodiff;
 pub mod benchkit;
@@ -32,12 +37,14 @@ pub mod linalg;
 pub mod memory;
 pub mod nn;
 pub mod ode;
+pub mod parallel;
 pub mod physics;
 pub mod runtime;
 pub mod tableau;
 pub mod testkit;
 pub mod train;
 pub mod util;
+pub mod workspace;
 
 /// Convenience re-exports of the most commonly used types.
 pub mod prelude {
@@ -50,4 +57,5 @@ pub mod prelude {
     pub use crate::nn::{Adam, Mlp, Optimizer, Sgd};
     pub use crate::ode::{losses::SumLoss, Loss, NativeMlpSystem, OdeSystem};
     pub use crate::tableau::Tableau;
+    pub use crate::workspace::Workspace;
 }

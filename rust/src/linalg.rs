@@ -95,18 +95,34 @@ pub fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [
 /// `C[k,n] = Aᵀ·B` where `A` is `[m,k]`, `B` is `[m,n]` — the weight-
 /// gradient GEMM of backprop (`dW = hᵀ·g`).
 pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    c.fill(0.0);
+    gemm_tn_acc(m, k, n, a, b, c);
+}
+
+/// `C[k,n] += Aᵀ·B` — the accumulating, tiled form of [`gemm_tn`].
+///
+/// This is the workspace hot path's weight-gradient kernel: it writes
+/// directly into the caller's flat parameter-gradient slice (no `dw`
+/// scratch buffer), and tiles over both the reduction rows `i` and the
+/// output rows `p` so the active `C` tile stays cache-resident. For any
+/// fixed output element the reduction still runs in increasing `i`
+/// order, so results are bit-identical to the naive loop.
+pub fn gemm_tn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(c.len(), k * n);
-    c.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &ap) in arow.iter().enumerate() {
-            if ap != 0.0 {
-                let crow = &mut c[p * n..(p + 1) * n];
-                for (cj, bj) in crow.iter_mut().zip(brow) {
-                    *cj += ap * bj;
+    for p0 in (0..k).step_by(BLOCK) {
+        let p1 = (p0 + BLOCK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let brow = &b[i * n..(i + 1) * n];
+            for p in p0..p1 {
+                let ap = arow[p];
+                if ap != 0.0 {
+                    let crow = &mut c[p * n..(p + 1) * n];
+                    for (cj, bj) in crow.iter_mut().zip(brow) {
+                        *cj += ap * bj;
+                    }
                 }
             }
         }
@@ -261,6 +277,22 @@ mod tests {
         scal(0.5, &mut x);
         assert_eq!(x, vec![1.0, -2.0]);
         assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn gemm_tn_acc_accumulates_and_matches_tn() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[(1, 1, 1), (5, 3, 4), (70, 65, 9), (128, 64, 33)] {
+            let a = randv(&mut rng, m * k);
+            let b = randv(&mut rng, m * n);
+            let mut c_ref = vec![0.0; k * n];
+            gemm_tn(m, k, n, &a, &b, &mut c_ref);
+            let mut c = vec![0.5; k * n];
+            gemm_tn_acc(m, k, n, &a, &b, &mut c);
+            for (x, y) in c.iter().zip(&c_ref) {
+                assert!((x - (y + 0.5)).abs() < 1e-9, "({m},{k},{n}): {x} vs {}", y + 0.5);
+            }
+        }
     }
 
     #[test]

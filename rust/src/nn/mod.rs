@@ -10,6 +10,29 @@
 //! graph of a single use of the neural network" whose size is the `L` of
 //! the paper's Table 1. Gradient methods register the trace's bytes with
 //! the memory tracker for as long as they keep it alive.
+//!
+//! ## Allocating vs workspace paths
+//!
+//! Each entry point exists in two numerically identical forms:
+//!
+//! - the original allocating form ([`Mlp::forward`],
+//!   [`Mlp::forward_traced`], [`Mlp::backward`]) — the *reference path*,
+//!   kept for tests and one-off callers;
+//! - a `_ws` form ([`Mlp::forward_ws`], [`Mlp::forward_traced_ws`],
+//!   [`Mlp::backward_ws`]) that draws every per-layer intermediate
+//!   (ping-pong activation buffers, the `dW` scratch) from a caller-owned
+//!   [`crate::workspace::Workspace`] and writes results into
+//!   caller-provided buffers. After one warm-up call the `_ws` path
+//!   performs zero heap allocations, which is what makes the per-stage
+//!   inner loop of the symplectic adjoint backward pass allocation-free
+//!   (see [`crate::adjoint`]). Equivalence between the two forms is
+//!   asserted bit-for-bit by `rust/tests/workspace_suite.rs`.
+//!
+//! The [`MlpTrace`] retained by `forward_traced_ws` is reused in place
+//! across calls: its activation buffers are resized, never reallocated,
+//! once warm. The trace's *accounted* size (`L`) is unchanged — buffer
+//! reuse is real memory behavior, not a change to the paper's memory
+//! model (see [`crate::memory`]).
 
 pub mod optimizer;
 
@@ -17,6 +40,7 @@ pub use optimizer::{Adam, Optimizer, Sgd};
 
 use crate::linalg;
 use crate::util::Rng;
+use crate::workspace::Workspace;
 
 /// A fully connected tanh network: `dims = [in, h1, …, out]`; tanh after
 /// every layer except the last.
@@ -40,6 +64,12 @@ pub struct MlpTrace {
 }
 
 impl MlpTrace {
+    /// An empty trace for use with [`Mlp::forward_traced_ws`], which
+    /// (re)fills it in place.
+    pub fn empty() -> MlpTrace {
+        MlpTrace { acts: Vec::new(), batch: 0 }
+    }
+
     /// Bytes retained — the paper's per-use graph size `L`.
     pub fn bytes(&self) -> u64 {
         self.acts.iter().map(|a| (a.len() * 8) as u64).sum()
@@ -205,6 +235,174 @@ impl Mlp {
             grad = dh;
         }
         g_x.copy_from_slice(&grad);
+    }
+
+    /// Widest layer (input, hidden, or output) — sizes the ping-pong
+    /// buffers of the `_ws` paths.
+    fn max_width(&self) -> usize {
+        *self.dims.iter().max().unwrap()
+    }
+
+    /// Widest weight block — sizes the `dW` scratch of [`Mlp::backward_ws`].
+    fn max_weight_len(&self) -> usize {
+        (0..self.n_layers())
+            .map(|l| self.dims[l] * self.dims[l + 1])
+            .max()
+            .unwrap()
+    }
+
+    /// [`Mlp::forward`] with caller-provided output buffer and workspace
+    /// scratch: numerically identical, allocation-free once `ws` is warm.
+    /// `out` must be `[b, out_dim]`.
+    pub fn forward_ws(&self, x: &[f64], b: usize, params: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        assert_eq!(x.len(), b * self.in_dim(), "bad input shape");
+        assert_eq!(params.len(), self.param_len(), "bad param length");
+        assert_eq!(out.len(), b * self.out_dim(), "bad output shape");
+        let width = b * self.max_width();
+        let mut cur = ws.take(width);
+        cur[..x.len()].copy_from_slice(x);
+        let mut nxt = ws.take(width);
+        for l in 0..self.n_layers() {
+            let last = l == self.n_layers() - 1;
+            self.layer_forward(l, b, params, &cur, &mut nxt, !last);
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        out.copy_from_slice(&cur[..b * self.out_dim()]);
+        ws.put(cur);
+        ws.put(nxt);
+    }
+
+    /// One layer of the forward pass: `h_out[..b·dout] = act(h_in·W + b)`.
+    /// Shared by the `_ws` forward paths so traced and untraced runs are
+    /// bit-identical.
+    fn layer_forward(
+        &self,
+        l: usize,
+        b: usize,
+        params: &[f64],
+        h_in: &[f64],
+        h_out: &mut [f64],
+        apply_tanh: bool,
+    ) {
+        let (din, dout) = (self.dims[l], self.dims[l + 1]);
+        let off = self.layer_offset(l);
+        let w = &params[off..off + din * dout];
+        let bias = &params[off + din * dout..off + din * dout + dout];
+        let a = &mut h_out[..b * dout];
+        linalg::gemm_nn(b, din, dout, &h_in[..b * din], w, a);
+        for row in 0..b {
+            for (aj, bj) in a[row * dout..(row + 1) * dout].iter_mut().zip(bias) {
+                *aj += bj;
+            }
+        }
+        if apply_tanh {
+            for v in a.iter_mut() {
+                *v = v.tanh();
+            }
+        }
+    }
+
+    /// [`Mlp::forward_traced`] refilling a caller-owned [`MlpTrace`] in
+    /// place (no per-call trace allocation once the trace is warm).
+    /// `out` must be `[b, out_dim]`.
+    pub fn forward_traced_ws(
+        &self,
+        x: &[f64],
+        b: usize,
+        params: &[f64],
+        out: &mut [f64],
+        trace: &mut MlpTrace,
+        ws: &mut Workspace,
+    ) {
+        assert_eq!(x.len(), b * self.in_dim(), "bad input shape");
+        assert_eq!(params.len(), self.param_len(), "bad param length");
+        assert_eq!(out.len(), b * self.out_dim(), "bad output shape");
+        let nl = self.n_layers();
+        trace.batch = b;
+        trace.acts.resize_with(nl, Vec::new);
+        trace.acts[0].clear();
+        trace.acts[0].extend_from_slice(x);
+
+        let width = b * self.max_width();
+        let mut cur = ws.take(width);
+        cur[..x.len()].copy_from_slice(x);
+        let mut nxt = ws.take(width);
+        for l in 0..nl {
+            let last = l == nl - 1;
+            self.layer_forward(l, b, params, &cur, &mut nxt, !last);
+            if !last {
+                let dout = self.dims[l + 1];
+                trace.acts[l + 1].clear();
+                trace.acts[l + 1].extend_from_slice(&nxt[..b * dout]);
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+        }
+        out.copy_from_slice(&cur[..b * self.out_dim()]);
+        ws.put(cur);
+        ws.put(nxt);
+    }
+
+    /// [`Mlp::backward`] with workspace scratch: the upstream-gradient
+    /// ping-pong buffers and the per-layer `dW` block come from `ws`
+    /// instead of fresh heap allocations. Numerically identical to the
+    /// reference path (same kernels, same accumulation order);
+    /// `g_params` is accumulated into, `g_x` overwritten, as before.
+    pub fn backward_ws(
+        &self,
+        trace: &MlpTrace,
+        params: &[f64],
+        g: &[f64],
+        g_x: &mut [f64],
+        g_params: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let b = trace.batch;
+        assert_eq!(g.len(), b * self.out_dim());
+        assert_eq!(g_x.len(), b * self.in_dim());
+        assert_eq!(g_params.len(), self.param_len());
+
+        let width = b * self.max_width();
+        let mut grad = ws.take(width);
+        grad[..g.len()].copy_from_slice(g);
+        let mut dh_buf = ws.take(width);
+        let mut dw = ws.take(self.max_weight_len());
+
+        for l in (0..self.n_layers()).rev() {
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let off = self.layer_offset(l);
+            let w = &params[off..off + din * dout];
+            let h_in = &trace.acts[l]; // [b, din]
+            let gcur = &grad[..b * dout];
+
+            // dW_l = h_inᵀ · grad ; db_l = column-sum(grad). The dW block
+            // is summed in scratch first so the accumulation into
+            // g_params stays bit-identical to the reference path.
+            let dwl = &mut dw[..din * dout];
+            linalg::gemm_tn(b, din, dout, h_in, gcur, dwl);
+            for (gw, d) in g_params[off..off + din * dout].iter_mut().zip(dwl.iter()) {
+                *gw += d;
+            }
+            let gb = &mut g_params[off + din * dout..off + din * dout + dout];
+            for row in 0..b {
+                for (j, gbj) in gb.iter_mut().enumerate() {
+                    *gbj += gcur[row * dout + j];
+                }
+            }
+
+            // dh_in = grad · Wᵀ, then fold tanh' for hidden inputs
+            let dh = &mut dh_buf[..b * din];
+            linalg::gemm_nt(b, dout, din, gcur, w, dh);
+            if l > 0 {
+                for (d, &hv) in dh.iter_mut().zip(h_in.iter()) {
+                    *d *= 1.0 - hv * hv;
+                }
+            }
+            std::mem::swap(&mut grad, &mut dh_buf);
+        }
+        g_x.copy_from_slice(&grad[..b * self.in_dim()]);
+        ws.put(grad);
+        ws.put(dh_buf);
+        ws.put(dw);
     }
 
     /// Bytes an [`MlpTrace`] for batch `b` will retain (without running).

@@ -9,8 +9,9 @@
 //!   dynamics of §5.1;
 //! - [`crate::physics::HnnSystem`] — the `f = G∇H` Hamiltonian-style
 //!   field of §5.2;
-//! - [`crate::runtime::PjrtSystem`] — AOT-compiled JAX/Pallas artifacts
-//!   executed through PJRT (the deployment path);
+//! - `crate::runtime::PjrtSystem` (behind the `pjrt` feature) —
+//!   AOT-compiled JAX/Pallas artifacts executed through PJRT (the
+//!   deployment path);
 //! - [`analytic`] — closed-form systems used by exactness tests.
 //!
 //! The trait exposes both a plain evaluation and a *traced* evaluation
@@ -24,6 +25,7 @@ pub mod native;
 
 pub use native::NativeMlpSystem;
 
+use crate::workspace::Workspace;
 use std::any::Any;
 
 /// An opaque retained computation graph for one evaluation of `f`.
@@ -78,6 +80,35 @@ pub trait OdeSystem {
         let mut out = vec![0.0; self.dim()];
         let trace = self.eval_traced(t, x, params, &mut out);
         self.vjp_traced(trace.as_ref(), params, lam, g_x, g_p);
+    }
+
+    /// Fused recompute-and-VJP with caller-provided scratch — the
+    /// allocation-free inner step of [`crate::adjoint::adjoint_step_ws`]
+    /// (Algorithm 2 lines 10–12: recompute one traced use, take the VJP,
+    /// discard the tape). Returns the transient tape's byte count so the
+    /// caller can account it as `Tape` memory for the duration of the
+    /// call's conceptual lifetime.
+    ///
+    /// The default implementation is the reference allocating path
+    /// (`eval_traced` + `vjp_traced`); backends with hand-rolled passes
+    /// override it to draw every intermediate from the [`Workspace`].
+    /// Must be numerically identical to the default path.
+    fn vjp_fused_ws(
+        &self,
+        t: f64,
+        x: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+        ws: &mut Workspace,
+    ) -> u64 {
+        let mut out = ws.take(self.dim());
+        let trace = self.eval_traced(t, x, params, &mut out);
+        let bytes = trace.bytes();
+        self.vjp_traced(trace.as_ref(), params, lam, g_x, g_p);
+        ws.put(out);
+        bytes
     }
 }
 

@@ -9,13 +9,26 @@
 use super::{OdeSystem, Trace};
 use crate::nn::{Mlp, MlpTrace};
 use crate::util::Rng;
+use crate::workspace::Workspace;
+use std::cell::RefCell;
 
 /// MLP-based ODE system. State layout: `[batch, state_dim]` flattened
 /// row-major; the network input is `[x_i ‖ t]` per sample.
+///
+/// Hot-path evaluations draw their scratch (the `[x ‖ t]` input batch,
+/// ping-pong activations, gradient buffers, and the transient trace of
+/// the fused VJP) from an internal [`Workspace`], so steady-state solves
+/// and adjoint sweeps perform no per-call heap allocation. The workspace
+/// lives in a `RefCell` (single-threaded use per instance); parallel
+/// drivers construct one system per worker thread.
 pub struct NativeMlpSystem {
     pub net: Mlp,
     pub state_dim: usize,
     pub batch: usize,
+    ws: RefCell<Workspace>,
+    /// Reusable trace for [`OdeSystem::vjp_fused_ws`] (never retained
+    /// across calls — the fused path frees the conceptual tape on exit).
+    fused_trace: RefCell<MlpTrace>,
 }
 
 struct NativeTrace {
@@ -49,7 +62,13 @@ impl NativeMlpSystem {
         let state_dim = dims[0];
         let mut net_dims = dims.to_vec();
         net_dims[0] = state_dim + 1; // time feature
-        NativeMlpSystem { net: Mlp::new(&net_dims), state_dim, batch }
+        NativeMlpSystem {
+            net: Mlp::new(&net_dims),
+            state_dim,
+            batch,
+            ws: RefCell::new(Workspace::new()),
+            fused_trace: RefCell::new(MlpTrace::empty()),
+        }
     }
 
     pub fn init_params(&self) -> Vec<f64> {
@@ -72,6 +91,23 @@ impl NativeMlpSystem {
         }
         inp
     }
+
+    /// Fill a preallocated `[batch, state_dim+1]` buffer with `[x ‖ t]`.
+    fn fill_net_input(&self, t: f64, x: &[f64], inp: &mut [f64]) {
+        let d = self.state_dim;
+        for s in 0..self.batch {
+            inp[s * (d + 1)..s * (d + 1) + d].copy_from_slice(&x[s * d..(s + 1) * d]);
+            inp[s * (d + 1) + d] = t;
+        }
+    }
+
+    /// Strip the time-feature column of a `[batch, state_dim+1]` gradient.
+    fn strip_time_column(&self, g_in: &[f64], g_x: &mut [f64]) {
+        let d = self.state_dim;
+        for s in 0..self.batch {
+            g_x[s * d..(s + 1) * d].copy_from_slice(&g_in[s * (d + 1)..s * (d + 1) + d]);
+        }
+    }
 }
 
 impl OdeSystem for NativeMlpSystem {
@@ -84,9 +120,12 @@ impl OdeSystem for NativeMlpSystem {
     }
 
     fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
-        let inp = self.net_input(t, x);
-        let y = self.net.forward(&inp, self.batch, params);
-        out.copy_from_slice(&y);
+        let d = self.state_dim;
+        let mut ws = self.ws.borrow_mut();
+        let mut inp = ws.take(self.batch * (d + 1));
+        self.fill_net_input(t, x, &mut inp);
+        self.net.forward_ws(&inp, self.batch, params, out, &mut ws);
+        ws.put(inp);
     }
 
     fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
@@ -106,16 +145,48 @@ impl OdeSystem for NativeMlpSystem {
     ) {
         let tr = trace.as_any().downcast_ref::<NativeTrace>().unwrap();
         let d = self.state_dim;
-        let mut g_in = vec![0.0; self.batch * (d + 1)];
-        self.net.backward(&tr.mlp, params, lam, &mut g_in, g_p);
-        // strip the time-feature column
-        for s in 0..self.batch {
-            g_x[s * d..(s + 1) * d].copy_from_slice(&g_in[s * (d + 1)..s * (d + 1) + d]);
-        }
+        let mut ws = self.ws.borrow_mut();
+        let mut g_in = ws.take(self.batch * (d + 1));
+        self.net.backward_ws(&tr.mlp, params, lam, &mut g_in, g_p, &mut ws);
+        self.strip_time_column(&g_in, g_x);
+        ws.put(g_in);
     }
 
     fn trace_bytes(&self) -> u64 {
         self.net.trace_bytes(self.batch)
+    }
+
+    /// Fused recompute + VJP (Algorithm 2 lines 10–12) with every
+    /// intermediate — input batch, activations, trace, gradient buffers —
+    /// drawn from the workspace: zero heap allocations once warm. The
+    /// conceptual transient tape is the reused [`MlpTrace`]; its byte
+    /// count (the paper's `L`) is returned for `Tape` accounting exactly
+    /// as the allocating path reports it.
+    fn vjp_fused_ws(
+        &self,
+        t: f64,
+        x: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+        ws: &mut Workspace,
+    ) -> u64 {
+        let d = self.state_dim;
+        let b = self.batch;
+        let mut inp = ws.take(b * (d + 1));
+        self.fill_net_input(t, x, &mut inp);
+        let mut out = ws.take(self.dim());
+        let mut trace = self.fused_trace.borrow_mut();
+        self.net.forward_traced_ws(&inp, b, params, &mut out, &mut trace, ws);
+        let mut g_in = ws.take(b * (d + 1));
+        self.net.backward_ws(&trace, params, lam, &mut g_in, g_p, ws);
+        self.strip_time_column(&g_in, g_x);
+        let bytes = trace.bytes();
+        ws.put(inp);
+        ws.put(out);
+        ws.put(g_in);
+        bytes
     }
 }
 

@@ -1,0 +1,159 @@
+//! Scoped-thread parallel execution for embarrassingly parallel work:
+//! per-method/per-cell experiment sweeps and sharded mini-batch gradient
+//! evaluation.
+//!
+//! Built on `std::thread::scope` only — no external dependencies. Workers
+//! claim item indices dynamically from a shared atomic counter (cheap
+//! work stealing, so one slow cell doesn't idle the other cores), and
+//! results are returned **in index order**, which makes a parallel sweep
+//! bitwise-deterministic: each item's computation is self-contained
+//! (per-thread system + [`crate::workspace::Workspace`]; nothing shared),
+//! so the output is identical to running the same items serially — a
+//! property `rust/tests/workspace_suite.rs` asserts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker threads to use: the machine's available parallelism (≥ 1).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(i)` for `i in 0..n` across up to [`num_threads`] scoped
+/// workers and return the results in index order.
+///
+/// `f` must be freely callable from several threads (`Sync`, no interior
+/// single-threaded state); per-item state — systems, workspaces, RNGs —
+/// should be constructed *inside* `f` so each item is self-contained.
+/// With a deterministic `f`, the result is identical to
+/// `(0..n).map(f).collect()` regardless of scheduling.
+pub fn parallel_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let f_ref = &f;
+    let next_ref = &next;
+    let mut collected: Vec<Vec<(usize, R)>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f_ref(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(v) => collected.push(v),
+                Err(e) => std::panic::resume_unwind(e),
+            }
+        }
+    });
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in collected.into_iter().flatten() {
+        results[i] = Some(r);
+    }
+    results.into_iter().map(|r| r.expect("parallel_map_indexed missed an index")).collect()
+}
+
+/// Split `n` items into `shards` contiguous `(start, end)` ranges of
+/// near-equal size (the first `n % shards` ranges get one extra item).
+/// Empty ranges are never produced; fewer than `shards` ranges are
+/// returned when `n < shards`.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_serial_in_order() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64) * 31 + 7).collect();
+        let par = parallel_map_indexed(257, |i| (i as u64) * 31 + 7);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e: Vec<u8> = parallel_map_indexed(0, |_| 1u8);
+        assert!(e.is_empty());
+        assert_eq!(parallel_map_indexed(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn uses_multiple_threads_when_available() {
+        if num_threads() < 2 {
+            return; // single-core runner: nothing to assert
+        }
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        parallel_map_indexed(64, |_| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert!(seen.lock().unwrap().len() >= 2);
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for n in [0usize, 1, 5, 16, 17, 100] {
+            for shards in [1usize, 2, 3, 8, 200] {
+                let ranges = shard_ranges(n, shards);
+                let total: usize = ranges.iter().map(|(a, b)| b - a).sum();
+                assert_eq!(total, n, "n={n} shards={shards}");
+                let mut pos = 0;
+                for &(a, b) in &ranges {
+                    assert_eq!(a, pos);
+                    assert!(b > a, "empty range for n={n} shards={shards}");
+                    pos = b;
+                }
+                // near-equal: sizes differ by at most one
+                if !ranges.is_empty() {
+                    let min = ranges.iter().map(|(a, b)| b - a).min().unwrap();
+                    let max = ranges.iter().map(|(a, b)| b - a).max().unwrap();
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panics_propagate() {
+        parallel_map_indexed(8, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

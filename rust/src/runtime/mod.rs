@@ -7,23 +7,40 @@
 //! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
 //! `XlaComputation` → `PjRtClient::compile` → `execute`. Python never runs
 //! on this path; the artifacts are produced once by `make artifacts`.
+//!
+//! The PJRT execution path requires the unpublished `xla` bindings, which
+//! only exist in environments that vendor them. It is therefore gated
+//! behind the `pjrt` cargo feature: the [`manifest`] module (pure Rust —
+//! artifact metadata parsing) always builds, while `PjrtRuntime` /
+//! `PjrtSystem` compile only with `--features pjrt`. Because an absent
+//! crate cannot be declared as an optional dependency (cargo resolves
+//! the whole dependency graph regardless of features), turning the
+//! feature on additionally requires vendoring the bindings and adding
+//! `xla = { path = "vendor/xla" }` to the root `Cargo.toml`. The
+//! default build is fully self-contained on the native backend.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod system;
 
 pub use manifest::{ConfigEntry, Manifest};
+#[cfg(feature = "pjrt")]
 pub use system::PjrtSystem;
 
+#[cfg(feature = "pjrt")]
 use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 /// A PJRT client plus the artifact directory it loads from.
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     pub client: xla::PjRtClient,
     pub artifact_dir: PathBuf,
     pub manifest: Manifest,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Create a CPU PJRT client and read `<dir>/manifest.json`.
     pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
@@ -78,6 +95,7 @@ impl PjrtRuntime {
 }
 
 /// Convert an `f64` slice into an `f32` literal of the given shape.
+#[cfg(feature = "pjrt")]
 pub(crate) fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
     let f32s: Vec<f32> = data.iter().map(|&v| v as f32).collect();
     let lit = xla::Literal::vec1(&f32s);
@@ -88,6 +106,7 @@ pub(crate) fn literal_f32(data: &[f64], dims: &[i64]) -> Result<xla::Literal> {
 }
 
 /// Read an `f32` literal back into an `f64` vec.
+#[cfg(feature = "pjrt")]
 pub(crate) fn literal_to_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
     let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("reading literal: {e:?}"))?;
     Ok(v.into_iter().map(|x| x as f64).collect())

@@ -4,13 +4,20 @@
 //! drives one [`crate::adjoint::GradientMethod`] per step, aggregating the
 //! per-component memory/cost stats the way a single-process framework
 //! would experience them (see [`StackStats::aggregate`]).
+//!
+//! [`ShardedMlpGradient`] is the data-parallel path: a mini-batch's rows
+//! are split into contiguous shards, each shard's gradient is computed on
+//! its own worker thread (own [`crate::ode::NativeMlpSystem`], own
+//! workspace — nothing shared), and the shard results are merged in shard
+//! order, so the parallel result is bit-identical to running the same
+//! shards serially.
 
-use crate::adjoint::{GradResult, GradientMethod};
+use crate::adjoint::{method_by_name, GradResult, GradientMethod};
 use crate::cnf::{CnfNllLoss, CnfSystem, Dataset};
 use crate::integrate::SolverConfig;
 use crate::nn::{Adam, Optimizer};
-use crate::ode::losses::{LinearLoss, MseLoss};
-use crate::ode::Loss;
+use crate::ode::losses::{LinearLoss, MseLoss, SumLoss};
+use crate::ode::{Loss, NativeMlpSystem};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -207,6 +214,143 @@ impl CnfTrainer {
             StackStats::aggregate(&flat, graph_retaining, start.elapsed().as_secs_f64());
         stats.loss = final_loss;
         Ok(stats)
+    }
+}
+
+/// Data-parallel mini-batch gradient for the batched MLP vector field.
+///
+/// The rows of a `[batch, d]` state batch evolve independently under
+/// [`NativeMlpSystem`] (one ODE per sample, shared parameters), and the
+/// batch objective `Σ_rows L(x_row(T))` decomposes as a sum over rows —
+/// so the gradient of a mini-batch is the row-concatenation of `λ₀` /
+/// `x(T)` and the **sum** of the per-shard parameter gradients. This
+/// driver exploits that: rows are split into [`crate::parallel::shard_ranges`]
+/// shards, each computed on its own scoped thread with a private system
+/// and workspace, then merged in shard order (deterministic — see
+/// [`ShardedMlpGradient::gradient_serial`], whose loss/state/gradient
+/// outputs the parallel result matches bit-for-bit for the same shard
+/// count; only the memory-peak stats model concurrency differently).
+pub struct ShardedMlpGradient {
+    /// State-side layer dims `[d, h…, d]` of the vector field.
+    pub dims: Vec<usize>,
+    /// Number of shards to split the batch into (also the maximum
+    /// concurrency). Defaults to the machine's available parallelism.
+    pub shards: usize,
+}
+
+impl ShardedMlpGradient {
+    pub fn new(dims: &[usize]) -> ShardedMlpGradient {
+        ShardedMlpGradient { dims: dims.to_vec(), shards: crate::parallel::num_threads() }
+    }
+
+    pub fn with_shards(dims: &[usize], shards: usize) -> ShardedMlpGradient {
+        assert!(shards >= 1);
+        ShardedMlpGradient { dims: dims.to_vec(), shards }
+    }
+
+    /// Gradient of `Σ_rows Σ_i x_row(T)_i` (the [`SumLoss`] objective) for
+    /// a `[batch, d]` mini-batch, fanned out across worker threads.
+    ///
+    /// `method` is a [`method_by_name`] name; each worker constructs its
+    /// own method instance and system. Errors from any shard (e.g. MALI
+    /// with an adaptive config) are propagated.
+    pub fn gradient(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        batch: usize,
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+    ) -> anyhow::Result<GradResult> {
+        let shard_results = self.run_shards(method, params, x0, batch, t0, t1, cfg, true)?;
+        Self::merge(shard_results, true)
+    }
+
+    /// The serial reference: identical shard decomposition and merge
+    /// order, executed on the calling thread. Loss, states, and
+    /// gradients are bit-identical to [`ShardedMlpGradient::gradient`];
+    /// only the memory-peak stats differ (serial shards never coexist,
+    /// so peaks combine by max instead of sum).
+    pub fn gradient_serial(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        batch: usize,
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+    ) -> anyhow::Result<GradResult> {
+        let shard_results = self.run_shards(method, params, x0, batch, t0, t1, cfg, false)?;
+        Self::merge(shard_results, false)
+    }
+
+    fn run_shards(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        batch: usize,
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        parallel: bool,
+    ) -> anyhow::Result<Vec<GradResult>> {
+        let d = self.dims[0];
+        assert_eq!(x0.len(), batch * d, "x0 must be [batch, d]");
+        anyhow::ensure!(batch > 0, "empty batch");
+        let ranges = crate::parallel::shard_ranges(batch, self.shards);
+        let cell = |si: usize| -> anyhow::Result<GradResult> {
+            let (a, b) = ranges[si];
+            let sys = NativeMlpSystem::with_batch(&self.dims, b - a, 0);
+            let m = method_by_name(method)
+                .ok_or_else(|| anyhow::anyhow!("unknown gradient method {method:?}"))?;
+            m.gradient(&sys, params, &x0[a * d..b * d], t0, t1, cfg, &SumLoss)
+        };
+        let results: Vec<anyhow::Result<GradResult>> = if parallel {
+            crate::parallel::parallel_map_indexed(ranges.len(), cell)
+        } else {
+            (0..ranges.len()).map(cell).collect()
+        };
+        results.into_iter().collect()
+    }
+
+    /// Merge per-shard results in shard order: losses and parameter
+    /// gradients sum, states and state gradients concatenate, and NFE
+    /// counts sum. Memory peaks sum when the shards ran concurrently
+    /// (they coexist, so the summed peak models the process-wide working
+    /// set) but combine by max for a serial run, where only one shard's
+    /// working set is ever live.
+    fn merge(shards: Vec<GradResult>, concurrent: bool) -> anyhow::Result<GradResult> {
+        let mut it = shards.into_iter();
+        let mut acc = it.next().ok_or_else(|| anyhow::anyhow!("no shards produced"))?;
+        for r in it {
+            acc.loss += r.loss;
+            acc.x_final.extend_from_slice(&r.x_final);
+            acc.grad_x0.extend_from_slice(&r.grad_x0);
+            for (g, v) in acc.grad_params.iter_mut().zip(&r.grad_params) {
+                *g += v;
+            }
+            acc.stats.nfe_forward += r.stats.nfe_forward;
+            acc.stats.nfe_backward += r.stats.nfe_backward;
+            acc.stats.n_steps_forward = acc.stats.n_steps_forward.max(r.stats.n_steps_forward);
+            acc.stats.n_steps_backward =
+                acc.stats.n_steps_backward.max(r.stats.n_steps_backward);
+            if concurrent {
+                acc.stats.peak_mem_bytes += r.stats.peak_mem_bytes;
+                acc.stats.peak_tape_bytes += r.stats.peak_tape_bytes;
+                acc.stats.peak_checkpoint_bytes += r.stats.peak_checkpoint_bytes;
+            } else {
+                acc.stats.peak_mem_bytes = acc.stats.peak_mem_bytes.max(r.stats.peak_mem_bytes);
+                acc.stats.peak_tape_bytes =
+                    acc.stats.peak_tape_bytes.max(r.stats.peak_tape_bytes);
+                acc.stats.peak_checkpoint_bytes =
+                    acc.stats.peak_checkpoint_bytes.max(r.stats.peak_checkpoint_bytes);
+            }
+        }
+        Ok(acc)
     }
 }
 

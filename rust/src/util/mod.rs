@@ -1,9 +1,9 @@
 //! Small self-contained substrates the rest of the crate builds on.
 //!
-//! The offline build environment only vendors the `xla` crate's dependency
-//! closure, so general-purpose utility crates (`rand`, `serde`,
-//! `criterion`, …) are unavailable. The pieces we actually need are small
-//! and are implemented (and tested) here instead:
+//! The offline build environment has no registry access (only a vendored
+//! `anyhow` shim under `vendor/`), so general-purpose utility crates
+//! (`rand`, `serde`, `criterion`, …) are unavailable. The pieces we
+//! actually need are small and are implemented (and tested) here instead:
 //!
 //! - [`rng`]: a seedable, reproducible PCG-family random generator.
 //! - [`json`]: a minimal JSON value type with writer and parser, used for

@@ -2,7 +2,10 @@
 //! → gradient methods, and cross-backend agreement with the native tape.
 //!
 //! These tests skip (pass trivially) when `artifacts/` has not been built
-//! (`make artifacts`); CI runs them after the artifact step.
+//! (`make artifacts`); CI runs them after the artifact step. The whole
+//! file requires the `pjrt` feature (the xla bindings are not available
+//! in the default offline build).
+#![cfg(feature = "pjrt")]
 
 use sympode::adjoint::{BackpropMethod, GradientMethod, SymplecticAdjoint};
 use sympode::cnf::{CnfNllLoss, CnfSystem, TraceEstimator};

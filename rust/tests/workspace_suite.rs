@@ -1,0 +1,330 @@
+//! Equivalence and determinism suite for the workspace + parallel hot
+//! paths:
+//!
+//! - the `_ws` forward/traced/backward MLP paths must reproduce the
+//!   original allocating paths **bit-for-bit**;
+//! - `rk_stages_ws`/`rk_combine_into` must reproduce
+//!   `rk_stages`/`rk_combine` bit-for-bit on every shipped tableau;
+//! - `adjoint_step_ws` with one workspace reused across steps must match
+//!   a fresh-workspace run bit-for-bit on every shipped tableau (no
+//!   cross-step contamination), and the warm loop must stop allocating
+//!   pool buffers;
+//! - the parallel sweep/shard drivers must produce results identical to
+//!   their serial counterparts.
+
+use sympode::adjoint::{
+    adjoint_step, adjoint_step_ws, method_by_name, GradientMethod, StageSource,
+};
+use sympode::integrate::{
+    rk_combine, rk_combine_into, rk_stages, rk_stages_ws, SolverConfig,
+};
+use sympode::memory::MemTracker;
+use sympode::nn::{Mlp, MlpTrace};
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::parallel::parallel_map_indexed;
+use sympode::tableau::Tableau;
+use sympode::train::ShardedMlpGradient;
+use sympode::util::Rng;
+use sympode::workspace::Workspace;
+
+#[test]
+fn mlp_forward_ws_is_bitwise_equal() {
+    let mut rng = Rng::new(1);
+    let mut ws = Workspace::new();
+    for dims in [vec![3, 8, 2], vec![4, 16, 16, 4], vec![5, 2], vec![2, 7, 7, 7, 2]] {
+        for b in [1usize, 3, 8] {
+            let m = Mlp::new(&dims);
+            let p = m.init_params(&mut rng);
+            let x = rng.normal_vec(b * m.in_dim());
+            let reference = m.forward(&x, b, &p);
+            let mut out = vec![0.0; b * m.out_dim()];
+            m.forward_ws(&x, b, &p, &mut out, &mut ws);
+            assert_eq!(reference, out, "dims {dims:?} b {b}");
+        }
+    }
+}
+
+#[test]
+fn mlp_traced_ws_is_bitwise_equal_and_trace_reuses() {
+    let mut rng = Rng::new(2);
+    let mut ws = Workspace::new();
+    let m = Mlp::new(&[4, 12, 12, 4]);
+    let p = m.init_params(&mut rng);
+    let b = 5;
+    let mut trace = MlpTrace::empty();
+    for _ in 0..4 {
+        let x = rng.normal_vec(b * 4);
+        let (reference, ref_trace) = m.forward_traced(&x, b, &p);
+        let mut out = vec![0.0; b * 4];
+        m.forward_traced_ws(&x, b, &p, &mut out, &mut trace, &mut ws);
+        assert_eq!(reference, out);
+        assert_eq!(ref_trace.acts, trace.acts);
+        assert_eq!(ref_trace.batch, trace.batch);
+        assert_eq!(ref_trace.bytes(), trace.bytes());
+    }
+}
+
+#[test]
+fn mlp_backward_ws_is_bitwise_equal() {
+    let mut rng = Rng::new(3);
+    let mut ws = Workspace::new();
+    let m = Mlp::new(&[3, 10, 6, 3]);
+    let p = m.init_params(&mut rng);
+    let b = 4;
+    let x = rng.normal_vec(b * 3);
+    let lam = rng.normal_vec(b * 3);
+    let (_, trace) = m.forward_traced(&x, b, &p);
+
+    // accumulate twice from a nonzero start — the adjoint usage pattern
+    let mut gx_ref = vec![0.0; b * 3];
+    let mut gp_ref = rng.normal_vec(m.param_len());
+    let mut gx_ws = vec![0.0; b * 3];
+    let mut gp_ws = gp_ref.clone();
+    for _ in 0..2 {
+        m.backward(&trace, &p, &lam, &mut gx_ref, &mut gp_ref);
+        m.backward_ws(&trace, &p, &lam, &mut gx_ws, &mut gp_ws, &mut ws);
+    }
+    assert_eq!(gx_ref, gx_ws);
+    assert_eq!(gp_ref, gp_ws);
+}
+
+#[test]
+fn rk_paths_are_bitwise_equal_on_all_tableaus() {
+    let sys = NativeMlpSystem::with_batch(&[3, 12, 3], 2, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(4);
+    let x = rng.normal_vec(sys.dim());
+    let h = 0.13;
+    let mut ws = Workspace::new();
+    for tab in Tableau::all() {
+        let mut k_ref = Vec::new();
+        let mut st_ref = Vec::new();
+        let nfe_ref =
+            rk_stages(&sys, &p, &tab, 0.2, &x, h, None, &mut k_ref, Some(&mut st_ref));
+        let mut k_ws = Vec::new();
+        let mut st_ws = Vec::new();
+        let nfe_ws = rk_stages_ws(
+            &sys, &p, &tab, 0.2, &x, h, None, &mut k_ws, Some(&mut st_ws), &mut ws,
+        );
+        assert_eq!(nfe_ref, nfe_ws, "{}", tab.name);
+        assert_eq!(k_ref, k_ws, "{}", tab.name);
+        assert_eq!(st_ref, st_ws, "{}", tab.name);
+
+        let combined = rk_combine(&tab, &x, h, &k_ref);
+        let mut into = vec![0.0; x.len()];
+        rk_combine_into(&tab, &x, h, &k_ref, &mut into);
+        assert_eq!(combined, into, "{}", tab.name);
+    }
+}
+
+#[test]
+fn adjoint_step_ws_reused_workspace_is_bitwise_stable_on_all_tableaus() {
+    let sys = NativeMlpSystem::with_batch(&[2, 10, 2], 2, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(5);
+    let x0 = rng.normal_vec(sys.dim());
+    let h = 0.09;
+    let mem = MemTracker::new();
+    // one workspace deliberately shared across every tableau and step —
+    // any cross-step buffer contamination would break equality with the
+    // fresh-workspace reference
+    let mut shared_ws = Workspace::new();
+    for tab in Tableau::all() {
+        let mut k = Vec::new();
+        let mut stages = Vec::new();
+        rk_stages(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages));
+        let stage_t: Vec<f64> = tab.c.iter().map(|&c| c * h).collect();
+
+        let lam1 = rng.normal_vec(sys.dim());
+        let mut lam_ref = lam1.clone();
+        let mut th_ref = vec![0.0; sys.n_params()];
+        adjoint_step(
+            &sys,
+            &p,
+            &tab,
+            0.0,
+            h,
+            &mut lam_ref,
+            &mut th_ref,
+            StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+            &mem,
+        );
+
+        for rep in 0..3 {
+            let mut lam = lam1.clone();
+            let mut th = vec![0.0; sys.n_params()];
+            adjoint_step_ws(
+                &sys,
+                &p,
+                &tab,
+                0.0,
+                h,
+                &mut lam,
+                &mut th,
+                StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+                &mem,
+                &mut shared_ws,
+            );
+            assert_eq!(lam_ref, lam, "{} rep {rep}", tab.name);
+            assert_eq!(th_ref, th, "{} rep {rep}", tab.name);
+        }
+    }
+}
+
+#[test]
+fn warm_adjoint_loop_stops_allocating_pool_buffers() {
+    let sys = NativeMlpSystem::with_batch(&[4, 32, 4], 8, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(6);
+    let x0 = rng.normal_vec(sys.dim());
+    let tab = Tableau::dopri5();
+    let h = 1.0 / 16.0;
+    let mem = MemTracker::new();
+    let mut ws = Workspace::new();
+    let mut k = Vec::new();
+    let mut stages = Vec::new();
+    let mut lam = rng.normal_vec(sys.dim());
+    let mut th = vec![0.0; sys.n_params()];
+
+    let mut sweep = |ws: &mut Workspace, lam: &mut Vec<f64>, th: &mut Vec<f64>| {
+        for n in 0..4 {
+            let t_n = n as f64 * h;
+            rk_stages_ws(&sys, &p, &tab, t_n, &x0, h, None, &mut k, Some(&mut stages), ws);
+            let stage_t: Vec<f64> = tab.c.iter().map(|&c| t_n + c * h).collect();
+            adjoint_step_ws(
+                &sys,
+                &p,
+                &tab,
+                t_n,
+                h,
+                lam,
+                th,
+                StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+                &mem,
+                ws,
+            );
+        }
+    };
+    sweep(&mut ws, &mut lam, &mut th); // warm-up
+    sweep(&mut ws, &mut lam, &mut th);
+    let misses_after_warmup = ws.misses();
+    sweep(&mut ws, &mut lam, &mut th);
+    sweep(&mut ws, &mut lam, &mut th);
+    assert_eq!(
+        ws.misses(),
+        misses_after_warmup,
+        "warm backward sweeps must not allocate new pool buffers"
+    );
+}
+
+#[test]
+fn sharded_parallel_gradient_is_bitwise_identical_to_serial() {
+    let dims = [3usize, 16, 3];
+    let batch = 13; // uneven split across shards
+    let probe = NativeMlpSystem::with_batch(&dims, batch, 0);
+    let p = probe.init_params();
+    let mut rng = Rng::new(7);
+    let x0 = rng.normal_vec(probe.dim());
+
+    for cfg in [
+        SolverConfig::fixed(Tableau::dopri5(), 0.1),
+        SolverConfig::adaptive(Tableau::bosh3(), 1e-7, 1e-5),
+    ] {
+        for method in ["symplectic", "aca", "backprop"] {
+            let driver = ShardedMlpGradient::with_shards(&dims, 4);
+            let serial =
+                driver.gradient_serial(method, &p, &x0, batch, 0.0, 1.0, &cfg).unwrap();
+            let parallel = driver.gradient(method, &p, &x0, batch, 0.0, 1.0, &cfg).unwrap();
+            assert_eq!(serial.loss, parallel.loss, "{method}");
+            assert_eq!(serial.x_final, parallel.x_final, "{method}");
+            assert_eq!(serial.grad_x0, parallel.grad_x0, "{method}");
+            assert_eq!(serial.grad_params, parallel.grad_params, "{method}");
+            assert_eq!(serial.stats.nfe_forward, parallel.stats.nfe_forward, "{method}");
+            assert_eq!(serial.stats.nfe_backward, parallel.stats.nfe_backward, "{method}");
+        }
+    }
+}
+
+#[test]
+fn sharded_gradient_matches_full_batch_objective() {
+    // the shard decomposition itself must be exact: compare against the
+    // unsharded gradient of the same batch (identical math, different
+    // f64 summation order → tolerance rather than bit equality)
+    let dims = [2usize, 12, 2];
+    let batch = 8;
+    let sys = NativeMlpSystem::with_batch(&dims, batch, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(8);
+    let x0 = rng.normal_vec(sys.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.1);
+
+    let full = method_by_name("symplectic")
+        .unwrap()
+        .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+        .unwrap();
+    let sharded = ShardedMlpGradient::with_shards(&dims, 3)
+        .gradient("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg)
+        .unwrap();
+    assert!((full.loss - sharded.loss).abs() < 1e-10);
+    assert_eq!(full.x_final.len(), sharded.x_final.len());
+    let err = sympode::util::stats::rel_l2(&sharded.grad_params, &full.grad_params);
+    assert!(err < 1e-12, "sharded vs full gradient: {err}");
+    let err_x = sympode::util::stats::rel_l2(&sharded.grad_x0, &full.grad_x0);
+    assert!(err_x < 1e-12, "sharded vs full λ₀: {err_x}");
+}
+
+#[test]
+fn mali_errors_on_adaptive_and_sweeps_fixed() {
+    // the registry guard: MALI is part of all_methods() but must refuse
+    // adaptive configs with a descriptive error
+    let sys = NativeMlpSystem::new(&[2, 8, 2], 0);
+    let p = sys.init_params();
+    let x0 = vec![0.3, -0.1];
+    let adaptive = SolverConfig::adaptive(Tableau::dopri5(), 1e-6, 1e-4);
+    let mut saw_mali = false;
+    for m in sympode::adjoint::all_methods() {
+        let res = m.gradient(&sys, &p, &x0, 0.0, 1.0, &adaptive, &SumLoss);
+        if m.name() == "mali" {
+            saw_mali = true;
+            let err = res.err().expect("mali must reject adaptive configs");
+            let msg = format!("{err}");
+            assert!(msg.contains("fixed-step"), "undescriptive error: {msg}");
+        } else {
+            res.unwrap();
+        }
+    }
+    assert!(saw_mali, "all_methods() must include mali");
+
+    let fixed = SolverConfig::fixed(Tableau::euler(), 0.05);
+    for m in sympode::adjoint::all_methods() {
+        m.gradient(&sys, &p, &x0, 0.0, 1.0, &fixed, &SumLoss).unwrap();
+    }
+}
+
+#[test]
+fn parallel_sweep_equals_serial_sweep() {
+    // a fig2-style (N × method) grid evaluated serially and via the
+    // parallel driver must agree exactly
+    let grid: Vec<(usize, &str)> = vec![
+        (4, "symplectic"),
+        (4, "aca"),
+        (8, "adjoint"),
+        (8, "backprop"),
+        (8, "symplectic"),
+    ];
+    let cell = |i: usize| {
+        let (n, name) = grid[i];
+        let sys = NativeMlpSystem::with_batch(&[3, 10, 3], 2, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(17);
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
+        let m = method_by_name(name).unwrap();
+        let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        (g.loss, g.grad_params, g.stats.peak_mem_bytes)
+    };
+    let serial: Vec<_> = (0..grid.len()).map(&cell).collect();
+    let parallel = parallel_map_indexed(grid.len(), &cell);
+    assert_eq!(serial, parallel);
+}

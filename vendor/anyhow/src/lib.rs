@@ -1,0 +1,159 @@
+//! Minimal, dependency-free shim of the `anyhow` API surface this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment is fully offline (no crates.io registry), so the
+//! real `anyhow` cannot be fetched; this crate is vendored in its place
+//! via a `path` dependency. It intentionally implements only what the
+//! sympode crate needs: message-carrying errors with context chaining.
+//! Like the real `anyhow`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// A message-carrying error with an optional chain of context strings.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line (what `Context::context` does).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` specialized to [`Error`], as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a single printable
+/// expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path/.x")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn io_error_converts_and_chains_context() {
+        let err = fails_io().unwrap_err();
+        let text = format!("{err}");
+        assert!(text.starts_with("reading config: "), "{text}");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let err = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{err}"), "missing key");
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        let e2 = anyhow!(String::from("plain"));
+        assert_eq!(e2.to_string(), "plain");
+
+        fn inner(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable? no: always bails")
+        }
+        assert_eq!(inner(false).unwrap_err().to_string(), "flag was false");
+        assert!(inner(true).unwrap_err().to_string().contains("bails"));
+    }
+}
