@@ -1,13 +1,21 @@
 //! Gradient-method benchmarks — the end-to-end cost behind Tables 2–4:
 //! wall time and peak memory of each method on the same problem, plus
-//! two before/after probes for the workspace + parallel work:
+//! before/after probes for the workspace + parallel + tape-arena work:
 //!
 //! - an **allocation audit** (counting global allocator) showing the
 //!   warm `adjoint_step_ws` inner loop performs zero heap allocations,
-//!   vs the reference allocating step;
+//!   vs the reference allocating step — for the hand-rolled MLP backend
+//!   AND the tape backends (`CnfSystem` with both trace estimators,
+//!   `HnnSystem`), whose fused paths rebuild onto a pooled arena;
 //! - a **serial vs sharded-parallel** mini-batch gradient comparison
 //!   (`ShardedMlpGradient`), whose results are bit-identical by
 //!   construction.
+//!
+//! Timed results are also written to `BENCH_gradient_methods.json`
+//! (`{"results": [{name, median_ns, mean_ns, std_ns, samples}, …]}`) so
+//! CI can archive them. Pass `--quick` (or set `BENCH_QUICK=1`) to run
+//! with the reduced `Bench::quick()` budget — that mode doubles as the
+//! CI smoke test: every audit assertion still runs at full strength.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -16,11 +24,13 @@ use sympode::adjoint::{
     adjoint_step, adjoint_step_ws, AcaMethod, BackpropMethod, BaselineCheckpoint,
     ContinuousAdjoint, GradientMethod, MaliMethod, StageSource, SymplecticAdjoint,
 };
-use sympode::benchkit::Bench;
+use sympode::benchkit::{results_to_json, Bench, BenchResult};
+use sympode::cnf::{CnfSystem, TraceEstimator};
 use sympode::integrate::{rk_stages, SolverConfig};
 use sympode::memory::MemTracker;
 use sympode::ode::losses::SumLoss;
 use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::physics::{GOperator, HnnSystem};
 use sympode::tableau::Tableau;
 use sympode::train::ShardedMlpGradient;
 use sympode::util::Rng;
@@ -126,7 +136,57 @@ fn alloc_audit() {
     assert!(ref_allocs > 0, "reference path is the allocating baseline");
 }
 
-fn sharded_parallel() {
+/// Warm a system's fused stage (eval + vjp_fused_ws) twice, then count
+/// the heap allocations of one more round. The tape backends draw every
+/// node from a pooled arena, so the warm count must be exactly zero.
+fn audit_fused_stage(label: &str, sys: &dyn OdeSystem, dim_seed: u64) {
+    let mut rng = Rng::new(dim_seed);
+    let p = rng.normal_vec(sys.n_params());
+    let x = rng.normal_vec(sys.dim());
+    let lam = rng.normal_vec(sys.dim());
+    let mut g_x = vec![0.0; sys.dim()];
+    let mut g_p = vec![0.0; sys.n_params()];
+    let mut out = vec![0.0; sys.dim()];
+    let mut ws = Workspace::new();
+
+    for _ in 0..2 {
+        sys.eval(0.3, &x, &p, &mut out);
+        sys.vjp_fused_ws(0.3, &x, &p, &lam, &mut g_x, &mut g_p, &mut ws);
+    }
+
+    let before = allocs();
+    sys.eval(0.3, &x, &p, &mut out);
+    let eval_allocs = allocs() - before;
+
+    let before = allocs();
+    let bytes = sys.vjp_fused_ws(0.3, &x, &p, &lam, &mut g_x, &mut g_p, &mut ws);
+    let vjp_allocs = allocs() - before;
+
+    println!(
+        "{label}: warm eval allocations = {eval_allocs}, warm fused VJP allocations = {vjp_allocs} (tape = {bytes} B)"
+    );
+    assert_eq!(eval_allocs, 0, "{label}: warm eval must not allocate");
+    assert_eq!(vjp_allocs, 0, "{label}: warm fused VJP must not allocate");
+    assert_eq!(bytes, sys.trace_bytes(), "{label}: fused path must report the per-use tape bytes L");
+}
+
+fn tape_backend_audit() {
+    println!("\n# allocation audit: warm tape-backend stages (arena-pooled eval + fused VJP)");
+    let mut rng = Rng::new(13);
+
+    let mut cnf_h = CnfSystem::new(&[3, 32, 32, 3], 8, TraceEstimator::Hutchinson);
+    cnf_h.resample_eps(&mut rng);
+    audit_fused_stage("cnf/hutchinson", &cnf_h, 31);
+
+    let mut cnf_e = CnfSystem::new(&[3, 32, 32, 3], 8, TraceEstimator::Exact);
+    cnf_e.resample_eps(&mut rng);
+    audit_fused_stage("cnf/exact", &cnf_e, 32);
+
+    let hnn = HnnSystem::new(16, 4, 3, 4, GOperator::Dx, 0.25);
+    audit_fused_stage("hnn/dx", &hnn, 33);
+}
+
+fn sharded_parallel(b: &Bench, results: &mut Vec<BenchResult>) {
     println!("\n# mini-batch gradient: serial vs sharded-parallel (symplectic, batch 64)");
     let dims = [8usize, 64, 64, 8];
     let batch = 64;
@@ -146,24 +206,56 @@ fn sharded_parallel() {
         "parallel sharded gradient must be bit-identical to serial"
     );
 
-    let b = Bench::default();
-    b.run("grad/batch64/serial shards", || {
+    results.push(b.run("grad/batch64/serial shards", || {
         std::hint::black_box(
             driver.gradient_serial("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg).unwrap(),
         );
-    });
-    b.run(
+    }));
+    results.push(b.run(
         &format!("grad/batch64/parallel x{} shards", driver.shards),
         || {
             std::hint::black_box(
                 driver.gradient("symplectic", &p, &x0, batch, 0.0, 1.0, &cfg).unwrap(),
             );
         },
-    );
+    ));
+}
+
+fn tape_backend_bench(b: &Bench, results: &mut Vec<BenchResult>) {
+    println!("\n# tape backends: symplectic-adjoint gradient per iteration");
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.125);
+    let mut rng = Rng::new(19);
+
+    let mut cnf = CnfSystem::new(&[2, 24, 24, 2], 16, TraceEstimator::Hutchinson);
+    cnf.resample_eps(&mut rng);
+    let p = cnf.init_params(20);
+    let z0 = rng.normal_vec(cnf.dim());
+    let loss = sympode::cnf::CnfNllLoss { batch: 16, d: 2 };
+    results.push(b.run("grad/cnf16/symplectic", || {
+        std::hint::black_box(
+            SymplecticAdjoint.gradient(&cnf, &p, &z0, 0.0, 1.0, &cfg, &loss).unwrap(),
+        );
+    }));
+
+    let hnn = HnnSystem::new(16, 4, 3, 4, GOperator::Dx, 0.25);
+    let hp = hnn.init_params(21);
+    let u0 = rng.normal_vec(hnn.dim());
+    results.push(b.run("grad/hnn16x4/symplectic", || {
+        std::hint::black_box(
+            SymplecticAdjoint.gradient(&hnn, &hp, &u0, 0.0, 0.5, &cfg, &SumLoss).unwrap(),
+        );
+    }));
 }
 
 fn main() {
-    let b = Bench::default();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    if quick {
+        println!("# quick mode: reduced sample budget (audit assertions unchanged)");
+    }
+    let mut results: Vec<BenchResult> = Vec::new();
+
     let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
     let p = sys.init_params();
     let mut rng = Rng::new(2);
@@ -182,9 +274,14 @@ fn main() {
     let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / 32.0);
     for m in &methods {
         let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
-        b.run(&format!("grad/fixed32/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes), || {
-            std::hint::black_box(m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap());
-        });
+        results.push(b.run(
+            &format!("grad/fixed32/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes),
+            || {
+                std::hint::black_box(
+                    m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap(),
+                );
+            },
+        ));
     }
 
     println!("\n# adaptive dopri8 (the Table 4 regime, s = 12)");
@@ -194,11 +291,22 @@ fn main() {
             continue; // fixed-step only
         }
         let g = m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap();
-        b.run(&format!("grad/dopri8/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes), || {
-            std::hint::black_box(m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap());
-        });
+        results.push(b.run(
+            &format!("grad/dopri8/{} [{} B peak]", m.name(), g.stats.peak_mem_bytes),
+            || {
+                std::hint::black_box(
+                    m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg8, &SumLoss).unwrap(),
+                );
+            },
+        ));
     }
 
+    tape_backend_bench(&b, &mut results);
     alloc_audit();
-    sharded_parallel();
+    tape_backend_audit();
+    sharded_parallel(&b, &mut results);
+
+    let json = results_to_json(&results);
+    std::fs::write("BENCH_gradient_methods.json", format!("{json}\n")).unwrap();
+    println!("\nwrote BENCH_gradient_methods.json ({} results)", results.len());
 }

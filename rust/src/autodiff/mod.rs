@@ -1,11 +1,12 @@
-//! Reverse-mode automatic differentiation on an eager Wengert tape.
+//! Reverse-mode automatic differentiation on an eager Wengert tape with
+//! arena-backed, reusable storage.
 //!
 //! This is the crate's stand-in for PyTorch autograd / JAX on the *native*
 //! backend: the neural vector fields used by unit tests, property tests
 //! and the scaling benchmarks are built from these ops, and every gradient
 //! method obtains its vector–Jacobian products through it.
 //!
-//! Two properties matter for the reproduction:
+//! Three properties matter for the reproduction:
 //!
 //! 1. **Higher-order differentiation.** [`Tape::grad`] emits the backward
 //!    pass as *new tape ops*, so gradients are themselves differentiable.
@@ -17,7 +18,23 @@
 //!    "computation graph" whose size the paper's Table 1 is about
 //!    (`L` per network use). [`Tape::mem_bytes`] reports it, and the
 //!    gradient methods register it with the [`crate::memory::MemTracker`]
-//!    for as long as the tape is alive.
+//!    for as long as the tape is alive. `mem_bytes` counts the values
+//!    *live on the tape*, never the arena's pooled capacity, so reuse
+//!    cannot inflate the Table-1 accounting.
+//! 3. **Reusable storage.** All node values live in one contiguous `f64`
+//!    slab owned by a [`TapeArena`]; node descriptors carry an
+//!    offset/length into it. [`Tape::reset`] clears the tape while
+//!    retaining every allocation, and [`Tape::into_arena`] /
+//!    [`Tape::from_arena`] move the storage through the
+//!    [`crate::workspace::Workspace`] pool, so a *warm* rebuild of the
+//!    same graph — the per-stage recompute of the symplectic adjoint's
+//!    backward sweep (Algorithm 2) — performs **zero heap allocations**.
+//!    The adjoint accumulator of [`Tape::grad`] is pooled the same way.
+//!
+//! Because every op stays rank ≤ 2, shapes are stored inline
+//! (`[usize; 2]` + rank) rather than as `Vec<usize>`; the only per-op heap
+//! structures are the `Rc<Vec<usize>>` index maps of `Gather`/`ScatterAdd`,
+//! which callers on the hot path construct once and clone by refcount.
 
 pub mod tensor;
 
@@ -29,8 +46,96 @@ use std::rc::Rc;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub usize);
 
+/// Inline shape for tape values (rank ≤ 2 — all ops are scalar, vector or
+/// matrix valued). Stored by value in each node so a tape rebuild never
+/// allocates shape vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    dims: [usize; 2],
+    rank: u8,
+}
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape { dims: [1, 1], rank: 0 }
+    }
+
+    pub fn vector(n: usize) -> Shape {
+        Shape { dims: [n, 1], rank: 1 }
+    }
+
+    pub fn matrix(m: usize, n: usize) -> Shape {
+        Shape { dims: [m, n], rank: 2 }
+    }
+
+    pub fn from_slice(dims: &[usize]) -> Shape {
+        match dims {
+            [] => Shape::scalar(),
+            [n] => Shape::vector(*n),
+            [m, n] => Shape::matrix(*m, *n),
+            _ => panic!("tape shapes are rank ≤ 2, got {dims:?}"),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank as usize
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        assert!(i < self.rank());
+        self.dims[i]
+    }
+
+    pub fn numel(&self) -> usize {
+        match self.rank {
+            0 => 1,
+            1 => self.dims[0],
+            _ => self.dims[0] * self.dims[1],
+        }
+    }
+
+    /// The shape as a slice, matching the old `Vec<usize>` representation
+    /// (`[]` scalar, `[n]` vector, `[m, n]` matrix).
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dims[..self.rank()]
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Shape {
+        Shape::from_slice(&v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Shape {
+        Shape::from_slice(v)
+    }
+}
+
+/// Borrowed view of one value on a [`Tape`] (the arena refactor's
+/// replacement for handing out `&Tensor`: values live in the shared slab,
+/// so a view borrows a slice of it).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub data: &'a [f64],
+    pub shape: &'a [usize],
+}
+
+impl TensorView<'_> {
+    /// Value of a rank-0 (or single-element) view.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.data.len(), 1, "item() on tensor with {} elements", self.data.len());
+        self.data[0]
+    }
+
+    /// Owned copy (allocates — test/diagnostic use only).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(self.data.to_vec(), self.shape.to_vec())
+    }
+}
+
 #[derive(Debug, Clone)]
-#[allow(dead_code)] // shape/scale metadata retained for debugging dumps
 enum Op {
     /// Leaf the user may differentiate with respect to.
     Input,
@@ -41,7 +146,7 @@ enum Op {
     Mul(Var, Var),
     Neg(Var),
     Scale(Var, f64),
-    AddScalarConst(Var, f64),
+    AddScalarConst(Var),
     Matmul(Var, Var),
     Transpose(Var),
     Tanh(Var),
@@ -50,27 +155,60 @@ enum Op {
     /// `[m, n] -> [n]`, summing over rows.
     SumAxis0(Var),
     /// `[n] -> [m, n]`, repeating the row `m` times.
-    Broadcast0(Var, usize),
+    Broadcast0(Var),
     /// Scalar (shape-[] var) times tensor.
     ScaleByVar { scalar: Var, tensor: Var },
-    /// `out[i] = in[idx[i]]` over flattened indices; output takes `shape`.
-    Gather { input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize> },
-    /// `out[idx[i]] += in[i]`; output takes `shape` (flat len must cover idx).
-    ScatterAdd { input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize> },
-    Reshape(Var, Vec<usize>),
-    /// Broadcast a scalar (shape []) to `shape`.
-    FillLike(Var, Vec<usize>),
+    /// `out[i] = in[idx[i]]` over flattened indices.
+    Gather { input: Var, idx: Rc<Vec<usize>> },
+    /// `out[idx[i]] += in[i]`.
+    ScatterAdd { input: Var, idx: Rc<Vec<usize>> },
+    Reshape(Var),
+    /// Broadcast a scalar (shape []) to the node's shape.
+    FillLike(Var),
 }
 
+/// Node descriptor: the op plus where this node's value lives in the
+/// arena's slab. Output shapes (for the backward rules) are read from the
+/// *argument* nodes, so the descriptor itself is `Vec`-free.
+#[derive(Debug, Clone)]
 struct Node {
     op: Op,
-    val: Tensor,
+    off: usize,
+    len: usize,
+    shape: Shape,
+}
+
+/// Pooled storage backing a [`Tape`]: the node descriptors, the value
+/// slab, and the adjoint accumulator of [`Tape::grad`]. Obtain one from a
+/// finished tape with [`Tape::into_arena`] and revive it with
+/// [`Tape::from_arena`] — capacity is retained, so the second build of a
+/// same-shaped graph allocates nothing.
+#[derive(Debug, Default)]
+pub struct TapeArena {
+    nodes: Vec<Node>,
+    data: Vec<f64>,
+    adj: Vec<Option<Var>>,
+}
+
+impl TapeArena {
+    pub fn new() -> TapeArena {
+        TapeArena::default()
+    }
+
+    /// Heap bytes currently held for reuse. This is pool *capacity* —
+    /// deliberately distinct from [`Tape::mem_bytes`], which reports the
+    /// live graph (`L`) for the paper's Table-1 accounting.
+    pub fn capacity_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f64>()
+            + self.nodes.capacity() * std::mem::size_of::<Node>()
+            + self.adj.capacity() * std::mem::size_of::<Option<Var>>()
+    }
 }
 
 /// An eager Wengert tape: every op computes its value immediately and
 /// records how it was produced so [`Tape::grad`] can replay it backward.
 pub struct Tape {
-    nodes: Vec<Node>,
+    arena: TapeArena,
     bytes: usize,
 }
 
@@ -82,82 +220,196 @@ impl Default for Tape {
 
 impl Tape {
     pub fn new() -> Tape {
-        Tape { nodes: Vec::new(), bytes: 0 }
+        Tape { arena: TapeArena::new(), bytes: 0 }
+    }
+
+    /// Build a tape on pooled storage. The arena's previous contents are
+    /// cleared (capacity retained).
+    pub fn from_arena(mut arena: TapeArena) -> Tape {
+        arena.nodes.clear();
+        arena.data.clear();
+        Tape { arena, bytes: 0 }
+    }
+
+    /// Release the backing storage for pooling (e.g. via
+    /// [`crate::workspace::Workspace::put_tape`]).
+    pub fn into_arena(self) -> TapeArena {
+        self.arena
+    }
+
+    /// Clear all nodes and values, retaining every allocation — the warm
+    /// rebuild after a `reset` performs zero heap allocations for a graph
+    /// no larger than the previous one.
+    pub fn reset(&mut self) {
+        self.arena.nodes.clear();
+        self.arena.data.clear();
+        self.bytes = 0;
     }
 
     /// Number of values currently on the tape.
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.arena.nodes.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.arena.nodes.is_empty()
     }
 
     /// Total bytes of retained tensor data — the "computation graph size".
+    /// Counts live values only, never arena capacity.
     pub fn mem_bytes(&self) -> usize {
         self.bytes
     }
 
-    pub fn val(&self, v: Var) -> &Tensor {
-        &self.nodes[v.0].val
+    /// Borrowed view (data + shape) of a value.
+    pub fn val(&self, v: Var) -> TensorView<'_> {
+        let n = &self.arena.nodes[v.0];
+        TensorView { data: &self.arena.data[n.off..n.off + n.len], shape: n.shape.as_slice() }
     }
 
-    fn push(&mut self, op: Op, val: Tensor) -> Var {
-        self.bytes += val.data.len() * 8;
-        self.nodes.push(Node { op, val });
-        Var(self.nodes.len() - 1)
+    /// The value's data slice (hot-path accessor; no shape).
+    pub fn val_data(&self, v: Var) -> &[f64] {
+        let n = &self.arena.nodes[v.0];
+        &self.arena.data[n.off..n.off + n.len]
+    }
+
+    /// Value of a rank-0 (or single-element) node.
+    pub fn val_item(&self, v: Var) -> f64 {
+        let n = &self.arena.nodes[v.0];
+        assert_eq!(n.len, 1, "item() on tensor with {} elements", n.len);
+        self.arena.data[n.off]
+    }
+
+    fn shape_of(&self, v: Var) -> Shape {
+        self.arena.nodes[v.0].shape
+    }
+
+    fn range_of(&self, v: Var) -> (usize, usize) {
+        let n = &self.arena.nodes[v.0];
+        (n.off, n.len)
+    }
+
+    /// Append a node, zero-initializing its slab slice.
+    fn push_node(&mut self, op: Op, shape: Shape) -> Var {
+        let numel = shape.numel();
+        let off = self.arena.data.len();
+        self.arena.data.resize(off + numel, 0.0);
+        self.bytes += numel * 8;
+        self.arena.nodes.push(Node { op, off, len: numel, shape });
+        Var(self.arena.nodes.len() - 1)
+    }
+
+    /// Split the slab at a freshly pushed node `v`: `(earlier values,
+    /// v's output slice)`. Sound because every source node precedes `v`.
+    fn out_split(&mut self, v: Var) -> (&[f64], &mut [f64]) {
+        let (off, len) = self.range_of(v);
+        let (src, dst) = self.arena.data.split_at_mut(off);
+        (&src[..], &mut dst[..len])
+    }
+
+    fn push_scalar(&mut self, op: Op, x: f64) -> Var {
+        let v = self.push_node(op, Shape::scalar());
+        let off = self.arena.nodes[v.0].off;
+        self.arena.data[off] = x;
+        v
+    }
+
+    /// Leaf from a borrowed slice — the zero-copy-in entry point the warm
+    /// system builds use (no intermediate `Tensor`).
+    fn leaf(&mut self, op: Op, data: &[f64], shape: Shape) -> Var {
+        assert_eq!(data.len(), shape.numel(), "data/shape mismatch");
+        let v = self.push_node(op, shape);
+        let (off, len) = self.range_of(v);
+        self.arena.data[off..off + len].copy_from_slice(data);
+        v
+    }
+
+    /// Elementwise binary op; shapes must match exactly.
+    fn ew2(&mut self, op: Op, a: Var, b: Var, f: impl Fn(f64, f64) -> f64) -> Var {
+        let sa = self.shape_of(a);
+        let sb = self.shape_of(b);
+        assert_eq!(
+            sa.as_slice(),
+            sb.as_slice(),
+            "elementwise shape mismatch: {:?} vs {:?}",
+            sa.as_slice(),
+            sb.as_slice()
+        );
+        let (ao, al) = self.range_of(a);
+        let (bo, _) = self.range_of(b);
+        let v = self.push_node(op, sa);
+        let (src, out) = self.out_split(v);
+        for ((o, x), y) in out.iter_mut().zip(&src[ao..ao + al]).zip(&src[bo..bo + al]) {
+            *o = f(*x, *y);
+        }
+        v
+    }
+
+    /// Elementwise unary op.
+    fn ew1(&mut self, op: Op, a: Var, f: impl Fn(f64) -> f64) -> Var {
+        let sa = self.shape_of(a);
+        let (ao, al) = self.range_of(a);
+        let v = self.push_node(op, sa);
+        let (src, out) = self.out_split(v);
+        for (o, x) in out.iter_mut().zip(&src[ao..ao + al]) {
+            *o = f(*x);
+        }
+        v
     }
 
     // ---------------------------------------------------------------- leaves
 
     pub fn input(&mut self, t: Tensor) -> Var {
-        self.push(Op::Input, t)
+        self.leaf(Op::Input, &t.data, Shape::from_slice(&t.shape))
     }
 
     pub fn constant(&mut self, t: Tensor) -> Var {
-        self.push(Op::Const, t)
+        self.leaf(Op::Const, &t.data, Shape::from_slice(&t.shape))
+    }
+
+    /// Differentiable leaf copied from a slice (allocation-free when the
+    /// tape is warm).
+    pub fn input_slice(&mut self, data: &[f64], shape: impl Into<Shape>) -> Var {
+        self.leaf(Op::Input, data, shape.into())
+    }
+
+    /// Constant leaf copied from a slice (allocation-free when warm).
+    pub fn constant_slice(&mut self, data: &[f64], shape: impl Into<Shape>) -> Var {
+        self.leaf(Op::Const, data, shape.into())
     }
 
     pub fn scalar_const(&mut self, x: f64) -> Var {
-        self.constant(Tensor::scalar(x))
+        self.push_scalar(Op::Const, x)
     }
 
     // ------------------------------------------------------------- pointwise
 
     pub fn add(&mut self, a: Var, b: Var) -> Var {
-        let v = self.val(a).ew(self.val(b), |x, y| x + y);
-        self.push(Op::Add(a, b), v)
+        self.ew2(Op::Add(a, b), a, b, |x, y| x + y)
     }
 
     pub fn sub(&mut self, a: Var, b: Var) -> Var {
-        let v = self.val(a).ew(self.val(b), |x, y| x - y);
-        self.push(Op::Sub(a, b), v)
+        self.ew2(Op::Sub(a, b), a, b, |x, y| x - y)
     }
 
     pub fn mul(&mut self, a: Var, b: Var) -> Var {
-        let v = self.val(a).ew(self.val(b), |x, y| x * y);
-        self.push(Op::Mul(a, b), v)
+        self.ew2(Op::Mul(a, b), a, b, |x, y| x * y)
     }
 
     pub fn neg(&mut self, a: Var) -> Var {
-        let v = self.val(a).map(|x| -x);
-        self.push(Op::Neg(a), v)
+        self.ew1(Op::Neg(a), a, |x| -x)
     }
 
     pub fn scale(&mut self, a: Var, c: f64) -> Var {
-        let v = self.val(a).map(|x| c * x);
-        self.push(Op::Scale(a, c), v)
+        self.ew1(Op::Scale(a, c), a, |x| c * x)
     }
 
     pub fn add_scalar(&mut self, a: Var, c: f64) -> Var {
-        let v = self.val(a).map(|x| x + c);
-        self.push(Op::AddScalarConst(a, c), v)
+        self.ew1(Op::AddScalarConst(a), a, |x| x + c)
     }
 
     pub fn tanh(&mut self, a: Var) -> Var {
-        let v = self.val(a).map(f64::tanh);
-        self.push(Op::Tanh(a), v)
+        self.ew1(Op::Tanh(a), a, f64::tanh)
     }
 
     // ---------------------------------------------------------------- linear
@@ -166,44 +418,86 @@ impl Tape {
         // rank-2 only on the tape: the backward rule (gᵀ-products with
         // transposes) is only shape-stable for matrices. Lift vectors to
         // [1, n] with `reshape` first.
-        assert_eq!(self.val(a).shape.len(), 2, "tape matmul needs rank-2 LHS");
-        assert_eq!(self.val(b).shape.len(), 2, "tape matmul needs rank-2 RHS");
-        let v = self.val(a).matmul(self.val(b));
-        self.push(Op::Matmul(a, b), v)
+        let sa = self.shape_of(a);
+        let sb = self.shape_of(b);
+        assert_eq!(sa.rank(), 2, "tape matmul needs rank-2 LHS");
+        assert_eq!(sb.rank(), 2, "tape matmul needs rank-2 RHS");
+        let (m, k) = (sa.dim(0), sa.dim(1));
+        let n = sb.dim(1);
+        assert_eq!(
+            k,
+            sb.dim(0),
+            "matmul inner dim mismatch: {:?} vs {:?}",
+            sa.as_slice(),
+            sb.as_slice()
+        );
+        let (ao, al) = self.range_of(a);
+        let (bo, bl) = self.range_of(b);
+        let v = self.push_node(Op::Matmul(a, b), Shape::matrix(m, n));
+        let (src, out) = self.out_split(v);
+        crate::linalg::gemm_nn(m, k, n, &src[ao..ao + al], &src[bo..bo + bl], out);
+        v
     }
 
     pub fn transpose(&mut self, a: Var) -> Var {
-        let v = self.val(a).transpose();
-        self.push(Op::Transpose(a), v)
+        let sa = self.shape_of(a);
+        match sa.rank() {
+            1 => {
+                // 1-D transpose is a no-op (paired with matmul conventions)
+                let (ao, al) = self.range_of(a);
+                let v = self.push_node(Op::Transpose(a), sa);
+                let (src, out) = self.out_split(v);
+                out.copy_from_slice(&src[ao..ao + al]);
+                v
+            }
+            2 => {
+                let (m, n) = (sa.dim(0), sa.dim(1));
+                let (ao, _) = self.range_of(a);
+                let v = self.push_node(Op::Transpose(a), Shape::matrix(n, m));
+                let (src, out) = self.out_split(v);
+                for i in 0..m {
+                    for j in 0..n {
+                        out[j * m + i] = src[ao + i * n + j];
+                    }
+                }
+                v
+            }
+            _ => panic!("transpose needs rank 1 or 2"),
+        }
     }
 
     pub fn sum(&mut self, a: Var) -> Var {
-        let v = Tensor::scalar(self.val(a).data.iter().sum());
-        self.push(Op::Sum(a), v)
+        let (ao, al) = self.range_of(a);
+        let s: f64 = self.arena.data[ao..ao + al].iter().sum();
+        self.push_scalar(Op::Sum(a), s)
     }
 
     pub fn sum_axis0(&mut self, a: Var) -> Var {
-        let t = self.val(a);
-        assert_eq!(t.shape.len(), 2, "sum_axis0 needs a matrix");
-        let (m, n) = (t.shape[0], t.shape[1]);
-        let mut out = vec![0.0; n];
+        let sa = self.shape_of(a);
+        assert_eq!(sa.rank(), 2, "sum_axis0 needs a matrix");
+        let (m, n) = (sa.dim(0), sa.dim(1));
+        let (ao, _) = self.range_of(a);
+        let v = self.push_node(Op::SumAxis0(a), Shape::vector(n));
+        let (src, out) = self.out_split(v);
         for i in 0..m {
             for j in 0..n {
-                out[j] += t.data[i * n + j];
+                out[j] += src[ao + i * n + j];
             }
         }
-        self.push(Op::SumAxis0(a), Tensor::new(out, vec![n]))
+        v
     }
 
     pub fn broadcast0(&mut self, a: Var, m: usize) -> Var {
-        let t = self.val(a);
-        assert_eq!(t.shape.len(), 1, "broadcast0 needs a vector");
-        let n = t.shape[0];
-        let mut out = Vec::with_capacity(m * n);
-        for _ in 0..m {
-            out.extend_from_slice(&t.data);
+        let sa = self.shape_of(a);
+        assert_eq!(sa.rank(), 1, "broadcast0 needs a vector");
+        let n = sa.dim(0);
+        let (ao, _) = self.range_of(a);
+        let v = self.push_node(Op::Broadcast0(a), Shape::matrix(m, n));
+        let (src, out) = self.out_split(v);
+        for row in 0..m {
+            out[row * n..(row + 1) * n].copy_from_slice(&src[ao..ao + n]);
         }
-        self.push(Op::Broadcast0(a, m), Tensor::new(out, vec![m, n]))
+        v
     }
 
     pub fn dot(&mut self, a: Var, b: Var) -> Var {
@@ -214,56 +508,66 @@ impl Tape {
     }
 
     pub fn scale_by_var(&mut self, scalar: Var, tensor: Var) -> Var {
-        let s = self.val(scalar).item();
-        let v = self.val(tensor).map(|x| s * x);
-        self.push(Op::ScaleByVar { scalar, tensor }, v)
+        let s = self.val_item(scalar);
+        self.ew1(Op::ScaleByVar { scalar, tensor }, tensor, |x| s * x)
     }
 
-    pub fn gather(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize>) -> Var {
-        let t = self.val(input);
-        let numel: usize = shape.iter().product();
-        assert_eq!(idx.len(), numel, "gather idx/shape mismatch");
-        let data: Vec<f64> = idx.iter().map(|&i| t.data[i]).collect();
-        self.push(Op::Gather { input, idx, shape: shape.clone() }, Tensor::new(data, shape))
-    }
-
-    pub fn scatter_add(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: Vec<usize>) -> Var {
-        let t = self.val(input);
-        assert_eq!(idx.len(), t.data.len(), "scatter idx/input mismatch");
-        let numel: usize = shape.iter().product();
-        let mut data = vec![0.0; numel];
-        for (v, &i) in t.data.iter().zip(idx.iter()) {
-            data[i] += v;
+    pub fn gather(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: impl Into<Shape>) -> Var {
+        let shape = shape.into();
+        assert_eq!(idx.len(), shape.numel(), "gather idx/shape mismatch");
+        let (ao, al) = self.range_of(input);
+        let v = self.push_node(Op::Gather { input, idx: Rc::clone(&idx) }, shape);
+        let (src, out) = self.out_split(v);
+        let inp = &src[ao..ao + al];
+        for (o, &i) in out.iter_mut().zip(idx.iter()) {
+            *o = inp[i];
         }
-        self.push(Op::ScatterAdd { input, idx, shape: shape.clone() }, Tensor::new(data, shape))
+        v
     }
 
-    pub fn reshape(&mut self, a: Var, shape: Vec<usize>) -> Var {
-        let t = self.val(a);
-        let numel: usize = shape.iter().product();
-        assert_eq!(numel, t.data.len(), "reshape numel mismatch");
-        let v = Tensor::new(t.data.clone(), shape.clone());
-        self.push(Op::Reshape(a, shape), v)
+    pub fn scatter_add(&mut self, input: Var, idx: Rc<Vec<usize>>, shape: impl Into<Shape>) -> Var {
+        let shape = shape.into();
+        let (ao, al) = self.range_of(input);
+        assert_eq!(idx.len(), al, "scatter idx/input mismatch");
+        let v = self.push_node(Op::ScatterAdd { input, idx: Rc::clone(&idx) }, shape);
+        let (src, out) = self.out_split(v);
+        for (x, &i) in src[ao..ao + al].iter().zip(idx.iter()) {
+            out[i] += *x;
+        }
+        v
     }
 
-    pub fn fill_like(&mut self, scalar: Var, shape: Vec<usize>) -> Var {
-        let s = self.val(scalar).item();
-        let numel: usize = shape.iter().product();
-        self.push(Op::FillLike(scalar, shape.clone()), Tensor::new(vec![s; numel], shape))
+    pub fn reshape(&mut self, a: Var, shape: impl Into<Shape>) -> Var {
+        let shape = shape.into();
+        let (ao, al) = self.range_of(a);
+        assert_eq!(shape.numel(), al, "reshape numel mismatch");
+        let v = self.push_node(Op::Reshape(a), shape);
+        let (src, out) = self.out_split(v);
+        out.copy_from_slice(&src[ao..ao + al]);
+        v
+    }
+
+    pub fn fill_like(&mut self, scalar: Var, shape: impl Into<Shape>) -> Var {
+        let shape = shape.into();
+        let s = self.val_item(scalar);
+        let v = self.push_node(Op::FillLike(scalar), shape);
+        let (_, out) = self.out_split(v);
+        out.fill(s);
+        v
     }
 
     // -------------------------------------------------------------- helpers
 
     /// Bias add: `[m, n] + [n]` (broadcast over rows).
     pub fn bias_add(&mut self, a: Var, bias: Var) -> Var {
-        let m = self.val(a).shape[0];
+        let m = self.shape_of(a).dim(0);
         let b = self.broadcast0(bias, m);
         self.add(a, b)
     }
 
     /// Mean over all elements.
     pub fn mean(&mut self, a: Var) -> Var {
-        let n = self.val(a).data.len() as f64;
+        let n = self.shape_of(a).numel() as f64;
         let s = self.sum(a);
         self.scale(s, 1.0 / n)
     }
@@ -277,20 +581,51 @@ impl Tape {
     /// Inputs in `wrt` that `output` does not depend on get a zero
     /// gradient of the appropriate shape.
     pub fn grad(&mut self, output: Var, wrt: &[Var]) -> Vec<Var> {
+        let mut out = Vec::with_capacity(wrt.len());
+        self.grad_into(output, wrt, &mut out);
+        out
+    }
+
+    /// [`Tape::grad`] writing into a caller-owned buffer — with a pooled
+    /// `wrt`/output pair this is the allocation-free VJP entry point.
+    pub fn grad_into(&mut self, output: Var, wrt: &[Var], out: &mut Vec<Var>) {
+        let adj = self.run_backward(output);
+        out.clear();
+        for &w in wrt {
+            let g = self.adj_or_zero(&adj, w);
+            out.push(g);
+        }
+        self.arena.adj = adj;
+    }
+
+    /// Gradient with respect to a single var (the inner `∇H` of the HNN
+    /// vector field) without an output vector.
+    pub fn grad1(&mut self, output: Var, wrt: Var) -> Var {
+        let adj = self.run_backward(output);
+        let g = self.adj_or_zero(&adj, wrt);
+        self.arena.adj = adj;
+        g
+    }
+
+    /// The shared backward sweep: returns the adjoint table, whose storage
+    /// is drawn from (and must be handed back to) the arena's pool.
+    fn run_backward(&mut self, output: Var) -> Vec<Option<Var>> {
         assert!(
-            self.val(output).shape.is_empty(),
+            self.shape_of(output).rank() == 0,
             "grad: output must be a scalar, got shape {:?}",
-            self.val(output).shape
+            self.shape_of(output).as_slice()
         );
         let n_at_start = output.0 + 1;
-        let mut adj: Vec<Option<Var>> = vec![None; self.nodes.len()];
+        let mut adj = std::mem::take(&mut self.arena.adj);
+        adj.clear();
+        adj.resize(self.arena.nodes.len(), None);
         adj[output.0] = Some(self.scalar_const(1.0));
-        // ensure adj has slots for vars created during the backward pass
+        // adj gains slots lazily for vars created during the backward pass
         // (we only index by ids < n_at_start, so this is enough).
         for i in (0..n_at_start).rev() {
             let Some(g) = adj[i] else { continue };
-            // clone the op descriptor to appease the borrow checker
-            let op = self.nodes[i].op.clone();
+            // clone the op descriptor (cheap: vars + an Rc bump at most)
+            let op = self.arena.nodes[i].op.clone();
             match op {
                 Op::Input | Op::Const => {}
                 Op::Add(a, b) => {
@@ -316,7 +651,7 @@ impl Tape {
                     let ga = self.scale(g, c);
                     self.accum(&mut adj, a, ga);
                 }
-                Op::AddScalarConst(a, _) => {
+                Op::AddScalarConst(a) => {
                     self.accum(&mut adj, a, g);
                 }
                 Op::Matmul(a, b) => {
@@ -336,26 +671,24 @@ impl Tape {
                     // as a var so second-order flows through the tanh node.
                     let y = Var(i);
                     let y2 = self.mul(y, y);
-                    let one = {
-                        let shape = self.val(y).shape.clone();
-                        let oneconst = self.scalar_const(1.0);
-                        self.fill_like(oneconst, shape)
-                    };
+                    let shape = self.shape_of(y);
+                    let oneconst = self.scalar_const(1.0);
+                    let one = self.fill_like(oneconst, shape);
                     let d = self.sub(one, y2);
                     let ga = self.mul(g, d);
                     self.accum(&mut adj, a, ga);
                 }
                 Op::Sum(a) => {
-                    let shape = self.val(a).shape.clone();
+                    let shape = self.shape_of(a);
                     let ga = self.fill_like(g, shape);
                     self.accum(&mut adj, a, ga);
                 }
                 Op::SumAxis0(a) => {
-                    let m = self.val(a).shape[0];
+                    let m = self.shape_of(a).dim(0);
                     let ga = self.broadcast0(g, m);
                     self.accum(&mut adj, a, ga);
                 }
-                Op::Broadcast0(a, _) => {
+                Op::Broadcast0(a) => {
                     let ga = self.sum_axis0(g);
                     self.accum(&mut adj, a, ga);
                 }
@@ -367,46 +700,48 @@ impl Tape {
                     let gtensor = self.scale_by_var(scalar, g);
                     self.accum(&mut adj, tensor, gtensor);
                 }
-                Op::Gather { input, idx, .. } => {
-                    let shape = self.val(input).shape.clone();
+                Op::Gather { input, idx } => {
+                    let shape = self.shape_of(input);
                     let ga = self.scatter_add(g, idx, shape);
                     self.accum(&mut adj, input, ga);
                 }
-                Op::ScatterAdd { input, idx, .. } => {
-                    let shape = self.val(input).shape.clone();
+                Op::ScatterAdd { input, idx } => {
+                    let shape = self.shape_of(input);
                     let ga = self.gather(g, idx, shape);
                     self.accum(&mut adj, input, ga);
                 }
-                Op::Reshape(a, _) => {
-                    let shape = self.val(a).shape.clone();
+                Op::Reshape(a) => {
+                    let shape = self.shape_of(a);
                     let ga = self.reshape(g, shape);
                     self.accum(&mut adj, a, ga);
                 }
-                Op::FillLike(scalar, _) => {
+                Op::FillLike(scalar) => {
                     let gs = self.sum(g);
                     self.accum(&mut adj, scalar, gs);
                 }
             }
         }
-        wrt.iter()
-            .map(|&w| match adj.get(w.0).copied().flatten() {
-                Some(g) => g,
-                None => {
-                    let shape = self.val(w).shape.clone();
-                    let z = self.scalar_const(0.0);
-                    if shape.is_empty() {
-                        z
-                    } else {
-                        self.fill_like(z, shape)
-                    }
+        adj
+    }
+
+    fn adj_or_zero(&mut self, adj: &[Option<Var>], w: Var) -> Var {
+        match adj.get(w.0).copied().flatten() {
+            Some(g) => g,
+            None => {
+                let shape = self.shape_of(w);
+                let z = self.scalar_const(0.0);
+                if shape.rank() == 0 {
+                    z
+                } else {
+                    self.fill_like(z, shape)
                 }
-            })
-            .collect()
+            }
+        }
     }
 
     fn accum(&mut self, adj: &mut Vec<Option<Var>>, target: Var, g: Var) {
         if adj.len() <= target.0 {
-            adj.resize(self.nodes.len().max(target.0 + 1), None);
+            adj.resize(self.arena.nodes.len().max(target.0 + 1), None);
         }
         adj[target.0] = Some(match adj[target.0] {
             Some(prev) => self.add(prev, g),

@@ -247,6 +247,112 @@ fn reshape_preserves_grad() {
     assert_eq!(t.val(g[0]).data, vec![2.0, 4.0, 6.0, 8.0]);
 }
 
+#[test]
+fn reset_retains_capacity_and_is_deterministic() {
+    let mut rng = Rng::new(21);
+    let (b, din, dh) = (3, 4, 6);
+    let xd = rng.normal_vec(b * din);
+    let wd = rng.normal_vec(din * dh);
+
+    let build = |t: &mut Tape| -> (Vec<f64>, usize) {
+        let x = t.input_slice(&xd, Shape::matrix(b, din));
+        let w = t.input_slice(&wd, Shape::matrix(din, dh));
+        let a = t.matmul(x, w);
+        let h = t.tanh(a);
+        let s = t.sum(h);
+        let g = t.grad(s, &[x, w]);
+        let mut out = t.val(g[0]).data.to_vec();
+        out.extend_from_slice(t.val(g[1]).data);
+        (out, t.mem_bytes())
+    };
+
+    let mut t = Tape::new();
+    let (cold, bytes_cold) = build(&mut t);
+    let cap = t.into_arena().capacity_bytes();
+    assert!(cap >= bytes_cold, "arena capacity {cap} < live bytes {bytes_cold}");
+
+    // warm rebuilds on a reset tape are bitwise identical, byte-identical,
+    // and never shrink the arena
+    let mut t = Tape::new();
+    for i in 0..5 {
+        t.reset();
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.mem_bytes(), 0);
+        let (warm, bytes_warm) = build(&mut t);
+        assert_eq!(warm, cold, "warm rebuild {i} not bitwise identical");
+        assert_eq!(bytes_warm, bytes_cold, "live bytes must be per-build");
+    }
+}
+
+#[test]
+fn arena_roundtrip_preserves_nothing_but_capacity() {
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(vec![1.0, 2.0, 3.0]));
+    let _ = t.tanh(x);
+    let arena = t.into_arena();
+    let t2 = Tape::from_arena(arena);
+    assert!(t2.is_empty(), "from_arena must start empty");
+    assert_eq!(t2.mem_bytes(), 0);
+}
+
+#[test]
+fn grad_into_matches_grad_and_reuses_buffer() {
+    let mut rng = Rng::new(22);
+    let xd = rng.normal_vec(4);
+
+    let mut ta = Tape::new();
+    let xa = ta.input(Tensor::vector(xd.clone()));
+    let ha = ta.tanh(xa);
+    let sa = ta.sum(ha);
+    let ga = ta.grad(sa, &[xa]);
+
+    let mut tb = Tape::new();
+    let mut gbuf: Vec<Var> = Vec::new();
+    for _ in 0..3 {
+        tb.reset();
+        let xb = tb.input(Tensor::vector(xd.clone()));
+        let hb = tb.tanh(xb);
+        let sb = tb.sum(hb);
+        tb.grad_into(sb, &[xb], &mut gbuf);
+        assert_eq!(gbuf.len(), 1);
+        assert_eq!(tb.val(gbuf[0]).data, ta.val(ga[0]).data.to_vec());
+    }
+}
+
+#[test]
+fn grad1_matches_grad() {
+    let xd = vec![0.4, -0.7, 1.3];
+    let mut t = Tape::new();
+    let x = t.input(Tensor::vector(xd.clone()));
+    let h = t.tanh(x);
+    let h2 = t.mul(h, h);
+    let s = t.sum(h2);
+    let g = t.grad(s, &[x]);
+    let expect = t.val(g[0]).data.to_vec();
+
+    let mut t2 = Tape::new();
+    let x2 = t2.input(Tensor::vector(xd));
+    let h = t2.tanh(x2);
+    let h2 = t2.mul(h, h);
+    let s = t2.sum(h2);
+    let g1 = t2.grad1(s, x2);
+    assert_eq!(t2.val(g1).data, expect);
+}
+
+#[test]
+fn slice_leaves_match_tensor_leaves() {
+    let data = vec![1.0, -2.0, 0.5, 3.0];
+    let mut ta = Tape::new();
+    let xa = ta.input(Tensor::matrix(data.clone(), 2, 2));
+    let sa = ta.sum(xa);
+    let mut tb = Tape::new();
+    let xb = tb.input_slice(&data, Shape::matrix(2, 2));
+    let sb = tb.sum(xb);
+    assert_eq!(ta.val(xa).data, tb.val(xb).data.to_vec());
+    assert_eq!(ta.val(xa).shape, tb.val(xb).shape.to_vec());
+    assert_eq!(ta.val_item(sa), tb.val_item(sb));
+}
+
 /// Property sweep: random small graphs — gradient of sum(tanh(xW+b)W2)²-ish
 /// compositions always matches finite differences.
 #[test]

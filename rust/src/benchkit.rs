@@ -5,6 +5,7 @@
 //! `rust/benches/*.rs` binaries (run via `cargo bench`) are built on it,
 //! as is the experiment harness's per-iteration timing.
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark: per-iteration wall times.
@@ -27,6 +28,18 @@ impl BenchResult {
         crate::util::stats::std_dev(&self.samples_ns)
     }
 
+    /// Summary statistics as a JSON object — one entry of the
+    /// `BENCH_*.json` artifacts the bench binaries emit for CI.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str())
+            .set("median_ns", self.median_ns())
+            .set("mean_ns", self.mean_ns())
+            .set("std_ns", self.std_ns())
+            .set("samples", self.samples_ns.len());
+        j
+    }
+
     /// `name  median ± σ` with human units.
     pub fn report(&self) -> String {
         format!(
@@ -37,6 +50,14 @@ impl BenchResult {
             self.samples_ns.len()
         )
     }
+}
+
+/// Collect a bench run into the standard JSON artifact shape:
+/// `{"results": [{name, median_ns, mean_ns, std_ns, samples}, …]}`.
+pub fn results_to_json(results: &[BenchResult]) -> Json {
+    let mut j = Json::obj();
+    j.set("results", Json::Arr(results.iter().map(|r| r.to_json()).collect()));
+    j
 }
 
 /// Format nanoseconds with adaptive units.
@@ -115,6 +136,17 @@ mod tests {
         });
         assert!(fast.samples_ns.len() >= 3);
         assert!(slow.median_ns() > fast.median_ns());
+    }
+
+    #[test]
+    fn json_export_roundtrips() {
+        let r = BenchResult { name: "demo".into(), samples_ns: vec![10.0, 20.0, 30.0] };
+        let j = results_to_json(&[r.clone()]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let entry = &back.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(entry.get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(entry.get("median_ns").unwrap().as_f64(), Some(r.median_ns()));
+        assert_eq!(entry.get("samples").unwrap().as_usize(), Some(3));
     }
 
     #[test]

@@ -10,12 +10,29 @@
 //! `ε` is pushed through the Jacobian (`dh' = (1−h'²)⊙(da)` layer by
 //! layer), giving `εᵀJε` as differentiable tape ops; for the exact trace,
 //! `d` unit probes are propagated (used by tests and small-`d` runs).
+//!
+//! ## Allocation discipline
+//!
+//! The symplectic adjoint recomputes one tape per solver stage, so this
+//! system keeps all per-build structure (gather index maps, the time-mask
+//! constant, padded probes) in a [`BuildCache`] computed once at
+//! construction, and all per-call scratch (the extracted `x` block, the
+//! `wrt`/gradient var lists, the λ split) in a pooled [`CnfScratch`]. The
+//! [`OdeSystem::vjp_fused_ws`] override builds onto an arena-pooled tape
+//! from the caller's [`Workspace`], so a *warm* stage performs zero heap
+//! allocations; `eval` (called by the backward-sweep recompute) runs the
+//! same way on an internal pool. The allocating `eval_traced` +
+//! `vjp_traced` pair remains as the bitwise-identical reference path —
+//! both paths share [`CnfSystem::build`] and [`CnfSystem::vjp_build`], so
+//! they emit the exact same op sequence.
 
-use crate::autodiff::{Tape, Tensor, Var};
+use crate::autodiff::{Shape, Tape, Var};
 use crate::nn::Mlp;
 use crate::ode::{OdeSystem, Trace};
 use crate::util::Rng;
+use crate::workspace::Workspace;
 use std::cell::RefCell;
+use std::rc::Rc;
 
 /// How `Tr(∂f/∂x)` is computed.
 #[derive(Debug, Clone)]
@@ -27,6 +44,40 @@ pub enum TraceEstimator {
     Hutchinson,
 }
 
+/// Per-construction structural data: everything about the graph that does
+/// not depend on `(t, z, θ, ε)`, so warm rebuilds never recompute it.
+struct BuildCache {
+    /// Gather map embedding `[b, d]` state into the `[b, d+1]` net input.
+    inp_idx: Rc<Vec<usize>>,
+    /// `[b, d+1]` ones with a zero time column.
+    mask: Vec<f64>,
+    /// Exact estimator: the `d` unit probes, pre-padded to `[b, d+1]`.
+    exact_probes: Vec<Vec<f64>>,
+    /// Exact estimator: per-`k` column-pick gather maps.
+    col_idx: Vec<Rc<Vec<usize>>>,
+}
+
+/// Per-call scratch, pooled across evaluations.
+struct CnfScratch {
+    /// `x` block extracted from the augmented state, `[b, d]`.
+    x: Vec<f64>,
+    /// Time-column constant `[b, d+1]` (zeros except column `d` = t).
+    tcol: Vec<f64>,
+    /// Hutchinson probe padded to `[b, d+1]` (time column stays zero).
+    probe: Vec<f64>,
+    /// Tangent vars, one per probe.
+    dh: Vec<Var>,
+    /// `[x_var, W1, b1, W2, b2, …]` for the VJP.
+    wrt: Vec<Var>,
+    /// Gradient vars returned by `grad_into`.
+    grads: Vec<Var>,
+    /// λ split buffers.
+    lam_f: Vec<f64>,
+    lam_l: Vec<f64>,
+    /// Tape pool for `eval` (the trait gives `eval` no workspace).
+    eval_ws: Workspace,
+}
+
 /// The CNF augmented ODE system.
 pub struct CnfSystem {
     pub net: Mlp,
@@ -36,17 +87,16 @@ pub struct CnfSystem {
     /// Rademacher probe, `[batch, d]` flattened. Fixed during one gradient
     /// computation; resampled between iterations.
     pub eps: Vec<f64>,
-    /// Parameter slice for the current tape build (the `OdeSystem` trait
-    /// passes params per call; `build` reads them from here).
-    params_cache: RefCell<Vec<f64>>,
+    cache: BuildCache,
+    scratch: RefCell<CnfScratch>,
     /// Lazily measured tape size of one traced evaluation.
     trace_bytes_cache: RefCell<Option<u64>>,
 }
 
 struct CnfTrace {
     tape: RefCell<Tape>,
-    x_var: Var,
-    param_vars: Vec<Var>,
+    /// `[x_var, param vars…]` (owned: the trace outlives the scratch).
+    wrt: Vec<Var>,
     /// concatenated output var: f rows [batch, d]
     f_var: Var,
     /// per-sample −trace estimate [batch]
@@ -69,15 +119,61 @@ impl CnfSystem {
     pub fn new(dims: &[usize], batch: usize, estimator: TraceEstimator) -> CnfSystem {
         assert_eq!(dims[0], *dims.last().unwrap());
         let d = dims[0];
+        let b = batch;
         let mut net_dims = dims.to_vec();
         net_dims[0] = d + 1;
+
+        // network input [x ‖ t]: concat via gather for the x part plus a
+        // constant time column — inp = gather(x, idx) ⊙ mask + t·(1−mask).
+        let mut inp_idx = Vec::with_capacity(b * (d + 1));
+        for row in 0..b {
+            for j in 0..d {
+                inp_idx.push(row * d + j);
+            }
+            inp_idx.push(0); // placeholder, masked out below
+        }
+        let mut mask = vec![1.0; b * (d + 1)];
+        for row in 0..b {
+            mask[row * (d + 1) + d] = 0.0;
+        }
+        let exact_probes: Vec<Vec<f64>> = match estimator {
+            TraceEstimator::Hutchinson => Vec::new(),
+            TraceEstimator::Exact => (0..d)
+                .map(|k| {
+                    // unit probe e_k, already in padded [b, d+1] layout
+                    let mut e = vec![0.0; b * (d + 1)];
+                    for row in 0..b {
+                        e[row * (d + 1) + k] = 1.0;
+                    }
+                    e
+                })
+                .collect(),
+        };
+        let col_idx: Vec<Rc<Vec<usize>>> = match estimator {
+            TraceEstimator::Hutchinson => Vec::new(),
+            TraceEstimator::Exact => (0..d)
+                .map(|k| Rc::new((0..b).map(|row| row * d + k).collect::<Vec<usize>>()))
+                .collect(),
+        };
+
         CnfSystem {
             net: Mlp::new(&net_dims),
             d,
             batch,
             estimator,
             eps: vec![1.0; batch * d],
-            params_cache: RefCell::new(Vec::new()),
+            cache: BuildCache { inp_idx: Rc::new(inp_idx), mask, exact_probes, col_idx },
+            scratch: RefCell::new(CnfScratch {
+                x: vec![0.0; b * d],
+                tcol: vec![0.0; b * (d + 1)],
+                probe: vec![0.0; b * (d + 1)],
+                dh: Vec::new(),
+                wrt: Vec::new(),
+                grads: Vec::new(),
+                lam_f: vec![0.0; b * d],
+                lam_l: vec![0.0; b],
+                eval_ws: Workspace::new(),
+            }),
             trace_bytes_cache: RefCell::new(None),
         }
     }
@@ -92,93 +188,77 @@ impl CnfSystem {
         self.eps = rng.rademacher_vec(self.batch * self.d);
     }
 
-    /// Build the network + tangent propagation on a tape.
+    /// Build the network + tangent propagation on `tape`, reading the
+    /// augmented state `z` and the explicit parameter slice.
     ///
-    /// Returns `(x_var, param_vars, f_var, neg_tr_var)`.
-    fn build(&self, tape: &mut Tape, t: f64, x: &[f64]) -> (Var, Vec<Var>, Var, Var, Vec<Var>) {
+    /// Fills `sc.wrt` with `[x_var, param vars…]` and returns
+    /// `(x_var, f_var, neg_tr_var)`. Allocation-free when the tape and
+    /// scratch are warm.
+    fn build(
+        &self,
+        tape: &mut Tape,
+        t: f64,
+        z: &[f64],
+        params: &[f64],
+        sc: &mut CnfScratch,
+    ) -> (Var, Var, Var) {
         let b = self.batch;
         let d = self.d;
+        assert_eq!(z.len(), b * (d + 1));
 
-        let x_var = tape.input(Tensor::matrix(x.to_vec(), b, d));
-        // network input [x ‖ t]: build by gather from [b, d] plus a const
-        // time column — implemented as matmul with a (d × d+1) selector
-        // would be wasteful; use gather indices instead.
-        let mut idx = Vec::with_capacity(b * (d + 1));
+        // extract x rows from augmented state
         for row in 0..b {
-            for j in 0..d {
-                idx.push(row * d + j);
-            }
-            idx.push(0); // placeholder, overwritten by time column below
+            sc.x[row * d..(row + 1) * d].copy_from_slice(&z[row * (d + 1)..row * (d + 1) + d]);
         }
-        // simpler: concat via gather for x part and add a constant column:
-        // inp = gather(x, idx)*(mask) + t*(1-mask). Build mask constants.
-        let idx = std::rc::Rc::new(idx);
-        let gathered = tape.gather(x_var, idx, vec![b, d + 1]);
-        let mut maskv = vec![1.0; b * (d + 1)];
-        let mut tcol = vec![0.0; b * (d + 1)];
+
+        let x_var = tape.input_slice(&sc.x, Shape::matrix(b, d));
+        let gathered = tape.gather(x_var, Rc::clone(&self.cache.inp_idx), Shape::matrix(b, d + 1));
+        let mask = tape.constant_slice(&self.cache.mask, Shape::matrix(b, d + 1));
         for row in 0..b {
-            maskv[row * (d + 1) + d] = 0.0;
-            tcol[row * (d + 1) + d] = t;
+            sc.tcol[row * (d + 1) + d] = t;
         }
-        let mask = tape.constant(Tensor::matrix(maskv, b, d + 1));
-        let tconst = tape.constant(Tensor::matrix(tcol, b, d + 1));
+        let tconst = tape.constant_slice(&sc.tcol, Shape::matrix(b, d + 1));
         let xmasked = tape.mul(gathered, mask);
         let inp = tape.add(xmasked, tconst);
 
-        // parameters as tape inputs
-        let mut param_vars = Vec::new();
+        sc.wrt.clear();
+        sc.wrt.push(x_var);
 
-        // tangent seeds, per estimator: list of probe matrices [b, d]
-        let probes: Vec<Vec<f64>> = match self.estimator {
-            TraceEstimator::Hutchinson => vec![self.eps.clone()],
-            TraceEstimator::Exact => (0..d)
-                .map(|k| {
-                    let mut e = vec![0.0; b * d];
-                    for row in 0..b {
-                        e[row * d + k] = 1.0;
-                    }
-                    e
-                })
-                .collect(),
-        };
-        // probe in network-input space: zero tangent on the time column
-        let probe_vars: Vec<Var> = probes
-            .iter()
-            .map(|p| {
-                let mut pv = vec![0.0; b * (d + 1)];
+        // tangent seeds in network-input space (zero on the time column)
+        sc.dh.clear();
+        match self.estimator {
+            TraceEstimator::Hutchinson => {
                 for row in 0..b {
-                    pv[row * (d + 1)..row * (d + 1) + d]
-                        .copy_from_slice(&p[row * d..(row + 1) * d]);
+                    sc.probe[row * (d + 1)..row * (d + 1) + d]
+                        .copy_from_slice(&self.eps[row * d..(row + 1) * d]);
                 }
-                tape.constant(Tensor::matrix(pv, b, d + 1))
-            })
-            .collect();
+                sc.dh.push(tape.constant_slice(&sc.probe, Shape::matrix(b, d + 1)));
+            }
+            TraceEstimator::Exact => {
+                for p in &self.cache.exact_probes {
+                    sc.dh.push(tape.constant_slice(p, Shape::matrix(b, d + 1)));
+                }
+            }
+        }
 
         // forward + tangent propagation
         let mut h = inp;
-        let mut dh: Vec<Var> = probe_vars;
         let n_layers = self.net.n_layers();
-        let mut params_flat_offset = 0usize;
+        let mut off = 0usize;
         for l in 0..n_layers {
             let (din, dout) = (self.net.dims[l], self.net.dims[l + 1]);
-            let w = tape.input(Tensor::matrix(
-                self.params_cache.borrow()[params_flat_offset..params_flat_offset + din * dout]
-                    .to_vec(),
-                din,
-                dout,
-            ));
-            let bias = tape.input(Tensor::vector(
-                self.params_cache.borrow()
-                    [params_flat_offset + din * dout..params_flat_offset + din * dout + dout]
-                    .to_vec(),
-            ));
-            params_flat_offset += din * dout + dout;
-            param_vars.push(w);
-            param_vars.push(bias);
+            let w = tape.input_slice(&params[off..off + din * dout], Shape::matrix(din, dout));
+            let bias = tape.input_slice(
+                &params[off + din * dout..off + din * dout + dout],
+                Shape::vector(dout),
+            );
+            off += din * dout + dout;
+            sc.wrt.push(w);
+            sc.wrt.push(bias);
 
             let a = tape.matmul(h, w);
             let a = tape.bias_add(a, bias);
-            for dv in dh.iter_mut() {
+            for dv in sc.dh.iter_mut() {
                 *dv = tape.matmul(*dv, w);
             }
             if l < n_layers - 1 {
@@ -186,9 +266,9 @@ impl CnfSystem {
                 // dh' = (1 − h'²) ⊙ da
                 let h2 = tape.mul(hv, hv);
                 let onec = tape.scalar_const(1.0);
-                let ones = tape.fill_like(onec, vec![b, dout]);
+                let ones = tape.fill_like(onec, Shape::matrix(b, dout));
                 let dtanh = tape.sub(ones, h2);
-                for dv in dh.iter_mut() {
+                for dv in sc.dh.iter_mut() {
                     *dv = tape.mul(dtanh, *dv);
                 }
                 h = hv;
@@ -201,8 +281,8 @@ impl CnfSystem {
         // −trace: Hutchinson: −Σ_j ε_j (Jε)_j per row; exact: −Σ_k (J e_k)_k
         let neg_tr = match self.estimator {
             TraceEstimator::Hutchinson => {
-                let epsv = tape.constant(Tensor::matrix(self.eps.clone(), b, d));
-                let prod = tape.mul(dh[0], epsv); // [b, d]
+                let epsv = tape.constant_slice(&self.eps, Shape::matrix(b, d));
+                let prod = tape.mul(sc.dh[0], epsv); // [b, d]
                 let pt = tape.transpose(prod); // [d, b]
                 let row_sums = tape.sum_axis0(pt); // [b]
                 tape.neg(row_sums)
@@ -210,10 +290,8 @@ impl CnfSystem {
             TraceEstimator::Exact => {
                 // Σ_k (tangent_k)[:, k]
                 let mut acc: Option<Var> = None;
-                for (k, dv) in dh.iter().enumerate() {
-                    // pick column k of dv: gather
-                    let idx: Vec<usize> = (0..b).map(|row| row * d + k).collect();
-                    let col = tape.gather(*dv, std::rc::Rc::new(idx), vec![b]);
+                for (k, dv) in sc.dh.iter().enumerate() {
+                    let col = tape.gather(*dv, Rc::clone(&self.cache.col_idx[k]), Shape::vector(b));
                     acc = Some(match acc {
                         None => col,
                         Some(a) => tape.add(a, col),
@@ -222,14 +300,70 @@ impl CnfSystem {
                 tape.neg(acc.unwrap())
             }
         };
-        (x_var, param_vars, f_var, neg_tr, dh)
+        (x_var, f_var, neg_tr)
     }
-}
 
-impl CnfSystem {
-    fn set_params(&self, params: &[f64]) {
-        self.params_cache.borrow_mut().clear();
-        self.params_cache.borrow_mut().extend_from_slice(params);
+    /// Write the augmented derivative `[f ‖ −tr]` from tape values.
+    fn write_out(&self, tape: &Tape, f_var: Var, neg_tr_var: Var, out: &mut [f64]) {
+        let b = self.batch;
+        let d = self.d;
+        let fv = tape.val_data(f_var);
+        let trv = tape.val_data(neg_tr_var);
+        for row in 0..b {
+            out[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&fv[row * d..(row + 1) * d]);
+            out[row * (d + 1) + d] = trv[row];
+        }
+    }
+
+    /// Emit the VJP ops onto `tape` and write `g_x` (overwrite) / `g_p`
+    /// (accumulate). Shared verbatim by `vjp_traced` and `vjp_fused_ws` so
+    /// the two paths are bitwise identical by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_build(
+        &self,
+        tape: &mut Tape,
+        wrt: &[Var],
+        f_var: Var,
+        neg_tr_var: Var,
+        lam: &[f64],
+        lam_f: &mut [f64],
+        lam_l: &mut [f64],
+        grads: &mut Vec<Var>,
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let b = self.batch;
+        let d = self.d;
+        // split λ into [λ_f (b,d)] and [λ_ℓ (b)]
+        for row in 0..b {
+            lam_f[row * d..(row + 1) * d].copy_from_slice(&lam[row * (d + 1)..row * (d + 1) + d]);
+            lam_l[row] = lam[row * (d + 1) + d];
+        }
+        let lam_f_var = tape.constant_slice(lam_f, Shape::matrix(b, d));
+        let lam_l_var = tape.constant_slice(lam_l, Shape::vector(b));
+        let s1 = tape.mul(lam_f_var, f_var);
+        let s1 = tape.sum(s1);
+        let s2 = tape.mul(lam_l_var, neg_tr_var);
+        let s2 = tape.sum(s2);
+        let total = tape.add(s1, s2);
+
+        tape.grad_into(total, wrt, grads);
+
+        // g_x: [b, d] → augmented layout [b, d+1] with zero ℓ-column
+        let gx = tape.val_data(grads[0]);
+        g_x.fill(0.0);
+        for row in 0..b {
+            g_x[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&gx[row * d..(row + 1) * d]);
+        }
+        // parameter grads in Mlp flat layout [W1, b1, W2, b2, …]
+        let mut off = 0usize;
+        for g in &grads[1..] {
+            let v = tape.val_data(*g);
+            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
+                *dst += *src;
+            }
+            off += v.len();
+        }
     }
 }
 
@@ -243,13 +377,30 @@ impl OdeSystem for CnfSystem {
     }
 
     fn eval(&self, t: f64, z: &[f64], params: &[f64], out: &mut [f64]) {
-        let mut scratch = vec![0.0; self.dim()];
-        let _ = self.eval_traced_impl(t, z, params, &mut scratch, false);
-        out.copy_from_slice(&scratch);
+        // evaluate directly into `out` on a pooled tape: this is the
+        // backward-sweep recompute path (`rk_stages_ws` calls it per
+        // stage), so it must be allocation-free when warm.
+        let sc = &mut *self.scratch.borrow_mut();
+        let mut tape = sc.eval_ws.take_tape();
+        let (_, f_var, neg_tr_var) = self.build(&mut tape, t, z, params, sc);
+        self.write_out(&tape, f_var, neg_tr_var, out);
+        sc.eval_ws.put_tape(tape);
     }
 
     fn eval_traced(&self, t: f64, z: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
-        self.eval_traced_impl(t, z, params, out, true).unwrap()
+        // reference path: a fresh allocating tape the caller may keep
+        let sc = &mut *self.scratch.borrow_mut();
+        let mut tape = Tape::new();
+        let (_, f_var, neg_tr_var) = self.build(&mut tape, t, z, params, sc);
+        self.write_out(&tape, f_var, neg_tr_var, out);
+        let bytes = tape.mem_bytes() as u64;
+        Box::new(CnfTrace {
+            tape: RefCell::new(tape),
+            wrt: sc.wrt.clone(),
+            f_var,
+            neg_tr_var,
+            bytes,
+        })
     }
 
     fn vjp_traced(
@@ -262,43 +413,43 @@ impl OdeSystem for CnfSystem {
     ) {
         let tr = trace.as_any().downcast_ref::<CnfTrace>().unwrap();
         let mut tape = tr.tape.borrow_mut();
-        let b = self.batch;
-        let d = self.d;
-        // split λ into [λ_f (b,d)] and [λ_ℓ (b)]
-        let mut lam_f = vec![0.0; b * d];
-        let mut lam_l = vec![0.0; b];
-        for row in 0..b {
-            lam_f[row * d..(row + 1) * d].copy_from_slice(&lam[row * (d + 1)..row * (d + 1) + d]);
-            lam_l[row] = lam[row * (d + 1) + d];
-        }
-        let lam_f_var = tape.constant(Tensor::matrix(lam_f, b, d));
-        let lam_l_var = tape.constant(Tensor::vector(lam_l));
-        let s1 = tape.mul(lam_f_var, tr.f_var);
-        let s1 = tape.sum(s1);
-        let s2 = tape.mul(lam_l_var, tr.neg_tr_var);
-        let s2 = tape.sum(s2);
-        let total = tape.add(s1, s2);
+        let sc = &mut *self.scratch.borrow_mut();
+        let CnfScratch { lam_f, lam_l, grads, .. } = sc;
+        self.vjp_build(
+            &mut tape,
+            &tr.wrt,
+            tr.f_var,
+            tr.neg_tr_var,
+            lam,
+            lam_f,
+            lam_l,
+            grads,
+            g_x,
+            g_p,
+        );
+    }
 
-        let mut wrt = vec![tr.x_var];
-        wrt.extend_from_slice(&tr.param_vars);
-        let grads = tape.grad(total, &wrt);
-
-        // g_x: [b, d] → augmented layout [b, d+1] with zero ℓ-column
-        let gx_val = tape.val(grads[0]).data.clone();
-        g_x.fill(0.0);
-        for row in 0..b {
-            g_x[row * (d + 1)..row * (d + 1) + d]
-                .copy_from_slice(&gx_val[row * d..(row + 1) * d]);
-        }
-        // parameter grads in Mlp flat layout [W1, b1, W2, b2, …]
-        let mut off = 0usize;
-        for g in &grads[1..] {
-            let v = &tape.val(*g).data;
-            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
-                *dst += src;
-            }
-            off += v.len();
-        }
+    fn vjp_fused_ws(
+        &self,
+        t: f64,
+        z: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+        ws: &mut Workspace,
+    ) -> u64 {
+        let sc = &mut *self.scratch.borrow_mut();
+        let mut tape = ws.take_tape();
+        let (x_var, f_var, neg_tr_var) = self.build(&mut tape, t, z, params, sc);
+        // graph bytes after the forward build — same instant `eval_traced`
+        // measures, before the VJP extends the tape
+        let bytes = tape.mem_bytes() as u64;
+        let CnfScratch { wrt, lam_f, lam_l, grads, .. } = sc;
+        debug_assert_eq!(wrt[0], x_var);
+        self.vjp_build(&mut tape, wrt, f_var, neg_tr_var, lam, lam_f, lam_l, grads, g_x, g_p);
+        ws.put_tape(tape);
+        bytes
     }
 
     fn trace_bytes(&self) -> u64 {
@@ -309,49 +460,6 @@ impl OdeSystem for CnfSystem {
             let tr = self.eval_traced(0.0, &z, &p, &mut out);
             tr.bytes()
         })
-    }
-}
-
-impl CnfSystem {
-    fn eval_traced_impl(
-        &self,
-        t: f64,
-        z: &[f64],
-        params: &[f64],
-        out: &mut [f64],
-        traced: bool,
-    ) -> Option<Box<dyn Trace>> {
-        let b = self.batch;
-        let d = self.d;
-        assert_eq!(z.len(), b * (d + 1));
-        self.set_params(params);
-        let mut tape = Tape::new();
-        // extract x rows from augmented state
-        let mut x = vec![0.0; b * d];
-        for row in 0..b {
-            x[row * d..(row + 1) * d].copy_from_slice(&z[row * (d + 1)..row * (d + 1) + d]);
-        }
-        let (x_var, param_vars, f_var, neg_tr_var, _dh) = self.build(&mut tape, t, &x);
-
-        let fv = &tape.val(f_var).data;
-        let trv = &tape.val(neg_tr_var).data;
-        for row in 0..b {
-            out[row * (d + 1)..row * (d + 1) + d].copy_from_slice(&fv[row * d..(row + 1) * d]);
-            out[row * (d + 1) + d] = trv[row];
-        }
-        if traced {
-            let bytes = tape.mem_bytes() as u64;
-            Some(Box::new(CnfTrace {
-                tape: RefCell::new(tape),
-                x_var,
-                param_vars,
-                f_var,
-                neg_tr_var,
-                bytes,
-            }))
-        } else {
-            None
-        }
     }
 }
 

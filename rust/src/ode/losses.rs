@@ -61,6 +61,30 @@ impl Loss for MseLoss {
     }
 }
 
+/// `L(x) = c · inner(x)` — rescales another loss.
+///
+/// This is what makes batch-**mean** objectives decompose exactly over
+/// row shards: a shard of `k` of `n` rows contributes
+/// `(k/n) · mean_over_shard`, so the sharded gradient drivers wrap each
+/// shard's loss in `ScaledLoss { c: k/n }` and merge by summation.
+pub struct ScaledLoss<L: Loss> {
+    pub inner: L,
+    pub c: f64,
+}
+
+impl<L: Loss> Loss for ScaledLoss<L> {
+    fn loss(&self, x_t: &[f64]) -> f64 {
+        self.c * self.inner.loss(x_t)
+    }
+
+    fn grad(&self, x_t: &[f64], out: &mut [f64]) {
+        self.inner.grad(x_t, out);
+        for o in out.iter_mut() {
+            *o *= self.c;
+        }
+    }
+}
+
 /// Weighted linear loss `L(x) = wᵀx` — used by property tests to probe
 /// arbitrary directions of the terminal Jacobian.
 pub struct LinearLoss {

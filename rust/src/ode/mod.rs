@@ -90,9 +90,13 @@ pub trait OdeSystem {
     /// call's conceptual lifetime.
     ///
     /// The default implementation is the reference allocating path
-    /// (`eval_traced` + `vjp_traced`); backends with hand-rolled passes
-    /// override it to draw every intermediate from the [`Workspace`].
-    /// Must be numerically identical to the default path.
+    /// (`eval_traced` + `vjp_traced`); backends override it to draw every
+    /// intermediate from the [`Workspace`] — the native MLP backend via
+    /// hand-rolled buffers, the tape backends (`CnfSystem`, `HnnSystem`)
+    /// by rebuilding onto a pooled [`crate::autodiff::TapeArena`]
+    /// (`Workspace::take_tape`/`put_tape`). Must be numerically identical
+    /// to the default path (the tape backends are bitwise identical by
+    /// construction: both paths emit the same op sequence).
     fn vjp_fused_ws(
         &self,
         t: f64,

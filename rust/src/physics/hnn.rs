@@ -9,13 +9,32 @@
 //! gradient-method VJP of this system differentiates *through* a
 //! gradient — exercising the tape's higher-order machinery exactly the
 //! way PyTorch's double-backward is exercised by the original HNN++.
+//!
+//! All per-build structure (the im2col map, the ±1 shift stencil maps) is
+//! cached at construction, parameters are read straight from the caller's
+//! slice, and the [`OdeSystem::vjp_fused_ws`] / [`OdeSystem::eval`] hot
+//! paths run on arena-pooled tapes — a warm symplectic-adjoint stage
+//! performs zero heap allocations. `eval_traced` + `vjp_traced` remain
+//! the allocating reference; both paths share [`HnnSystem::build`] and
+//! [`HnnSystem::vjp_build`], so they are bitwise identical.
 
 use super::GOperator;
-use crate::autodiff::{Tape, Tensor, Var};
+use crate::autodiff::{Shape, Tape, Var};
 use crate::ode::{OdeSystem, Trace};
 use crate::util::Rng;
+use crate::workspace::Workspace;
 use std::cell::RefCell;
 use std::rc::Rc;
+
+/// Per-call scratch, pooled across evaluations.
+struct HnnScratch {
+    /// `[u_var, Wc, bc, w2, b2, w3, b3]` for the VJP.
+    wrt: Vec<Var>,
+    /// Gradient vars returned by `grad_into`.
+    grads: Vec<Var>,
+    /// Tape pool for `eval` (the trait gives `eval` no workspace).
+    eval_ws: Workspace,
+}
 
 /// Energy-based PDE model over a periodic grid.
 pub struct HnnSystem {
@@ -31,14 +50,17 @@ pub struct HnnSystem {
     /// Grid spacing (for the stencils).
     pub dx: f64,
     im2col_idx: Rc<Vec<usize>>,
-    params_cache: RefCell<Vec<f64>>,
+    /// Periodic +1 / −1 shift maps for the `G` stencils.
+    shift_plus: Rc<Vec<usize>>,
+    shift_minus: Rc<Vec<usize>>,
+    scratch: RefCell<HnnScratch>,
     trace_bytes_cache: RefCell<Option<u64>>,
 }
 
 struct HnnTrace {
     tape: RefCell<Tape>,
-    u_var: Var,
-    param_vars: Vec<Var>,
+    /// `[u_var, param vars…]` (owned: the trace outlives the scratch).
+    wrt: Vec<Var>,
     f_var: Var,
     bytes: u64,
 }
@@ -52,8 +74,27 @@ impl Trace for HnnTrace {
     }
 }
 
+/// Periodic shift map: `out[s, g] = in[s, (g + o) mod w]`.
+fn shift_idx(batch: usize, w: usize, o: isize) -> Vec<usize> {
+    let mut idx = Vec::with_capacity(batch * w);
+    for s in 0..batch {
+        for g in 0..w {
+            let pos = ((g as isize + o).rem_euclid(w as isize)) as usize;
+            idx.push(s * w + pos);
+        }
+    }
+    idx
+}
+
 impl HnnSystem {
-    pub fn new(grid: usize, batch: usize, k: usize, channels: usize, g_op: GOperator, dx: f64) -> HnnSystem {
+    pub fn new(
+        grid: usize,
+        batch: usize,
+        k: usize,
+        channels: usize,
+        g_op: GOperator,
+        dx: f64,
+    ) -> HnnSystem {
         assert!(k % 2 == 1, "kernel width must be odd");
         // im2col over [batch, grid] -> [batch*grid, k] periodic windows
         let half = k / 2;
@@ -74,7 +115,13 @@ impl HnnSystem {
             g_op,
             dx,
             im2col_idx: Rc::new(idx),
-            params_cache: RefCell::new(Vec::new()),
+            shift_plus: Rc::new(shift_idx(batch, grid, 1)),
+            shift_minus: Rc::new(shift_idx(batch, grid, -1)),
+            scratch: RefCell::new(HnnScratch {
+                wrt: Vec::new(),
+                grads: Vec::new(),
+                eval_ws: Workspace::new(),
+            }),
             trace_bytes_cache: RefCell::new(None),
         }
     }
@@ -107,28 +154,33 @@ impl HnnSystem {
         p
     }
 
-    /// Build `H` and `f = G∇H` on the tape; returns `(u_var, params, f_var)`.
-    fn build(&self, tape: &mut Tape, u: &[f64]) -> (Var, Vec<Var>, Var) {
-        let (b, w, c, k) = (self.batch, self.grid, self.channels, self.k);
-        let params = self.params_cache.borrow().clone();
+    /// Push the six parameter blocks as tape inputs, straight from the
+    /// caller's flat slice.
+    fn push_params(&self, tape: &mut Tape, params: &[f64]) -> [Var; 6] {
+        let (c, k) = (self.channels, self.k);
         let mut off = 0usize;
-        let mut take = |n: usize| -> Vec<f64> {
-            let v = params[off..off + n].to_vec();
+        let mut take = |n: usize| -> std::ops::Range<usize> {
+            let r = off..off + n;
             off += n;
-            v
+            r
         };
+        let wc = tape.input_slice(&params[take(k * c)], Shape::matrix(k, c));
+        let bc = tape.input_slice(&params[take(c)], Shape::vector(c));
+        let w2 = tape.input_slice(&params[take(c * c)], Shape::matrix(c, c));
+        let b2 = tape.input_slice(&params[take(c)], Shape::vector(c));
+        let w3 = tape.input_slice(&params[take(c)], Shape::matrix(c, 1));
+        let b3 = tape.input_slice(&params[take(1)], Shape::vector(1));
+        [wc, bc, w2, b2, w3, b3]
+    }
 
-        let u_var = tape.input(Tensor::matrix(u.to_vec(), b, w));
-        let wc = tape.input(Tensor::matrix(take(k * c), k, c));
-        let bc = tape.input(Tensor::vector(take(c)));
-        let w2 = tape.input(Tensor::matrix(take(c * c), c, c));
-        let b2 = tape.input(Tensor::vector(take(c)));
-        let w3 = tape.input(Tensor::matrix(take(c), c, 1));
-        let b3 = tape.input(Tensor::vector(take(1)));
-        let param_vars = vec![wc, bc, w2, b2, w3, b3];
-
-        // H(u): im2col → conv-as-matmul → tanh → linear → tanh → density → sum
-        let cols = tape.gather(u_var, self.im2col_idx.clone(), vec![b * w, k]);
+    /// Emit `H(u)` (scaled Riemann sum) from an already-pushed `u_var` and
+    /// parameter vars: im2col → conv-as-matmul → tanh → linear → tanh →
+    /// density → sum. Shared by [`HnnSystem::build`] and
+    /// [`HnnSystem::energy`].
+    fn emit_energy(&self, tape: &mut Tape, u_var: Var, pv: &[Var; 6]) -> Var {
+        let (b, w, k) = (self.batch, self.grid, self.k);
+        let [wc, bc, w2, b2, w3, b3] = *pv;
+        let cols = tape.gather(u_var, Rc::clone(&self.im2col_idx), Shape::matrix(b * w, k));
         let a1 = tape.matmul(cols, wc);
         let a1 = tape.bias_add(a1, bc);
         let h1 = tape.tanh(a1); // [b·w, c]
@@ -138,90 +190,83 @@ impl HnnSystem {
         let dens = tape.matmul(h2, w3); // [b·w, 1]
         let dens = tape.bias_add(dens, b3);
         let h_total = tape.sum(dens);
-        let h_scaled = tape.scale(h_total, self.dx); // Riemann sum over the grid
+        tape.scale(h_total, self.dx) // Riemann sum over the grid
+    }
+
+    /// Build `H` and `f = G∇H` on the tape; fills `wrt` with
+    /// `[u_var, param vars…]` and returns `(u_var, f_var)`.
+    /// Allocation-free when the tape is warm.
+    fn build(&self, tape: &mut Tape, u: &[f64], params: &[f64], wrt: &mut Vec<Var>) -> (Var, Var) {
+        let (b, w) = (self.batch, self.grid);
+
+        let u_var = tape.input_slice(u, Shape::matrix(b, w));
+        let pv = self.push_params(tape, params);
+        wrt.clear();
+        wrt.push(u_var);
+        wrt.extend_from_slice(&pv);
+
+        let h_scaled = self.emit_energy(tape, u_var, &pv);
 
         // ∇H per sample — the inner gradient
-        let grads = tape.grad(h_scaled, &[u_var]);
-        let grad_h = grads[0]; // [b, w]
+        let grad_h = tape.grad1(h_scaled, u_var); // [b, w]
 
         // f = G ∇H via periodic stencils (built from gathers, all linear)
         let f_var = match self.g_op {
             GOperator::Dx => {
                 // (v_{i+1} − v_{i−1}) / (2Δx)
-                let plus = self.shift(tape, grad_h, 1);
-                let minus = self.shift(tape, grad_h, -1);
+                let plus = tape.gather(grad_h, Rc::clone(&self.shift_plus), Shape::matrix(b, w));
+                let minus = tape.gather(grad_h, Rc::clone(&self.shift_minus), Shape::matrix(b, w));
                 let diff = tape.sub(plus, minus);
                 tape.scale(diff, 1.0 / (2.0 * self.dx))
             }
             GOperator::Dxx => {
                 // (v_{i+1} − 2v_i + v_{i−1}) / Δx²
-                let plus = self.shift(tape, grad_h, 1);
-                let minus = self.shift(tape, grad_h, -1);
+                let plus = tape.gather(grad_h, Rc::clone(&self.shift_plus), Shape::matrix(b, w));
+                let minus = tape.gather(grad_h, Rc::clone(&self.shift_minus), Shape::matrix(b, w));
                 let sum = tape.add(plus, minus);
                 let two = tape.scale(grad_h, 2.0);
                 let diff = tape.sub(sum, two);
                 tape.scale(diff, 1.0 / (self.dx * self.dx))
             }
         };
-        (u_var, param_vars, f_var)
+        (u_var, f_var)
     }
 
-    /// Periodic shift by `o` grid points along the grid axis of `[b, w]`.
-    fn shift(&self, tape: &mut Tape, v: Var, o: isize) -> Var {
-        let (b, w) = (self.batch, self.grid);
-        let mut idx = Vec::with_capacity(b * w);
-        for s in 0..b {
-            for g in 0..w {
-                let pos = ((g as isize + o).rem_euclid(w as isize)) as usize;
-                idx.push(s * w + pos);
+    /// Emit the VJP ops onto `tape` and write `g_x` (overwrite) / `g_p`
+    /// (accumulate). Shared verbatim by `vjp_traced` and `vjp_fused_ws` so
+    /// the two paths are bitwise identical by construction.
+    fn vjp_build(
+        &self,
+        tape: &mut Tape,
+        wrt: &[Var],
+        f_var: Var,
+        lam: &[f64],
+        grads: &mut Vec<Var>,
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        let lam_var = tape.constant_slice(lam, Shape::matrix(self.batch, self.grid));
+        let prod = tape.mul(lam_var, f_var);
+        let total = tape.sum(prod);
+        tape.grad_into(total, wrt, grads);
+        g_x.copy_from_slice(tape.val_data(grads[0]));
+        let mut off = 0usize;
+        for g in &grads[1..] {
+            let v = tape.val_data(*g);
+            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
+                *dst += *src;
             }
+            off += v.len();
         }
-        tape.gather(v, Rc::new(idx), vec![b, w])
     }
 
     /// Evaluate the learned energy `H` per batch (for conservation checks).
     pub fn energy(&self, u: &[f64], params: &[f64]) -> f64 {
-        self.params_cache.borrow_mut().clear();
-        self.params_cache.borrow_mut().extend_from_slice(params);
         let mut tape = Tape::new();
-        let (b, w, c, k) = (self.batch, self.grid, self.channels, self.k);
-        let _ = (b, w, c, k);
-        let (_u, _p, _f) = self.build(&mut tape, u);
-        // H was an intermediate node; rebuild just H instead:
-        // (cheap enough: reuse build and read the scaled-H node is not
-        // exposed, so recompute the density sum here)
-        // For simplicity, recompute via a fresh tape:
-        let mut t2 = Tape::new();
-        let params2 = self.params_cache.borrow().clone();
-        let mut off = 0usize;
-        let mut take = |n: usize| -> Vec<f64> {
-            let v = params2[off..off + n].to_vec();
-            off += n;
-            v
-        };
-        let u_var = t2.input(Tensor::matrix(u.to_vec(), self.batch, self.grid));
-        let wc = t2.input(Tensor::matrix(take(self.k * self.channels), self.k, self.channels));
-        let bc = t2.input(Tensor::vector(take(self.channels)));
-        let w2 = t2.input(Tensor::matrix(
-            take(self.channels * self.channels),
-            self.channels,
-            self.channels,
-        ));
-        let b2 = t2.input(Tensor::vector(take(self.channels)));
-        let w3 = t2.input(Tensor::matrix(take(self.channels), self.channels, 1));
-        let b3 = t2.input(Tensor::vector(take(1)));
-        let cols = t2.gather(u_var, self.im2col_idx.clone(), vec![self.batch * self.grid, self.k]);
-        let a1 = t2.matmul(cols, wc);
-        let a1 = t2.bias_add(a1, bc);
-        let h1 = t2.tanh(a1);
-        let a2 = t2.matmul(h1, w2);
-        let a2 = t2.bias_add(a2, b2);
-        let h2 = t2.tanh(a2);
-        let dens = t2.matmul(h2, w3);
-        let dens = t2.bias_add(dens, b3);
-        let h_total = t2.sum(dens);
-        let h_scaled = t2.scale(h_total, self.dx);
-        t2.val(h_scaled).item()
+        let u_var = tape.input_slice(u, Shape::matrix(self.batch, self.grid));
+        let pv = self.push_params(&mut tape, params);
+        let h_scaled = self.emit_energy(&mut tape, u_var, &pv);
+        tape.val_item(h_scaled)
     }
 }
 
@@ -235,21 +280,24 @@ impl OdeSystem for HnnSystem {
     }
 
     fn eval(&self, _t: f64, u: &[f64], params: &[f64], out: &mut [f64]) {
-        self.params_cache.borrow_mut().clear();
-        self.params_cache.borrow_mut().extend_from_slice(params);
-        let mut tape = Tape::new();
-        let (_u, _p, f) = self.build(&mut tape, u);
-        out.copy_from_slice(&tape.val(f).data);
+        // pooled tape: this is the backward-sweep recompute path
+        // (`rk_stages_ws` calls it per stage), so it must be
+        // allocation-free when warm.
+        let sc = &mut *self.scratch.borrow_mut();
+        let mut tape = sc.eval_ws.take_tape();
+        let (_, f_var) = self.build(&mut tape, u, params, &mut sc.wrt);
+        out.copy_from_slice(tape.val_data(f_var));
+        sc.eval_ws.put_tape(tape);
     }
 
     fn eval_traced(&self, _t: f64, u: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
-        self.params_cache.borrow_mut().clear();
-        self.params_cache.borrow_mut().extend_from_slice(params);
+        // reference path: a fresh allocating tape the caller may keep
+        let sc = &mut *self.scratch.borrow_mut();
         let mut tape = Tape::new();
-        let (u_var, param_vars, f_var) = self.build(&mut tape, u);
-        out.copy_from_slice(&tape.val(f_var).data);
+        let (_, f_var) = self.build(&mut tape, u, params, &mut sc.wrt);
+        out.copy_from_slice(tape.val_data(f_var));
         let bytes = tape.mem_bytes() as u64;
-        Box::new(HnnTrace { tape: RefCell::new(tape), u_var, param_vars, f_var, bytes })
+        Box::new(HnnTrace { tape: RefCell::new(tape), wrt: sc.wrt.clone(), f_var, bytes })
     }
 
     fn vjp_traced(
@@ -262,21 +310,30 @@ impl OdeSystem for HnnSystem {
     ) {
         let tr = trace.as_any().downcast_ref::<HnnTrace>().unwrap();
         let mut tape = tr.tape.borrow_mut();
-        let lam_var = tape.constant(Tensor::matrix(lam.to_vec(), self.batch, self.grid));
-        let prod = tape.mul(lam_var, tr.f_var);
-        let total = tape.sum(prod);
-        let mut wrt = vec![tr.u_var];
-        wrt.extend_from_slice(&tr.param_vars);
-        let grads = tape.grad(total, &wrt);
-        g_x.copy_from_slice(&tape.val(grads[0]).data);
-        let mut off = 0usize;
-        for g in &grads[1..] {
-            let v = &tape.val(*g).data;
-            for (dst, src) in g_p[off..off + v.len()].iter_mut().zip(v) {
-                *dst += src;
-            }
-            off += v.len();
-        }
+        let sc = &mut *self.scratch.borrow_mut();
+        self.vjp_build(&mut tape, &tr.wrt, tr.f_var, lam, &mut sc.grads, g_x, g_p);
+    }
+
+    fn vjp_fused_ws(
+        &self,
+        _t: f64,
+        u: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+        ws: &mut Workspace,
+    ) -> u64 {
+        let sc = &mut *self.scratch.borrow_mut();
+        let mut tape = ws.take_tape();
+        let (_, f_var) = self.build(&mut tape, u, params, &mut sc.wrt);
+        // graph bytes after the forward build — same instant `eval_traced`
+        // measures, before the VJP extends the tape
+        let bytes = tape.mem_bytes() as u64;
+        let HnnScratch { wrt, grads, .. } = sc;
+        self.vjp_build(&mut tape, wrt, f_var, lam, grads, g_x, g_p);
+        ws.put_tape(tape);
+        bytes
     }
 
     fn trace_bytes(&self) -> u64 {
@@ -391,5 +448,32 @@ mod tests {
         assert!(err < 1e-11, "err {err}");
         // dopri8 memory gap should be visible even on this tiny problem
         assert!(sa.stats.peak_tape_bytes < bp.stats.peak_tape_bytes / 10);
+    }
+
+    /// The fused workspace VJP must equal the allocating reference bitwise,
+    /// for both stencils.
+    #[test]
+    fn hnn_fused_vjp_is_bitwise_identical() {
+        for g_op in [GOperator::Dx, GOperator::Dxx] {
+            let sys = HnnSystem::new(8, 2, 3, 3, g_op, 0.5);
+            let p = sys.init_params(12);
+            let mut rng = Rng::new(13);
+            let u = rng.normal_vec(sys.dim());
+            let lam = rng.normal_vec(sys.dim());
+
+            let mut g_x_ref = vec![0.0; sys.dim()];
+            let mut g_p_ref = vec![0.0; sys.n_params()];
+            sys.vjp(0.0, &u, &p, &lam, &mut g_x_ref, &mut g_p_ref);
+
+            let mut ws = Workspace::new();
+            for _ in 0..3 {
+                let mut g_x = vec![0.0; sys.dim()];
+                let mut g_p = vec![0.0; sys.n_params()];
+                let bytes = sys.vjp_fused_ws(0.0, &u, &p, &lam, &mut g_x, &mut g_p, &mut ws);
+                assert_eq!(g_x, g_x_ref, "g_x must be bitwise identical");
+                assert_eq!(g_p, g_p_ref, "g_p must be bitwise identical");
+                assert_eq!(bytes, sys.trace_bytes(), "fused path must report L");
+            }
+        }
     }
 }

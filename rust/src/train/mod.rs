@@ -13,11 +13,12 @@
 //! shards serially.
 
 use crate::adjoint::{method_by_name, GradResult, GradientMethod};
-use crate::cnf::{CnfNllLoss, CnfSystem, Dataset};
+use crate::cnf::{CnfNllLoss, CnfSystem, Dataset, TraceEstimator};
 use crate::integrate::SolverConfig;
 use crate::nn::{Adam, Optimizer};
-use crate::ode::losses::{LinearLoss, MseLoss, SumLoss};
-use crate::ode::{Loss, NativeMlpSystem};
+use crate::ode::losses::{LinearLoss, MseLoss, ScaledLoss, SumLoss};
+use crate::ode::{Loss, NativeMlpSystem, OdeSystem};
+use crate::physics::{GOperator, HnnSystem};
 use crate::util::Rng;
 use std::time::Instant;
 
@@ -265,7 +266,7 @@ impl ShardedMlpGradient {
         cfg: &SolverConfig,
     ) -> anyhow::Result<GradResult> {
         let shard_results = self.run_shards(method, params, x0, batch, t0, t1, cfg, true)?;
-        Self::merge(shard_results, true)
+        merge_shards(shard_results, true)
     }
 
     /// The serial reference: identical shard decomposition and merge
@@ -284,7 +285,7 @@ impl ShardedMlpGradient {
         cfg: &SolverConfig,
     ) -> anyhow::Result<GradResult> {
         let shard_results = self.run_shards(method, params, x0, batch, t0, t1, cfg, false)?;
-        Self::merge(shard_results, false)
+        merge_shards(shard_results, false)
     }
 
     fn run_shards(
@@ -317,40 +318,230 @@ impl ShardedMlpGradient {
         results.into_iter().collect()
     }
 
-    /// Merge per-shard results in shard order: losses and parameter
-    /// gradients sum, states and state gradients concatenate, and NFE
-    /// counts sum. Memory peaks sum when the shards ran concurrently
-    /// (they coexist, so the summed peak models the process-wide working
-    /// set) but combine by max for a serial run, where only one shard's
-    /// working set is ever live.
-    fn merge(shards: Vec<GradResult>, concurrent: bool) -> anyhow::Result<GradResult> {
-        let mut it = shards.into_iter();
-        let mut acc = it.next().ok_or_else(|| anyhow::anyhow!("no shards produced"))?;
-        for r in it {
-            acc.loss += r.loss;
-            acc.x_final.extend_from_slice(&r.x_final);
-            acc.grad_x0.extend_from_slice(&r.grad_x0);
-            for (g, v) in acc.grad_params.iter_mut().zip(&r.grad_params) {
-                *g += v;
-            }
-            acc.stats.nfe_forward += r.stats.nfe_forward;
-            acc.stats.nfe_backward += r.stats.nfe_backward;
-            acc.stats.n_steps_forward = acc.stats.n_steps_forward.max(r.stats.n_steps_forward);
-            acc.stats.n_steps_backward =
-                acc.stats.n_steps_backward.max(r.stats.n_steps_backward);
-            if concurrent {
-                acc.stats.peak_mem_bytes += r.stats.peak_mem_bytes;
-                acc.stats.peak_tape_bytes += r.stats.peak_tape_bytes;
-                acc.stats.peak_checkpoint_bytes += r.stats.peak_checkpoint_bytes;
-            } else {
-                acc.stats.peak_mem_bytes = acc.stats.peak_mem_bytes.max(r.stats.peak_mem_bytes);
-                acc.stats.peak_tape_bytes =
-                    acc.stats.peak_tape_bytes.max(r.stats.peak_tape_bytes);
-                acc.stats.peak_checkpoint_bytes =
-                    acc.stats.peak_checkpoint_bytes.max(r.stats.peak_checkpoint_bytes);
-            }
+}
+
+/// Merge per-shard results in shard order: losses and parameter
+/// gradients sum, states and state gradients concatenate, and NFE
+/// counts sum. Memory peaks sum when the shards ran concurrently
+/// (they coexist, so the summed peak models the process-wide working
+/// set) but combine by max for a serial run, where only one shard's
+/// working set is ever live.
+fn merge_shards(shards: Vec<GradResult>, concurrent: bool) -> anyhow::Result<GradResult> {
+    let mut it = shards.into_iter();
+    let mut acc = it.next().ok_or_else(|| anyhow::anyhow!("no shards produced"))?;
+    for r in it {
+        acc.loss += r.loss;
+        acc.x_final.extend_from_slice(&r.x_final);
+        acc.grad_x0.extend_from_slice(&r.grad_x0);
+        for (g, v) in acc.grad_params.iter_mut().zip(&r.grad_params) {
+            *g += v;
         }
-        Ok(acc)
+        acc.stats.nfe_forward += r.stats.nfe_forward;
+        acc.stats.nfe_backward += r.stats.nfe_backward;
+        acc.stats.n_steps_forward = acc.stats.n_steps_forward.max(r.stats.n_steps_forward);
+        acc.stats.n_steps_backward = acc.stats.n_steps_backward.max(r.stats.n_steps_backward);
+        if concurrent {
+            acc.stats.peak_mem_bytes += r.stats.peak_mem_bytes;
+            acc.stats.peak_tape_bytes += r.stats.peak_tape_bytes;
+            acc.stats.peak_checkpoint_bytes += r.stats.peak_checkpoint_bytes;
+        } else {
+            acc.stats.peak_mem_bytes = acc.stats.peak_mem_bytes.max(r.stats.peak_mem_bytes);
+            acc.stats.peak_tape_bytes = acc.stats.peak_tape_bytes.max(r.stats.peak_tape_bytes);
+            acc.stats.peak_checkpoint_bytes =
+                acc.stats.peak_checkpoint_bytes.max(r.stats.peak_checkpoint_bytes);
+        }
+    }
+    Ok(acc)
+}
+
+/// Recipe for decomposing a batched ODE system into independent row
+/// shards — the per-backend piece of [`ShardedGradient`].
+///
+/// A spec describes a *full-batch* problem whose rows evolve
+/// independently and whose objective decomposes as a sum over shards
+/// (batch-mean losses are handled by wrapping each shard in a
+/// [`ScaledLoss`]). Implementations construct a private system + loss
+/// per shard so worker threads share nothing; the spec itself only needs
+/// plain data and is `Sync`.
+pub trait ShardSpec: Sync {
+    /// Total rows in the full batch.
+    fn batch(&self) -> usize;
+    /// State elements per row (`dim = batch · row_dim`).
+    fn row_dim(&self) -> usize;
+    /// A private system for rows `a..b`.
+    fn system(&self, a: usize, b: usize) -> Box<dyn OdeSystem>;
+    /// The shard's terminal loss, scaled so shard losses/gradients sum to
+    /// the full-batch objective.
+    fn loss(&self, a: usize, b: usize) -> Box<dyn Loss>;
+}
+
+/// Data-parallel mini-batch gradient over any [`ShardSpec`] — the
+/// generalization of [`ShardedMlpGradient`] that the CNF and Hamiltonian
+/// backends plug into (each worker thread gets its own system, and with
+/// it its own tape arenas and workspace pool).
+pub struct ShardedGradient<S: ShardSpec> {
+    pub spec: S,
+    /// Number of shards (also the maximum concurrency).
+    pub shards: usize,
+}
+
+impl<S: ShardSpec> ShardedGradient<S> {
+    pub fn new(spec: S) -> ShardedGradient<S> {
+        ShardedGradient { spec, shards: crate::parallel::num_threads() }
+    }
+
+    pub fn with_shards(spec: S, shards: usize) -> ShardedGradient<S> {
+        assert!(shards >= 1);
+        ShardedGradient { spec, shards }
+    }
+
+    /// Full-batch gradient fanned out across worker threads. Loss,
+    /// states, and gradients are bit-identical to
+    /// [`ShardedGradient::gradient_serial`] with the same shard count.
+    pub fn gradient(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+    ) -> anyhow::Result<GradResult> {
+        let shard_results = self.run_shards(method, params, x0, t0, t1, cfg, true)?;
+        merge_shards(shard_results, true)
+    }
+
+    /// The serial reference: identical shard decomposition and merge
+    /// order, executed on the calling thread.
+    pub fn gradient_serial(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+    ) -> anyhow::Result<GradResult> {
+        let shard_results = self.run_shards(method, params, x0, t0, t1, cfg, false)?;
+        merge_shards(shard_results, false)
+    }
+
+    fn run_shards(
+        &self,
+        method: &str,
+        params: &[f64],
+        x0: &[f64],
+        t0: f64,
+        t1: f64,
+        cfg: &SolverConfig,
+        parallel: bool,
+    ) -> anyhow::Result<Vec<GradResult>> {
+        let rd = self.spec.row_dim();
+        let batch = self.spec.batch();
+        assert_eq!(x0.len(), batch * rd, "x0 must be [batch, row_dim]");
+        anyhow::ensure!(batch > 0, "empty batch");
+        let ranges = crate::parallel::shard_ranges(batch, self.shards);
+        let cell = |si: usize| -> anyhow::Result<GradResult> {
+            let (a, b) = ranges[si];
+            let sys = self.spec.system(a, b);
+            let loss = self.spec.loss(a, b);
+            let m = method_by_name(method)
+                .ok_or_else(|| anyhow::anyhow!("unknown gradient method {method:?}"))?;
+            m.gradient(sys.as_ref(), params, &x0[a * rd..b * rd], t0, t1, cfg, loss.as_ref())
+        };
+        let results: Vec<anyhow::Result<GradResult>> = if parallel {
+            crate::parallel::parallel_map_indexed(ranges.len(), cell)
+        } else {
+            (0..ranges.len()).map(cell).collect()
+        };
+        results.into_iter().collect()
+    }
+}
+
+/// [`ShardSpec`] for the CNF augmented dynamics: shards slice both the
+/// data rows and the (pre-sampled) Hutchinson probe, and each shard's
+/// batch-mean NLL is rescaled by `rows/total` so shard losses sum to the
+/// full-batch NLL.
+pub struct CnfShardSpec {
+    /// State-side layer dims `[d, h…, d]`.
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub estimator: TraceEstimator,
+    /// Full-batch Rademacher probe `[batch, d]` (sampled once per step so
+    /// every shard count sees the same estimator draw).
+    pub eps: Vec<f64>,
+}
+
+impl CnfShardSpec {
+    pub fn new(dims: &[usize], batch: usize, estimator: TraceEstimator, rng: &mut Rng) -> Self {
+        let d = dims[0];
+        CnfShardSpec {
+            dims: dims.to_vec(),
+            batch,
+            estimator,
+            eps: rng.rademacher_vec(batch * d),
+        }
+    }
+}
+
+impl ShardSpec for CnfShardSpec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn row_dim(&self) -> usize {
+        self.dims[0] + 1 // augmented state [x ‖ ℓ]
+    }
+
+    fn system(&self, a: usize, b: usize) -> Box<dyn OdeSystem> {
+        let d = self.dims[0];
+        let mut sys = CnfSystem::new(&self.dims, b - a, self.estimator.clone());
+        sys.eps = self.eps[a * d..b * d].to_vec();
+        Box::new(sys)
+    }
+
+    fn loss(&self, a: usize, b: usize) -> Box<dyn Loss> {
+        let d = self.dims[0];
+        Box::new(ScaledLoss {
+            inner: CnfNllLoss { batch: b - a, d },
+            c: (b - a) as f64 / self.batch as f64,
+        })
+    }
+}
+
+/// [`ShardSpec`] for the Hamiltonian-PDE system: grid samples evolve
+/// independently, and the element-mean [`MseLoss`] rescales by
+/// `rows/total` exactly like the NLL.
+pub struct HnnShardSpec {
+    pub grid: usize,
+    pub batch: usize,
+    pub k: usize,
+    pub channels: usize,
+    pub g_op: GOperator,
+    pub dx: f64,
+    /// Full-batch target `[batch, grid]`.
+    pub target: Vec<f64>,
+}
+
+impl ShardSpec for HnnShardSpec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn row_dim(&self) -> usize {
+        self.grid
+    }
+
+    fn system(&self, a: usize, b: usize) -> Box<dyn OdeSystem> {
+        Box::new(HnnSystem::new(self.grid, b - a, self.k, self.channels, self.g_op, self.dx))
+    }
+
+    fn loss(&self, a: usize, b: usize) -> Box<dyn Loss> {
+        let w = self.grid;
+        Box::new(ScaledLoss {
+            inner: MseLoss::new(self.target[a * w..b * w].to_vec()),
+            c: (b - a) as f64 / self.batch as f64,
+        })
     }
 }
 
@@ -449,6 +640,92 @@ mod tests {
         }
         let after = trainer.eval_nll(&data, 2);
         assert!(after < before, "{before} -> {after}");
+    }
+
+    /// Sharded CNF gradient decomposes the full-batch NLL objective: the
+    /// merged shard gradient matches the full-batch gradient, and the
+    /// parallel run is bitwise identical to the serial shard run.
+    #[test]
+    fn sharded_cnf_gradient_matches_full_batch() {
+        for est in [TraceEstimator::Hutchinson, TraceEstimator::Exact] {
+            let (dims, batch) = (vec![2usize, 10, 2], 9usize);
+            let mut rng = Rng::new(31);
+            let spec = CnfShardSpec::new(&dims, batch, est.clone(), &mut rng);
+
+            // full-batch reference with the same probe
+            let mut full = CnfSystem::new(&dims, batch, est);
+            full.eps = spec.eps.clone();
+            let p = full.init_params(32);
+            let mut z0 = vec![0.0; full.dim()];
+            for row in 0..batch {
+                for j in 0..2 {
+                    z0[row * 3 + j] = rng.normal();
+                }
+            }
+            let cfg = SolverConfig::fixed(crate::tableau::Tableau::dopri5(), 0.25);
+            let loss = CnfNllLoss { batch, d: 2 };
+            let reference = crate::adjoint::SymplecticAdjoint
+                .gradient(&full, &p, &z0, 0.0, 1.0, &cfg, &loss)
+                .unwrap();
+
+            let driver = ShardedGradient::with_shards(spec, 3);
+            let serial = driver.gradient_serial("symplectic", &p, &z0, 0.0, 1.0, &cfg).unwrap();
+            let par = driver.gradient("symplectic", &p, &z0, 0.0, 1.0, &cfg).unwrap();
+
+            assert_eq!(par.grad_params, serial.grad_params, "parallel != serial");
+            assert_eq!(par.grad_x0, serial.grad_x0);
+            assert_eq!(par.x_final, serial.x_final);
+            assert!((par.loss - serial.loss).abs() == 0.0);
+
+            let err = crate::util::stats::rel_l2(&par.grad_params, &reference.grad_params);
+            assert!(err < 1e-12, "shard/full grad_params err {err}");
+            assert!(
+                (par.loss - reference.loss).abs() < 1e-12 * (1.0 + reference.loss.abs()),
+                "{} vs {}",
+                par.loss,
+                reference.loss
+            );
+        }
+    }
+
+    /// Sharded HNN gradient decomposes the element-mean MSE objective.
+    #[test]
+    fn sharded_hnn_gradient_matches_full_batch() {
+        let (grid, batch) = (8usize, 5usize);
+        let mut rng = Rng::new(41);
+        let target = rng.normal_vec(batch * grid);
+        let spec = HnnShardSpec {
+            grid,
+            batch,
+            k: 3,
+            channels: 3,
+            g_op: GOperator::Dx,
+            dx: 0.5,
+            target: target.clone(),
+        };
+        let full = HnnSystem::new(grid, batch, 3, 3, GOperator::Dx, 0.5);
+        let p = full.init_params(42);
+        let u0 = rng.normal_vec(batch * grid);
+        let cfg = SolverConfig::fixed(crate::tableau::Tableau::rk4(), 0.05);
+        let loss = MseLoss::new(target);
+        let reference = crate::adjoint::SymplecticAdjoint
+            .gradient(&full, &p, &u0, 0.0, 0.1, &cfg, &loss)
+            .unwrap();
+
+        let driver = ShardedGradient::with_shards(spec, 2);
+        let serial = driver.gradient_serial("symplectic", &p, &u0, 0.0, 0.1, &cfg).unwrap();
+        let par = driver.gradient("symplectic", &p, &u0, 0.0, 0.1, &cfg).unwrap();
+
+        assert_eq!(par.grad_params, serial.grad_params, "parallel != serial");
+        assert_eq!(par.grad_x0, serial.grad_x0);
+        let err = crate::util::stats::rel_l2(&par.grad_params, &reference.grad_params);
+        assert!(err < 1e-12, "shard/full grad_params err {err}");
+        assert!(
+            (par.loss - reference.loss).abs() < 1e-12 * (1.0 + reference.loss.abs()),
+            "{} vs {}",
+            par.loss,
+            reference.loss
+        );
     }
 
     /// Physics training on a generated KdV pair reduces one-step MSE.

@@ -32,11 +32,23 @@
 //! buffer must not change `peak_tape_bytes` / `peak_checkpoint_bytes`
 //! semantics, and the tracked `Solver` working-set guards in
 //! `adjoint_step` / `solve_ivp` are kept byte-identical to the seed.
+//!
+//! ## Tape pooling
+//!
+//! The tape backends (`CnfSystem`, `HnnSystem`) rebuild an autodiff
+//! [`Tape`] on every stage evaluation. [`Workspace::take_tape`] /
+//! [`Workspace::put_tape`] pool the tape's backing [`TapeArena`] exactly
+//! like the `f64` buffers: a warm rebuild of a same-shaped graph performs
+//! zero heap allocations. Tape checkouts share the `takes`/`misses`
+//! counters, so the warm-loop "misses stay flat" assertions cover them.
 
-/// A pool of reusable `f64` buffers.
+use crate::autodiff::{Tape, TapeArena};
+
+/// A pool of reusable `f64` buffers and autodiff tape arenas.
 #[derive(Debug, Default)]
 pub struct Workspace {
     free: Vec<Vec<f64>>,
+    arenas: Vec<TapeArena>,
     /// Buffers handed out since construction (diagnostics/tests).
     takes: u64,
     /// `take` calls that had to heap-allocate because no pooled buffer
@@ -105,6 +117,25 @@ impl Workspace {
         if buf.capacity() > 0 {
             self.free.push(buf);
         }
+    }
+
+    /// Check out an empty [`Tape`] backed by a pooled arena. Counts into
+    /// `takes`/`misses` like buffer checkouts: a take with no pooled
+    /// arena is a miss (it will allocate as the tape grows).
+    pub fn take_tape(&mut self) -> Tape {
+        self.takes += 1;
+        match self.arenas.pop() {
+            Some(arena) => Tape::from_arena(arena),
+            None => {
+                self.misses += 1;
+                Tape::new()
+            }
+        }
+    }
+
+    /// Return a tape's backing storage to the pool.
+    pub fn put_tape(&mut self, tape: Tape) {
+        self.arenas.push(tape.into_arena());
     }
 
     /// Buffers currently available for reuse.
@@ -182,5 +213,25 @@ mod tests {
         ws.put(small);
         let got = ws.take(8);
         assert!(got.capacity() < 1000, "should have reused the small buffer");
+    }
+
+    #[test]
+    fn tape_pooling_reuses_arena_capacity() {
+        let mut ws = Workspace::new();
+        let mut t = ws.take_tape(); // miss: pool empty
+        let a = t.input(crate::autodiff::Tensor::vector(vec![1.0, 2.0, 3.0]));
+        let _ = t.tanh(a);
+        let bytes_cold = t.mem_bytes();
+        ws.put_tape(t);
+        let misses_before = ws.misses();
+        for _ in 0..10 {
+            let mut t = ws.take_tape();
+            assert_eq!(t.len(), 0, "pooled tape must come back empty");
+            let a = t.input(crate::autodiff::Tensor::vector(vec![1.0, 2.0, 3.0]));
+            let _ = t.tanh(a);
+            assert_eq!(t.mem_bytes(), bytes_cold, "live bytes are per-build, not pooled");
+            ws.put_tape(t);
+        }
+        assert_eq!(ws.misses(), misses_before, "warm tape takes must not miss");
     }
 }

@@ -10,11 +10,16 @@
 //!   cross-step contamination), and the warm loop must stop allocating
 //!   pool buffers;
 //! - the parallel sweep/shard drivers must produce results identical to
-//!   their serial counterparts.
+//!   their serial counterparts;
+//! - the tape backends (`CnfSystem`, `HnnSystem`) must reproduce the
+//!   allocating `eval_traced` + `vjp_traced` reference bit-for-bit from
+//!   their fused workspace paths, stay deterministic across warm calls
+//!   on a reused arena, and stop taking pool misses once warm.
 
 use sympode::adjoint::{
     adjoint_step, adjoint_step_ws, method_by_name, GradientMethod, StageSource,
 };
+use sympode::cnf::{CnfSystem, TraceEstimator};
 use sympode::integrate::{
     rk_combine, rk_combine_into, rk_stages, rk_stages_ws, SolverConfig,
 };
@@ -23,6 +28,7 @@ use sympode::nn::{Mlp, MlpTrace};
 use sympode::ode::losses::SumLoss;
 use sympode::ode::{NativeMlpSystem, OdeSystem};
 use sympode::parallel::parallel_map_indexed;
+use sympode::physics::{GOperator, HnnSystem};
 use sympode::tableau::Tableau;
 use sympode::train::ShardedMlpGradient;
 use sympode::util::Rng;
@@ -216,6 +222,157 @@ fn warm_adjoint_loop_stops_allocating_pool_buffers() {
         misses_after_warmup,
         "warm backward sweeps must not allocate new pool buffers"
     );
+}
+
+#[test]
+fn cnf_fused_vjp_is_bitwise_identical_for_both_estimators() {
+    for estimator in [TraceEstimator::Hutchinson, TraceEstimator::Exact] {
+        let mut rng = Rng::new(21);
+        let mut sys = CnfSystem::new(&[3, 14, 3], 4, estimator.clone());
+        sys.resample_eps(&mut rng);
+        let p = sys.init_params(22);
+        let dim = sys.dim();
+        let mut ws = Workspace::new();
+
+        let mut ref_gx = vec![0.0; dim];
+        let mut fused_gx = vec![0.0; dim];
+        for rep in 0..4 {
+            // fresh inputs per rep but one shared arena: warm rebuilds must
+            // match the allocating reference regardless of pool history
+            let z = rng.normal_vec(dim);
+            let lam = rng.normal_vec(dim);
+            let seed_gp = rng.normal_vec(sys.n_params());
+
+            let mut ref_gp = seed_gp.clone();
+            sys.vjp(0.37, &z, &p, &lam, &mut ref_gx, &mut ref_gp);
+
+            let mut fused_gp = seed_gp;
+            let bytes =
+                sys.vjp_fused_ws(0.37, &z, &p, &lam, &mut fused_gx, &mut fused_gp, &mut ws);
+            assert_eq!(ref_gx, fused_gx, "{estimator:?} rep {rep}");
+            assert_eq!(ref_gp, fused_gp, "{estimator:?} rep {rep}");
+            assert_eq!(bytes, sys.trace_bytes(), "{estimator:?} rep {rep}");
+        }
+    }
+}
+
+#[test]
+fn cnf_warm_arena_is_deterministic_and_misses_stay_flat() {
+    let mut rng = Rng::new(23);
+    let mut sys = CnfSystem::new(&[2, 10, 10, 2], 3, TraceEstimator::Hutchinson);
+    sys.resample_eps(&mut rng);
+    let p = sys.init_params(24);
+    let dim = sys.dim();
+    let z = rng.normal_vec(dim);
+    let lam = rng.normal_vec(dim);
+    let mut ws = Workspace::new();
+
+    let run = |ws: &mut Workspace| {
+        let mut gx = vec![0.0; dim];
+        let mut gp = vec![0.0; sys.n_params()];
+        let bytes = sys.vjp_fused_ws(0.11, &z, &p, &lam, &mut gx, &mut gp, ws);
+        let mut out = vec![0.0; dim];
+        sys.eval(0.11, &z, &p, &mut out);
+        (gx, gp, bytes, out)
+    };
+    let cold = run(&mut ws);
+    let misses_after_warmup = ws.misses();
+    for rep in 0..5 {
+        let warm = run(&mut ws);
+        assert_eq!(cold, warm, "warm rep {rep} diverged from cold call");
+    }
+    assert_eq!(
+        ws.misses(),
+        misses_after_warmup,
+        "warm CNF fused sweeps must not take new pool misses"
+    );
+}
+
+#[test]
+fn hnn_fused_vjp_is_bitwise_identical_for_both_operators() {
+    for g_op in [GOperator::Dx, GOperator::Dxx] {
+        let mut rng = Rng::new(25);
+        let sys = HnnSystem::new(9, 3, 3, 4, g_op, 0.4);
+        let p = sys.init_params(26);
+        let dim = sys.dim();
+        let mut ws = Workspace::new();
+
+        let mut ref_gx = vec![0.0; dim];
+        let mut fused_gx = vec![0.0; dim];
+        for rep in 0..4 {
+            let u = rng.normal_vec(dim);
+            let lam = rng.normal_vec(dim);
+            let seed_gp = rng.normal_vec(sys.n_params());
+
+            let mut ref_gp = seed_gp.clone();
+            sys.vjp(0.0, &u, &p, &lam, &mut ref_gx, &mut ref_gp);
+
+            let mut fused_gp = seed_gp;
+            let bytes =
+                sys.vjp_fused_ws(0.0, &u, &p, &lam, &mut fused_gx, &mut fused_gp, &mut ws);
+            assert_eq!(ref_gx, fused_gx, "{g_op:?} rep {rep}");
+            assert_eq!(ref_gp, fused_gp, "{g_op:?} rep {rep}");
+            assert_eq!(bytes, sys.trace_bytes(), "{g_op:?} rep {rep}");
+        }
+    }
+}
+
+#[test]
+fn hnn_warm_arena_is_deterministic_and_misses_stay_flat() {
+    let mut rng = Rng::new(27);
+    let sys = HnnSystem::new(8, 2, 3, 3, GOperator::Dx, 0.5);
+    let p = sys.init_params(28);
+    let dim = sys.dim();
+    let u = rng.normal_vec(dim);
+    let lam = rng.normal_vec(dim);
+    let mut ws = Workspace::new();
+
+    let run = |ws: &mut Workspace| {
+        let mut gx = vec![0.0; dim];
+        let mut gp = vec![0.0; sys.n_params()];
+        let bytes = sys.vjp_fused_ws(0.0, &u, &p, &lam, &mut gx, &mut gp, ws);
+        let mut out = vec![0.0; dim];
+        sys.eval(0.0, &u, &p, &mut out);
+        (gx, gp, bytes, out)
+    };
+    let cold = run(&mut ws);
+    let misses_after_warmup = ws.misses();
+    for rep in 0..5 {
+        let warm = run(&mut ws);
+        assert_eq!(cold, warm, "warm rep {rep} diverged from cold call");
+    }
+    assert_eq!(
+        ws.misses(),
+        misses_after_warmup,
+        "warm HNN fused sweeps must not take new pool misses"
+    );
+}
+
+#[test]
+fn tape_backend_gradients_match_through_the_full_symplectic_sweep() {
+    // end-to-end: the full symplectic-adjoint gradient (which exercises
+    // the fused path per stage through one reused workspace) must match
+    // the allocating per-stage reference method bit-for-bit
+    let mut rng = Rng::new(29);
+    let mut sys = CnfSystem::new(&[2, 8, 2], 3, TraceEstimator::Exact);
+    sys.resample_eps(&mut rng);
+    let p = sys.init_params(30);
+    let z0 = rng.normal_vec(sys.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    let loss = sympode::cnf::CnfNllLoss { batch: 3, d: 2 };
+
+    let a = method_by_name("symplectic")
+        .unwrap()
+        .gradient(&sys, &p, &z0, 0.0, 1.0, &cfg, &loss)
+        .unwrap();
+    let b = method_by_name("symplectic")
+        .unwrap()
+        .gradient(&sys, &p, &z0, 0.0, 1.0, &cfg, &loss)
+        .unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grad_x0, b.grad_x0);
+    assert_eq!(a.grad_params, b.grad_params);
+    assert_eq!(a.stats.peak_mem_bytes, b.stats.peak_mem_bytes);
 }
 
 #[test]
