@@ -12,8 +12,8 @@
 //!   construction.
 //!
 //! Timed results are also written to `BENCH_gradient_methods.json`
-//! (`{"results": [{name, median_ns, mean_ns, std_ns, samples}, …]}`) so
-//! CI can archive them. Pass `--quick` (or set `BENCH_QUICK=1`) to run
+//! (`{"results": [{name, median_ns, mean_ns, std_ns, samples}, …],
+//! "simd_backend": "…"}`) so CI can archive them. Pass `--quick` (or set `BENCH_QUICK=1`) to run
 //! with the reduced `Bench::quick()` budget — that mode doubles as the
 //! CI smoke test: every audit assertion still runs at full strength.
 
@@ -254,6 +254,9 @@ fn main() {
     if quick {
         println!("# quick mode: reduced sample budget (audit assertions unchanged)");
     }
+    // results are backend-invariant bitwise; only the timings change
+    let backend = sympode::linalg::simd_backend();
+    println!("# dispatched linalg backend: {}", backend.name());
     let mut results: Vec<BenchResult> = Vec::new();
 
     let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
@@ -306,7 +309,8 @@ fn main() {
     tape_backend_audit();
     sharded_parallel(&b, &mut results);
 
-    let json = results_to_json(&results);
+    let mut json = results_to_json(&results);
+    json.set("simd_backend", backend.name());
     std::fs::write("BENCH_gradient_methods.json", format!("{json}\n")).unwrap();
     println!("\nwrote BENCH_gradient_methods.json ({} results)", results.len());
 }

@@ -2,37 +2,80 @@
 //! each in its original allocating form *and* its workspace form, so the
 //! buffer-reuse win is measured head-to-head — and the autodiff tape vs
 //! the hand-rolled backward (the §Perf comparison).
+//!
+//! Every GEMM and MLP benchmark runs twice: once through the dispatched
+//! kernels (AVX2 where the CPU supports it — see the `rust/src/linalg.rs`
+//! module docs) and once with the dispatch forced to the scalar
+//! reference tier, so the SIMD speedup is measured in the same process
+//! on the same buffers. The two tiers are bitwise identical, so only
+//! throughput changes.
+//!
+//! Results (and the per-kernel SIMD speedups) are written to
+//! `BENCH_nn.json` (`{"results": […], "simd_backend": "…",
+//! "speedups": […]}`) so CI can archive them. Pass `--quick` (or set
+//! `BENCH_QUICK=1`) for the reduced CI smoke budget.
 
 use sympode::autodiff::{Tape, Tensor};
-use sympode::benchkit::Bench;
-use sympode::linalg;
+use sympode::benchkit::{results_to_json, Bench, BenchResult};
+use sympode::linalg::{self, set_simd_backend, simd_backend, SimdBackend};
 use sympode::nn::{Mlp, MlpTrace};
+use sympode::util::json::Json;
 use sympode::util::Rng;
 use sympode::workspace::Workspace;
 
 fn main() {
-    let b = Bench::default();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let b = if quick { Bench::quick() } else { Bench::default() };
+    if quick {
+        println!("# quick mode: reduced sample budget");
+    }
+    let backend = simd_backend();
+    println!("# dispatched linalg backend: {}", backend.name());
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
     let mut rng = Rng::new(3);
 
-    println!("# GEMM kernels");
+    println!("\n# GEMM kernels: dispatched ({}) vs forced-scalar reference", backend.name());
     for n in [64usize, 128, 256] {
         let a = rng.normal_vec(n * n);
         let bb = rng.normal_vec(n * n);
         let mut c = vec![0.0; n * n];
         let gflops = 2.0 * (n as f64).powi(3) / 1e9;
-        let res = b.run(&format!("gemm_nn/{n}x{n}x{n}"), || {
-            linalg::gemm_nn(n, n, n, &a, &bb, &mut c);
-            std::hint::black_box(&c);
-        });
-        println!("    -> {:.2} GFLOP/s", gflops / (res.median_ns() / 1e9));
-        b.run(&format!("gemm_tn/{n}"), || {
-            linalg::gemm_tn(n, n, n, &a, &bb, &mut c);
-            std::hint::black_box(&c);
-        });
-        b.run(&format!("gemm_nt/{n}"), || {
-            linalg::gemm_nt(n, n, n, &a, &bb, &mut c);
-            std::hint::black_box(&c);
-        });
+
+        type Kernel = fn(usize, usize, usize, &[f64], &[f64], &mut [f64]);
+        let kernels: [(&str, Kernel); 3] = [
+            ("gemm_nn", linalg::gemm_nn),
+            ("gemm_tn", linalg::gemm_tn),
+            ("gemm_nt", linalg::gemm_nt),
+        ];
+        for (name, kernel) in kernels {
+            let disp = b.run(&format!("{name}/{n} ({})", backend.name()), || {
+                kernel(n, n, n, &a, &bb, &mut c);
+                std::hint::black_box(&c);
+            });
+            let prev = set_simd_backend(SimdBackend::Scalar);
+            let scal = b.run(&format!("{name}/{n} (scalar)"), || {
+                kernel(n, n, n, &a, &bb, &mut c);
+                std::hint::black_box(&c);
+            });
+            set_simd_backend(prev);
+            let speedup = scal.median_ns() / disp.median_ns();
+            println!(
+                "    -> {:.2} GFLOP/s dispatched, {:.2} GFLOP/s scalar, speedup {speedup:.2}x",
+                gflops / (disp.median_ns() / 1e9),
+                gflops / (scal.median_ns() / 1e9),
+            );
+            let mut entry = Json::obj();
+            entry.set("kernel", name)
+                .set("n", n)
+                .set("dispatched_median_ns", disp.median_ns())
+                .set("scalar_median_ns", scal.median_ns())
+                .set("speedup", speedup);
+            speedups.push(entry);
+            results.push(disp);
+            results.push(scal);
+        }
     }
 
     println!("\n# GEMM tn: allocate-and-add vs accumulate-in-place (the dW kernel)");
@@ -41,56 +84,70 @@ fn main() {
         let a = rng.normal_vec(n * n);
         let g = rng.normal_vec(n * n);
         let mut acc = vec![0.0; n * n];
-        b.run("gemm_tn/alloc+add", || {
+        results.push(b.run("gemm_tn/alloc+add", || {
             let mut dw = vec![0.0; n * n];
             linalg::gemm_tn(n, n, n, &a, &g, &mut dw);
             for (c, d) in acc.iter_mut().zip(&dw) {
                 *c += d;
             }
             std::hint::black_box(&acc);
-        });
-        b.run("gemm_tn_acc/in-place", || {
+        }));
+        results.push(b.run("gemm_tn_acc/in-place", || {
             linalg::gemm_tn_acc(n, n, n, &a, &g, &mut acc);
             std::hint::black_box(&acc);
-        });
+        }));
     }
 
     println!("\n# MLP forward / traced / backward (batch 32, 64-64 hidden)");
-    println!("#   seed (allocating) path vs workspace path, same math");
+    println!("#   seed (allocating) path vs workspace path, same math;");
+    println!("#   workspace paths additionally under forced-scalar dispatch");
     let m = Mlp::new(&[9, 64, 64, 8]);
     let p = m.init_params(&mut rng);
     let x = rng.normal_vec(32 * 9);
     let lam = rng.normal_vec(32 * 8);
     let mut ws = Workspace::new();
     let mut out = vec![0.0; 32 * 8];
-    b.run("mlp/forward (alloc)", || {
+    results.push(b.run("mlp/forward (alloc)", || {
         std::hint::black_box(m.forward(&x, 32, &p));
-    });
-    b.run("mlp/forward_ws", || {
+    }));
+    results.push(b.run(&format!("mlp/forward_ws ({})", backend.name()), || {
         m.forward_ws(&x, 32, &p, &mut out, &mut ws);
         std::hint::black_box(&out);
-    });
-    b.run("mlp/forward_traced (alloc)", || {
+    }));
+    results.push(b.run("mlp/forward_traced (alloc)", || {
         std::hint::black_box(m.forward_traced(&x, 32, &p));
-    });
+    }));
     let mut tr_ws = MlpTrace::empty();
-    b.run("mlp/forward_traced_ws", || {
+    results.push(b.run("mlp/forward_traced_ws", || {
         m.forward_traced_ws(&x, 32, &p, &mut out, &mut tr_ws, &mut ws);
         std::hint::black_box(&out);
-    });
+    }));
     let (_, tr) = m.forward_traced(&x, 32, &p);
     let mut gx = vec![0.0; 32 * 9];
     let mut gp = vec![0.0; m.param_len()];
-    b.run("mlp/backward (alloc)", || {
+    results.push(b.run("mlp/backward (alloc)", || {
         gp.fill(0.0);
         m.backward(&tr, &p, &lam, &mut gx, &mut gp);
         std::hint::black_box(&gp);
-    });
-    b.run("mlp/backward_ws", || {
+    }));
+    results.push(b.run(&format!("mlp/backward_ws ({})", backend.name()), || {
         gp.fill(0.0);
         m.backward_ws(&tr, &p, &lam, &mut gx, &mut gp, &mut ws);
         std::hint::black_box(&gp);
-    });
+    }));
+    {
+        let prev = set_simd_backend(SimdBackend::Scalar);
+        results.push(b.run("mlp/forward_ws (scalar)", || {
+            m.forward_ws(&x, 32, &p, &mut out, &mut ws);
+            std::hint::black_box(&out);
+        }));
+        results.push(b.run("mlp/backward_ws (scalar)", || {
+            gp.fill(0.0);
+            m.backward_ws(&tr, &p, &lam, &mut gx, &mut gp, &mut ws);
+            std::hint::black_box(&gp);
+        }));
+        set_simd_backend(prev);
+    }
     println!(
         "#   workspace steady state: {} buffer allocations over {} takes",
         ws.misses(),
@@ -98,7 +155,7 @@ fn main() {
     );
 
     println!("\n# autodiff tape vs hand-rolled (same network)");
-    b.run("tape/forward+grad", || {
+    results.push(b.run("tape/forward+grad", || {
         let mut t = Tape::new();
         let xv = t.input(Tensor::matrix(x.clone(), 32, 9));
         let mut h = xv;
@@ -115,5 +172,11 @@ fn main() {
         }
         let s = t.sum(h);
         std::hint::black_box(t.grad(s, &[xv]));
-    });
+    }));
+
+    let mut json = results_to_json(&results);
+    json.set("simd_backend", backend.name());
+    json.set("speedups", Json::Arr(speedups));
+    std::fs::write("BENCH_nn.json", format!("{json}\n")).unwrap();
+    println!("\nwrote BENCH_nn.json ({} results)", results.len());
 }

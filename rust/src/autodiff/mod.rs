@@ -35,6 +35,13 @@
 //! (`[usize; 2]` + rank) rather than as `Vec<usize>`; the only per-op heap
 //! structures are the `Rc<Vec<usize>>` index maps of `Gather`/`ScatterAdd`,
 //! which callers on the hot path construct once and clone by refcount.
+//!
+//! `Matmul` (forward and its transpose-product backward ops) executes
+//! through the dispatched kernels in [`crate::linalg`], so tape-backed
+//! backends (CNF, HNN) inherit the AVX2 microkernels automatically. The
+//! kernel tiers are bitwise identical (see the linalg module docs), so
+//! tape results — and therefore every gradient method built on them —
+//! are dispatch-invariant down to the bit.
 
 pub mod tensor;
 

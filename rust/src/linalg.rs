@@ -1,23 +1,448 @@
-//! Dense f64 linear algebra kernels.
+//! Dense f64 linear algebra kernels with a runtime-dispatched SIMD layer.
 //!
 //! Everything the neural-network and integrator hot paths need: `axpy`,
 //! `dot`, and the three GEMM variants that backpropagation requires
 //! (`C = A·B`, `C = Aᵀ·B`, `C = A·Bᵀ`). Layout is always row-major and
-//! contiguous. The GEMM kernels use a blocked ikj loop order so the inner
-//! loop is a unit-stride fused multiply-add over the output row — this is
-//! the crate's single hottest code path (profiled in EXPERIMENTS.md §Perf).
+//! contiguous. This is the crate's single hottest code path (profiled in
+//! EXPERIMENTS.md §Perf): every `Mlp` forward/backward, every tape
+//! `matmul` (and its transpose-products in the backward sweep), and the
+//! CNF/HNN fused VJPs bottom out here.
+//!
+//! ## Kernel tiers
+//!
+//! Each hot kernel exists in up to three tiers:
+//!
+//! - [`scalar`] — the blocked scalar kernels, kept verbatim as the
+//!   **reference implementation**. The GEMM kernels use a blocked ikj
+//!   loop order so the inner loop is a unit-stride multiply-add over the
+//!   output row.
+//! - `avx2` (private, `x86_64` only) — hand-written AVX2 microkernels
+//!   (`core::arch::x86_64`, 4 × f64 per vector) for the same kernels.
+//! - the public functions (`gemm_nn`, `gemm_nn_acc`, `gemm_tn`,
+//!   `gemm_tn_acc`, `gemm_nt`, `dot`, `axpy`) — thin wrappers that
+//!   dispatch to one tier via [`simd_backend`].
+//!
+//! ## The bit-exactness contract
+//!
+//! The symplectic adjoint method's value proposition is an *exact*
+//! gradient (up to f64 rounding), so the SIMD kernels are required to be
+//! **bitwise identical** to the scalar reference — not merely ULP-close.
+//! That is achieved by construction, not by tolerance:
+//!
+//! - The GEMM kernels vectorise along the `n` (output-column) dimension,
+//!   broadcasting `a[i,k]`: each SIMD lane owns one output element and
+//!   performs exactly the scalar sequence `c[i,j] += a[i,p] * b[p,j]` in
+//!   exactly the same ascending `p` order as the reference. Lanes never
+//!   exchange partial sums.
+//! - `dot` (and therefore `gemm_nt`, which is a dot per output element)
+//!   reproduces the scalar reference's four-accumulator reduction: vector
+//!   lane `l` accumulates exactly the terms scalar accumulator `acc4[l]`
+//!   does, the lanes are combined as `(l0 + l1) + (l2 + l3)`, and the
+//!   remainder tail is added sequentially — the identical op sequence.
+//! - **No FMA contraction**: the SIMD kernels use separate
+//!   `_mm256_mul_pd` + `_mm256_add_pd`, matching the scalar reference's
+//!   separately-rounded `*` and `+=`. (Switching both tiers to fused
+//!   `mul_add` would be a coordinated change; mixing them would break
+//!   bitwise equality.)
+//! - The scalar GEMM kernels skip `a[i,p] == 0.0` rows (a sparsity
+//!   shortcut); the SIMD kernels perform the identical skip, so even
+//!   signed-zero propagation agrees.
+//!
+//! `rust/tests/linalg_suite.rs` sweeps every dispatched kernel against
+//! the reference across randomized shapes (all remainder tails) and
+//! asserts `f64::to_bits` equality; `rust/tests/workspace_suite.rs`
+//! asserts end-to-end gradients are invariant under forced-scalar
+//! dispatch.
+//!
+//! ## Dispatch
+//!
+//! [`simd_backend`] resolves once per process (cached in an atomic):
+//! AVX2 is selected iff the CPU supports it
+//! (`is_x86_feature_detected!("avx2")`) and neither opt-out knob is set:
+//!
+//! - env var `SYMPODE_NO_SIMD` (any value other than empty or `"0"`)
+//!   forces the scalar tier — the forced-scalar CI leg uses this;
+//! - cargo feature `no_simd` forces the scalar tier at compile time.
+//!
+//! [`set_simd_backend`] overrides the resolved backend afterwards; it
+//! exists for tests and benchmarks that compare the tiers head-to-head
+//! in one process. Because the tiers are bit-identical, flipping the
+//! backend is not observable in results — only in throughput.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Tile edge for the blocked GEMM kernels. 64×64 f64 tiles (32 KiB per
 /// operand tile) fit L1/L2 comfortably on any x86-64.
 const BLOCK: usize = 64;
 
-/// `y += alpha * x`
+/// Which kernel tier the public entry points dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// The blocked scalar reference kernels in [`scalar`].
+    Scalar,
+    /// Hand-written AVX2 (4 × f64) microkernels, bitwise identical to
+    /// the scalar reference. Only selectable on `x86_64` CPUs with AVX2.
+    Avx2,
+}
+
+impl SimdBackend {
+    /// Stable lowercase name for logs and bench artifacts.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            SimdBackend::Scalar => 1,
+            SimdBackend::Avx2 => 2,
+        }
+    }
+}
+
+/// 0 = unresolved, otherwise `SimdBackend::code()`.
+static BACKEND: AtomicU8 = AtomicU8::new(0);
+
+fn detect_backend() -> SimdBackend {
+    if cfg!(feature = "no_simd") {
+        return SimdBackend::Scalar;
+    }
+    if std::env::var("SYMPODE_NO_SIMD").is_ok_and(|v| !v.is_empty() && v != "0") {
+        return SimdBackend::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdBackend::Avx2;
+        }
+    }
+    SimdBackend::Scalar
+}
+
+/// The active kernel tier. Resolved once per process (first call runs
+/// CPU feature detection and reads the `SYMPODE_NO_SIMD` knob; later
+/// calls are a relaxed atomic load).
+#[inline]
+pub fn simd_backend() -> SimdBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => SimdBackend::Scalar,
+        2 => SimdBackend::Avx2,
+        _ => {
+            let detected = detect_backend();
+            BACKEND.store(detected.code(), Ordering::Relaxed);
+            detected
+        }
+    }
+}
+
+/// Override the dispatched tier; returns the previous one. A test /
+/// benchmark knob: requesting [`SimdBackend::Avx2`] on a CPU without
+/// AVX2 panics rather than producing undefined behavior.
+pub fn set_simd_backend(backend: SimdBackend) -> SimdBackend {
+    if backend == SimdBackend::Avx2 {
+        #[cfg(target_arch = "x86_64")]
+        let supported = is_x86_feature_detected!("avx2");
+        #[cfg(not(target_arch = "x86_64"))]
+        let supported = false;
+        assert!(supported, "set_simd_backend(Avx2): AVX2 not available on this CPU");
+    }
+    let prev = simd_backend();
+    BACKEND.store(backend.code(), Ordering::Relaxed);
+    prev
+}
+
+/// Blocked scalar reference kernels.
+///
+/// These are the bit-exactness oracle the dispatched kernels are tested
+/// against (`rust/tests/linalg_suite.rs`); they are kept verbatim and
+/// must not be "optimised" independently of the SIMD tier — the two
+/// tiers share one accumulation-order contract (see the module docs).
+pub mod scalar {
+    use super::BLOCK;
+
+    /// `y += alpha * x` (reference tier).
+    #[inline]
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// Dot product (reference tier). Four independent accumulators break
+    /// the loop-carried dependence; lane `l` sums the terms at indices
+    /// `≡ l (mod 4)`, lanes combine as `(l0 + l1) + (l2 + l3)`, and the
+    /// tail is added sequentially. The AVX2 tier reproduces exactly this
+    /// op sequence, which is what makes it bitwise identical.
+    #[inline]
+    pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc4 = [0.0f64; 4];
+        let (xc, xr) = x.split_at(x.len() - x.len() % 4);
+        let (yc, yr) = y.split_at(y.len() - y.len() % 4);
+        for (xs, ys) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
+            for k in 0..4 {
+                acc4[k] += xs[k] * ys[k];
+            }
+        }
+        let mut acc = (acc4[0] + acc4[1]) + (acc4[2] + acc4[3]);
+        for (a, b) in xr.iter().zip(yr) {
+            acc += a * b;
+        }
+        acc
+    }
+
+    /// `C[m,n] = A[m,k] · B[k,n]` (reference tier). `C` is overwritten.
+    pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        c.fill(0.0);
+        gemm_nn_acc(m, k, n, a, b, c);
+    }
+
+    /// `C[m,n] += A[m,k] · B[k,n]` (reference tier).
+    pub fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for i0 in (0..m).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(m);
+            for p0 in (0..k).step_by(BLOCK) {
+                let p1 = (p0 + BLOCK).min(k);
+                for i in i0..i1 {
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let aip = a[i * k + p];
+                        if aip != 0.0 {
+                            let brow = &b[p * n..(p + 1) * n];
+                            for (cj, bj) in crow.iter_mut().zip(brow) {
+                                *cj += aip * bj;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `C[k,n] = Aᵀ·B` where `A` is `[m,k]`, `B` is `[m,n]` (reference
+    /// tier) — the weight-gradient GEMM of backprop (`dW = hᵀ·g`).
+    pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        c.fill(0.0);
+        gemm_tn_acc(m, k, n, a, b, c);
+    }
+
+    /// `C[k,n] += Aᵀ·B` (reference tier) — the accumulating, tiled form
+    /// of [`gemm_tn`].
+    ///
+    /// This is the workspace hot path's weight-gradient kernel: it writes
+    /// directly into the caller's flat parameter-gradient slice (no `dw`
+    /// scratch buffer), and tiles over both the reduction rows `i` and
+    /// the output rows `p` so the active `C` tile stays cache-resident.
+    /// For any fixed output element the reduction still runs in
+    /// increasing `i` order, so results are bit-identical to the naive
+    /// loop.
+    pub fn gemm_tn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(c.len(), k * n);
+        for p0 in (0..k).step_by(BLOCK) {
+            let p1 = (p0 + BLOCK).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let brow = &b[i * n..(i + 1) * n];
+                for p in p0..p1 {
+                    let ap = arow[p];
+                    if ap != 0.0 {
+                        let crow = &mut c[p * n..(p + 1) * n];
+                        for (cj, bj) in crow.iter_mut().zip(brow) {
+                            *cj += ap * bj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `C[m,n] = A·Bᵀ` where `A` is `[m,k]`, `B` is `[n,k]` (reference
+    /// tier) — the input-gradient GEMM of backprop (`dh = g·Wᵀ`). Each
+    /// output element is one [`dot`] over the shared `k` dimension.
+    pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj = dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+/// AVX2 microkernels (4 × f64 per vector).
+///
+/// Every function here reproduces the exact per-element op sequence of
+/// its [`scalar`] counterpart — same ascending reduction order, separate
+/// multiply and add (no FMA contraction), same `a[i,p] == 0.0` skip —
+/// so results are bitwise identical to the reference tier. See the
+/// module docs for the full contract.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::BLOCK;
+    use core::arch::x86_64::*;
+
+    /// `y[j] += alpha * x[j]` vectorised along `j`. Each lane performs
+    /// exactly the scalar `y[j] += alpha * x[j]` (one mul, one add);
+    /// elements are independent, so any lane grouping is bit-exact.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_run(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let av = _mm256_set1_pd(alpha);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let x0 = _mm256_loadu_pd(xp.add(j));
+            let x1 = _mm256_loadu_pd(xp.add(j + 4));
+            let y0 = _mm256_loadu_pd(yp.add(j));
+            let y1 = _mm256_loadu_pd(yp.add(j + 4));
+            _mm256_storeu_pd(yp.add(j), _mm256_add_pd(y0, _mm256_mul_pd(av, x0)));
+            _mm256_storeu_pd(yp.add(j + 4), _mm256_add_pd(y1, _mm256_mul_pd(av, x1)));
+            j += 8;
+        }
+        if j + 4 <= n {
+            let x0 = _mm256_loadu_pd(xp.add(j));
+            let y0 = _mm256_loadu_pd(yp.add(j));
+            _mm256_storeu_pd(yp.add(j), _mm256_add_pd(y0, _mm256_mul_pd(av, x0)));
+            j += 4;
+        }
+        for (yj, xj) in y[j..n].iter_mut().zip(&x[j..n]) {
+            *yj += alpha * xj;
+        }
+    }
+
+    /// AVX2 [`super::scalar::axpy`].
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        axpy_run(alpha, x, y);
+    }
+
+    /// AVX2 [`super::scalar::dot`]: vector lane `l` accumulates exactly
+    /// the terms of the scalar reference's accumulator `acc4[l]`, lanes
+    /// combine as `(l0 + l1) + (l2 + l3)`, then the tail is added
+    /// sequentially — the identical op sequence, hence identical bits.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len().min(y.len());
+        let n4 = n - n % 4;
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut accv = _mm256_setzero_pd();
+        let mut t = 0usize;
+        while t < n4 {
+            let xv = _mm256_loadu_pd(xp.add(t));
+            let yv = _mm256_loadu_pd(yp.add(t));
+            accv = _mm256_add_pd(accv, _mm256_mul_pd(xv, yv));
+            t += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), accv);
+        let mut acc = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+        for (a, b) in x[n4..n].iter().zip(&y[n4..n]) {
+            acc += a * b;
+        }
+        acc
+    }
+
+    /// AVX2 [`super::scalar::gemm_nn_acc`]: identical blocking and
+    /// ascending `p` order; the row update is [`axpy_run`].
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for i0 in (0..m).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(m);
+            for p0 in (0..k).step_by(BLOCK) {
+                let p1 = (p0 + BLOCK).min(k);
+                for i in i0..i1 {
+                    let crow = &mut c[i * n..(i + 1) * n];
+                    for p in p0..p1 {
+                        let aip = a[i * k + p];
+                        if aip != 0.0 {
+                            axpy_run(aip, &b[p * n..(p + 1) * n], crow);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 [`super::scalar::gemm_tn_acc`]: identical blocking and
+    /// ascending `i` order; the row update is [`axpy_run`].
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_tn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for p0 in (0..k).step_by(BLOCK) {
+            let p1 = (p0 + BLOCK).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let brow = &b[i * n..(i + 1) * n];
+                for p in p0..p1 {
+                    let ap = arow[p];
+                    if ap != 0.0 {
+                        axpy_run(ap, brow, &mut c[p * n..(p + 1) * n]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 [`super::scalar::gemm_nt`]: one AVX2 [`dot`] per output
+    /// element, reproducing the reference's reduction structure.
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj = dot(arow, &b[j * k..(j + 1) * k]);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Public entry points: dispatched kernels + undispatched small helpers.
+// --------------------------------------------------------------------------
+
+/// `y += alpha * x` (dispatched).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    debug_assert_eq!(x.len(), y.len(), "axpy: x and y must have equal length");
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected after runtime detection.
+        unsafe { avx2::axpy(alpha, x, y) };
+        return;
     }
+    scalar::axpy(alpha, x, y);
 }
 
 /// `y = x`
@@ -34,25 +459,19 @@ pub fn scal(alpha: f64, x: &mut [f64]) {
     }
 }
 
-/// Dot product. Four independent accumulators break the loop-carried
-/// dependence so the compiler can vectorize the reduction (≈2× on the
-/// `gemm_nt` backprop kernel; see EXPERIMENTS.md §Perf).
+/// Dot product (dispatched). Both tiers use the same four-accumulator
+/// reduction (≈2× on the `gemm_nt` backprop kernel even in the scalar
+/// tier; see EXPERIMENTS.md §Perf), so the result is backend-invariant
+/// down to the bit.
 #[inline]
 pub fn dot(x: &[f64], y: &[f64]) -> f64 {
-    debug_assert_eq!(x.len(), y.len());
-    let mut acc4 = [0.0f64; 4];
-    let (xc, xr) = x.split_at(x.len() - x.len() % 4);
-    let (yc, yr) = y.split_at(y.len() - y.len() % 4);
-    for (xs, ys) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
-        for k in 0..4 {
-            acc4[k] += xs[k] * ys[k];
-        }
+    debug_assert_eq!(x.len(), y.len(), "dot: x and y must have equal length");
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected after runtime detection.
+        return unsafe { avx2::dot(x, y) };
     }
-    let mut acc = (acc4[0] + acc4[1]) + (acc4[2] + acc4[3]);
-    for (a, b) in xr.iter().zip(yr) {
-        acc += a * b;
-    }
-    acc
+    scalar::dot(x, y)
 }
 
 /// Euclidean norm.
@@ -61,104 +480,92 @@ pub fn nrm2(x: &[f64]) -> f64 {
     dot(x, x).sqrt()
 }
 
-/// `C[m,n] = A[m,k] · B[k,n]` (row-major). `C` is overwritten.
+/// `C[m,n] = A[m,k] · B[k,n]` (row-major, dispatched). `C` is
+/// overwritten.
 pub fn gemm_nn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
+    debug_assert_eq!(a.len(), m * k, "gemm_nn: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), k * n, "gemm_nn: B must be [k,n] = [{k},{n}]");
+    debug_assert_eq!(c.len(), m * n, "gemm_nn: C must be [m,n] = [{m},{n}]");
     c.fill(0.0);
     gemm_nn_acc(m, k, n, a, b, c);
 }
 
-/// `C[m,n] += A[m,k] · B[k,n]`.
+/// `C[m,n] += A[m,k] · B[k,n]` (dispatched).
 pub fn gemm_nn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for p0 in (0..k).step_by(BLOCK) {
-            let p1 = (p0 + BLOCK).min(k);
-            for i in i0..i1 {
-                let crow = &mut c[i * n..(i + 1) * n];
-                for p in p0..p1 {
-                    let aip = a[i * k + p];
-                    if aip != 0.0 {
-                        let brow = &b[p * n..(p + 1) * n];
-                        for (cj, bj) in crow.iter_mut().zip(brow) {
-                            *cj += aip * bj;
-                        }
-                    }
-                }
-            }
-        }
+    debug_assert_eq!(a.len(), m * k, "gemm_nn_acc: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), k * n, "gemm_nn_acc: B must be [k,n] = [{k},{n}]");
+    debug_assert_eq!(c.len(), m * n, "gemm_nn_acc: C must be [m,n] = [{m},{n}]");
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected after runtime detection.
+        unsafe { avx2::gemm_nn_acc(m, k, n, a, b, c) };
+        return;
     }
+    scalar::gemm_nn_acc(m, k, n, a, b, c);
 }
 
-/// `C[k,n] = Aᵀ·B` where `A` is `[m,k]`, `B` is `[m,n]` — the weight-
-/// gradient GEMM of backprop (`dW = hᵀ·g`).
+/// `C[k,n] = Aᵀ·B` where `A` is `[m,k]`, `B` is `[m,n]` (dispatched) —
+/// the weight-gradient GEMM of backprop (`dW = hᵀ·g`).
 pub fn gemm_tn(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k, "gemm_tn: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), m * n, "gemm_tn: B must be [m,n] = [{m},{n}]");
+    debug_assert_eq!(c.len(), k * n, "gemm_tn: C must be [k,n] = [{k},{n}]");
     c.fill(0.0);
     gemm_tn_acc(m, k, n, a, b, c);
 }
 
-/// `C[k,n] += Aᵀ·B` — the accumulating, tiled form of [`gemm_tn`].
-///
-/// This is the workspace hot path's weight-gradient kernel: it writes
-/// directly into the caller's flat parameter-gradient slice (no `dw`
-/// scratch buffer), and tiles over both the reduction rows `i` and the
-/// output rows `p` so the active `C` tile stays cache-resident. For any
-/// fixed output element the reduction still runs in increasing `i`
-/// order, so results are bit-identical to the naive loop.
+/// `C[k,n] += Aᵀ·B` (dispatched) — the accumulating, tiled form of
+/// [`gemm_tn`]; see [`scalar::gemm_tn_acc`] for the role it plays in the
+/// workspace hot path.
 pub fn gemm_tn_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(c.len(), k * n);
-    for p0 in (0..k).step_by(BLOCK) {
-        let p1 = (p0 + BLOCK).min(k);
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let brow = &b[i * n..(i + 1) * n];
-            for p in p0..p1 {
-                let ap = arow[p];
-                if ap != 0.0 {
-                    let crow = &mut c[p * n..(p + 1) * n];
-                    for (cj, bj) in crow.iter_mut().zip(brow) {
-                        *cj += ap * bj;
-                    }
-                }
-            }
-        }
+    debug_assert_eq!(a.len(), m * k, "gemm_tn_acc: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), m * n, "gemm_tn_acc: B must be [m,n] = [{m},{n}]");
+    debug_assert_eq!(c.len(), k * n, "gemm_tn_acc: C must be [k,n] = [{k},{n}]");
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected after runtime detection.
+        unsafe { avx2::gemm_tn_acc(m, k, n, a, b, c) };
+        return;
     }
+    scalar::gemm_tn_acc(m, k, n, a, b, c);
 }
 
-/// `C[m,k] = A·Bᵀ` where `A` is `[m,n]`, `B` is `[k,n]` — the input-
-/// gradient GEMM of backprop (`dh = g·Wᵀ`).
-pub fn gemm_nt(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * k);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * k..(i + 1) * k];
-        for p in 0..k {
-            crow[p] = dot(arow, &b[p * n..(p + 1) * n]);
-        }
+/// `C[m,n] = A·Bᵀ` where `A` is `[m,k]`, `B` is `[n,k]` (dispatched) —
+/// the input-gradient GEMM of backprop (`dh = g·Wᵀ`).
+///
+/// Parameter order is `(m, k, n)` like every other GEMM kernel here:
+/// `A` is always `[m,k]`, `n` is the remaining output dimension. (The
+/// historical `(m, n, k)` order of this one kernel was a foot-gun; the
+/// per-kernel `debug_assert`s on slice lengths make a swapped call fail
+/// loudly in tests.)
+pub fn gemm_nt(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k, "gemm_nt: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), n * k, "gemm_nt: B must be [n,k] = [{n},{k}]");
+    debug_assert_eq!(c.len(), m * n, "gemm_nt: C must be [m,n] = [{m},{n}]");
+    #[cfg(target_arch = "x86_64")]
+    if simd_backend() == SimdBackend::Avx2 {
+        // SAFETY: Avx2 is only ever selected after runtime detection.
+        unsafe { avx2::gemm_nt(m, k, n, a, b, c) };
+        return;
     }
+    scalar::gemm_nt(m, k, n, a, b, c);
 }
 
-/// `y[m] = A[m,n] · x[n]`.
+/// `y[m] = A[m,n] · x[n]`. Rides on the dispatched [`dot`].
 pub fn gemv(m: usize, n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(x.len(), n);
-    debug_assert_eq!(y.len(), m);
+    debug_assert_eq!(a.len(), m * n, "gemv: A must be [m,n] = [{m},{n}]");
+    debug_assert_eq!(x.len(), n, "gemv: x must be [n] = [{n}]");
+    debug_assert_eq!(y.len(), m, "gemv: y must be [m] = [{m}]");
     for i in 0..m {
         y[i] = dot(&a[i * n..(i + 1) * n], x);
     }
 }
 
-/// `y[n] = Aᵀ x` where `A` is `[m,n]`.
+/// `y[n] = Aᵀ x` where `A` is `[m,n]`. Rides on the dispatched [`axpy`].
 pub fn gemv_t(m: usize, n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(x.len(), m);
-    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(a.len(), m * n, "gemv_t: A must be [m,n] = [{m},{n}]");
+    debug_assert_eq!(x.len(), m, "gemv_t: x must be [m] = [{m}]");
+    debug_assert_eq!(y.len(), n, "gemv_t: y must be [n] = [{n}]");
     y.fill(0.0);
     for i in 0..m {
         axpy(x[i], &a[i * n..(i + 1) * n], y);
@@ -166,8 +573,14 @@ pub fn gemv_t(m: usize, n: usize, a: &[f64], x: &[f64], y: &mut [f64]) {
 }
 
 /// Reference (unblocked, naive) GEMM used only by tests to validate the
-/// optimized kernels.
+/// optimized kernels. For each output element the reduction runs in the
+/// same ascending `p` order as the blocked kernels, so on inputs without
+/// exact zeros (the blocked kernels skip `a[i,p] == 0.0`) it is bitwise
+/// identical to them as well.
 pub fn gemm_nn_naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k, "gemm_nn_naive: A must be [m,k] = [{m},{k}]");
+    debug_assert_eq!(b.len(), k * n, "gemm_nn_naive: B must be [k,n] = [{k},{n}]");
+    debug_assert_eq!(c.len(), m * n, "gemm_nn_naive: C must be [m,n] = [{m},{n}]");
     for i in 0..m {
         for j in 0..n {
             let mut acc = 0.0;
@@ -188,6 +601,35 @@ mod tests {
         (0..n).map(|_| rng.normal()).collect()
     }
 
+    fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{ctx}[{i}]: {x:?} ({:#018x}) vs {y:?} ({:#018x})",
+                x.to_bits(),
+                y.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn backend_resolves_and_override_roundtrips() {
+        // one test covers resolution + override so no other test observes
+        // the backend mid-flip (the tiers are bit-identical, so a flip is
+        // invisible in results, but stickiness asserts would race)
+        let initial = simd_backend();
+        assert!(!initial.name().is_empty());
+        let prev = set_simd_backend(SimdBackend::Scalar);
+        assert_eq!(prev, initial);
+        assert_eq!(simd_backend(), SimdBackend::Scalar);
+        // kernels still work under the forced-scalar override
+        let mut c = vec![0.0; 4];
+        gemm_nn(2, 2, 2, &[1.0, 2.0, 3.0, 4.0], &[1.0, 0.0, 0.0, 1.0], &mut c);
+        assert_eq!(c, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(set_simd_backend(prev), SimdBackend::Scalar);
+    }
+
     #[test]
     fn gemm_nn_matches_naive_over_shapes() {
         let mut rng = Rng::new(1);
@@ -200,6 +642,47 @@ mod tests {
             gemm_nn_naive(m, k, n, &a, &b, &mut c_ref);
             let err = crate::util::stats::max_abs_diff(&c, &c_ref);
             assert!(err < 1e-12, "({m},{k},{n}) err={err}");
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_reference_smoke() {
+        // the full sweep lives in rust/tests/linalg_suite.rs; this is a
+        // fast in-crate smoke over odd shapes exercising remainder tails
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (8, 9, 13), (17, 33, 6)] {
+            let a = randv(&mut rng, m * k);
+            let b_nn = randv(&mut rng, k * n);
+            let mut c = randv(&mut rng, m * n);
+            let mut c_ref = c.clone();
+            gemm_nn_acc(m, k, n, &a, &b_nn, &mut c);
+            scalar::gemm_nn_acc(m, k, n, &a, &b_nn, &mut c_ref);
+            assert_bits_eq(&c, &c_ref, "gemm_nn_acc");
+
+            let b_tn = randv(&mut rng, m * n);
+            let a_tn = randv(&mut rng, m * k);
+            let mut c = randv(&mut rng, k * n);
+            let mut c_ref = c.clone();
+            gemm_tn_acc(m, k, n, &a_tn, &b_tn, &mut c);
+            scalar::gemm_tn_acc(m, k, n, &a_tn, &b_tn, &mut c_ref);
+            assert_bits_eq(&c, &c_ref, "gemm_tn_acc");
+
+            let a_nt = randv(&mut rng, m * k);
+            let b_nt = randv(&mut rng, n * k);
+            let mut c = vec![0.0; m * n];
+            let mut c_ref = vec![0.0; m * n];
+            gemm_nt(m, k, n, &a_nt, &b_nt, &mut c);
+            scalar::gemm_nt(m, k, n, &a_nt, &b_nt, &mut c_ref);
+            assert_bits_eq(&c, &c_ref, "gemm_nt");
+
+            let x = randv(&mut rng, k);
+            let y = randv(&mut rng, k);
+            assert_eq!(dot(&x, &y).to_bits(), scalar::dot(&x, &y).to_bits());
+            let mut yv = randv(&mut rng, k);
+            let mut yv_ref = yv.clone();
+            axpy(0.37, &x, &mut yv);
+            scalar::axpy(0.37, &x, &mut yv_ref);
+            assert_bits_eq(&yv, &yv_ref, "axpy");
         }
     }
 
@@ -226,19 +709,20 @@ mod tests {
     #[test]
     fn gemm_nt_is_transpose_of_b() {
         let mut rng = Rng::new(3);
-        let (m, n, k) = (6, 4, 5);
-        let a = randv(&mut rng, m * n);
-        let b = randv(&mut rng, k * n);
-        let mut bt = vec![0.0; n * k];
-        for i in 0..k {
-            for j in 0..n {
-                bt[j * k + i] = b[i * n + j];
+        // C[m,n] = A[m,k] · B[n,k]ᵀ
+        let (m, k, n) = (6, 4, 5);
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, n * k);
+        let mut bt = vec![0.0; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                bt[p * n + j] = b[j * k + p];
             }
         }
-        let mut c_ref = vec![0.0; m * k];
-        gemm_nn_naive(m, n, k, &a, &bt, &mut c_ref);
-        let mut c = vec![0.0; m * k];
-        gemm_nt(m, n, k, &a, &b, &mut c);
+        let mut c_ref = vec![0.0; m * n];
+        gemm_nn_naive(m, k, n, &a, &bt, &mut c_ref);
+        let mut c = vec![0.0; m * n];
+        gemm_nt(m, k, n, &a, &b, &mut c);
         assert!(crate::util::stats::max_abs_diff(&c, &c_ref) < 1e-12);
     }
 

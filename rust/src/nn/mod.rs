@@ -33,6 +33,17 @@
 //! once warm. The trace's *accounted* size (`L`) is unchanged — buffer
 //! reuse is real memory behavior, not a change to the paper's memory
 //! model (see [`crate::memory`]).
+//!
+//! ## SIMD
+//!
+//! All GEMM/GEMV work here goes through the dispatched kernels in
+//! [`crate::linalg`] (forward: `gemm_nn`; backward: `gemm_tn`/
+//! `gemm_tn_acc` for `dW`, `gemm_nt` for `dh`), so both the allocating
+//! and `_ws` paths pick up the AVX2 microkernels automatically where the
+//! CPU supports them. The kernel tiers are bitwise identical by
+//! construction (see the linalg module docs), so every equivalence
+//! guarantee above is dispatch-invariant — asserted end-to-end by
+//! `rust/tests/workspace_suite.rs`.
 
 pub mod optimizer;
 

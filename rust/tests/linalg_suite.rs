@@ -1,0 +1,314 @@
+//! Kernel conformance suite: the dispatched linalg kernels (whatever
+//! tier [`sympode::linalg::simd_backend`] resolved — AVX2 on capable
+//! x86-64, scalar otherwise or under `SYMPODE_NO_SIMD`) must be
+//! **bitwise identical** to the scalar reference tier in
+//! `linalg::scalar`, across:
+//!
+//! - randomized shapes `m,k,n ∈ 1..=65` — small enough to hit every
+//!   SIMD remainder tail (mod-4 and mod-8 residues), large enough to
+//!   cross the 64-wide GEMM tile boundary;
+//! - accumulate (`*_acc` from a preinitialized `c`) vs overwrite
+//!   variants;
+//! - inputs with exact `±0.0` entries, exercising the `a[i,p] == 0.0`
+//!   sparsity skip both tiers must take identically.
+//!
+//! Failures report the `testkit::Sweep` case seed for replay
+//! (`Rng::new(seed)` regenerates the failing operands).
+//!
+//! The blocked kernels are additionally compared against the unblocked
+//! `gemm_nn_naive` triple loop: for zero-free inputs the blocking does
+//! not reorder any per-element reduction, so even that comparison is
+//! exact to the bit. The one intentional exception is `gemm_nt`, whose
+//! per-element reduction is `dot`'s four-accumulator sum — a different
+//! (but fixed and dispatch-invariant) order from the naive sequential
+//! sum, so the naive comparison uses a tolerance there while the
+//! dispatched-vs-reference comparison stays bitwise.
+
+use sympode::linalg::{self, scalar};
+use sympode::testkit::{assert_all_close, Sweep};
+use sympode::util::Rng;
+
+/// Random shape with every dim in `1..=65`.
+fn shape(rng: &mut Rng) -> (usize, usize, usize) {
+    (1 + rng.below(65), 1 + rng.below(65), 1 + rng.below(65))
+}
+
+/// Bitwise slice equality (`f64::to_bits`), stricter than `==` (which
+/// conflates `0.0`/`-0.0` and fails on NaN).
+fn assert_bits_eq(a: &[f64], b: &[f64], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{ctx}[{i}]: {x:?} ({:#018x}) vs {y:?} ({:#018x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+/// Overwrite a fraction of entries with exact `0.0` / `-0.0` to
+/// exercise the kernels' zero-skip branch (both signs compare equal to
+/// `0.0`, so both must be skipped — identically — by both tiers).
+fn inject_zeros(rng: &mut Rng, v: &mut [f64]) {
+    for x in v.iter_mut() {
+        match rng.below(6) {
+            0 => *x = 0.0,
+            1 => *x = -0.0,
+            _ => {}
+        }
+    }
+}
+
+/// Naive accumulate reference for `C += A·B`: ascending-`p` reduction
+/// seeded from the preinitialized `c` — the order contract the blocked
+/// and SIMD tiers share.
+fn gemm_nn_acc_naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = c[i * n + j];
+            for p in 0..k {
+                let aip = a[i * k + p];
+                if aip != 0.0 {
+                    acc += aip * b[p * n + j];
+                }
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Naive accumulate reference for `C += Aᵀ·B`: ascending-`i` reduction
+/// seeded from the preinitialized `c`.
+fn gemm_tn_acc_naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    for p in 0..k {
+        for j in 0..n {
+            let mut acc = c[p * n + j];
+            for i in 0..m {
+                let aip = a[i * k + p];
+                if aip != 0.0 {
+                    acc += aip * b[i * n + j];
+                }
+            }
+            c[p * n + j] = acc;
+        }
+    }
+}
+
+#[test]
+fn sweep_shapes_cover_every_simd_remainder_tail() {
+    // meta-test: within the case budget the shape generator must hit
+    // every mod-4 and mod-8 residue of every dimension, so the kernel
+    // sweeps below genuinely exercise all vector tails
+    let mut seen4 = [[false; 4]; 3];
+    let mut seen8 = [[false; 8]; 3];
+    Sweep::new(200).run(|rng| {
+        let (m, k, n) = shape(rng);
+        for (d, &v) in [m, k, n].iter().enumerate() {
+            seen4[d][v % 4] = true;
+            seen8[d][v % 8] = true;
+        }
+    });
+    assert!(seen4.iter().flatten().all(|&s| s), "mod-4 tails not covered: {seen4:?}");
+    assert!(seen8.iter().flatten().all(|&s| s), "mod-8 tails not covered: {seen8:?}");
+}
+
+#[test]
+fn gemm_nn_overwrite_and_acc_are_bitwise_conformant() {
+    Sweep::new(200).run(|rng| {
+        let (m, k, n) = shape(rng);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+
+        // overwrite variant: start both tiers from different garbage to
+        // prove the overwrite is total
+        let mut c = rng.normal_vec(m * n);
+        let mut c_ref = rng.normal_vec(m * n);
+        linalg::gemm_nn(m, k, n, &a, &b, &mut c);
+        scalar::gemm_nn(m, k, n, &a, &b, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_nn vs scalar");
+        let mut c_naive = vec![0.0; m * n];
+        linalg::gemm_nn_naive(m, k, n, &a, &b, &mut c_naive);
+        assert_bits_eq(&c, &c_naive, "gemm_nn vs naive");
+
+        // accumulate variant from a shared preinitialized c
+        let c0 = rng.normal_vec(m * n);
+        let mut c = c0.clone();
+        let mut c_ref = c0.clone();
+        let mut c_naive = c0;
+        linalg::gemm_nn_acc(m, k, n, &a, &b, &mut c);
+        scalar::gemm_nn_acc(m, k, n, &a, &b, &mut c_ref);
+        gemm_nn_acc_naive(m, k, n, &a, &b, &mut c_naive);
+        assert_bits_eq(&c, &c_ref, "gemm_nn_acc vs scalar");
+        assert_bits_eq(&c, &c_naive, "gemm_nn_acc vs naive-acc");
+    });
+}
+
+#[test]
+fn gemm_tn_overwrite_and_acc_are_bitwise_conformant() {
+    Sweep::new(200).run(|rng| {
+        let (m, k, n) = shape(rng);
+        let a = rng.normal_vec(m * k); // A is [m,k]; C = AᵀB is [k,n]
+        let b = rng.normal_vec(m * n);
+
+        let mut c = rng.normal_vec(k * n);
+        let mut c_ref = rng.normal_vec(k * n);
+        linalg::gemm_tn(m, k, n, &a, &b, &mut c);
+        scalar::gemm_tn(m, k, n, &a, &b, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_tn vs scalar");
+        // naive reference via explicit transpose: same ascending-i
+        // reduction order per element, so bitwise as well
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c_naive = vec![0.0; k * n];
+        linalg::gemm_nn_naive(k, m, n, &at, &b, &mut c_naive);
+        assert_bits_eq(&c, &c_naive, "gemm_tn vs transpose+naive");
+
+        let c0 = rng.normal_vec(k * n);
+        let mut c = c0.clone();
+        let mut c_ref = c0.clone();
+        let mut c_naive = c0;
+        linalg::gemm_tn_acc(m, k, n, &a, &b, &mut c);
+        scalar::gemm_tn_acc(m, k, n, &a, &b, &mut c_ref);
+        gemm_tn_acc_naive(m, k, n, &a, &b, &mut c_naive);
+        assert_bits_eq(&c, &c_ref, "gemm_tn_acc vs scalar");
+        assert_bits_eq(&c, &c_naive, "gemm_tn_acc vs naive-acc");
+    });
+}
+
+#[test]
+fn gemm_nt_is_bitwise_conformant_to_reference() {
+    Sweep::new(200).run(|rng| {
+        let (m, k, n) = shape(rng);
+        let a = rng.normal_vec(m * k); // C[m,n] = A[m,k] · B[n,k]ᵀ
+        let b = rng.normal_vec(n * k);
+
+        let mut c = rng.normal_vec(m * n);
+        let mut c_ref = rng.normal_vec(m * n);
+        linalg::gemm_nt(m, k, n, &a, &b, &mut c);
+        scalar::gemm_nt(m, k, n, &a, &b, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_nt vs scalar");
+
+        // vs transpose + naive only to tolerance: gemm_nt's per-element
+        // reduction is dot's four-accumulator order, intentionally
+        // different from the naive sequential sum (but identical across
+        // dispatch tiers, as asserted above)
+        let mut bt = vec![0.0; k * n];
+        for j in 0..n {
+            for p in 0..k {
+                bt[p * n + j] = b[j * k + p];
+            }
+        }
+        let mut c_naive = vec![0.0; m * n];
+        linalg::gemm_nn_naive(m, k, n, &a, &bt, &mut c_naive);
+        assert_all_close(&c, &c_naive, 1e-12, "gemm_nt vs transpose+naive");
+    });
+}
+
+#[test]
+fn dot_and_axpy_are_bitwise_conformant() {
+    Sweep::new(300).run(|rng| {
+        let len = rng.below(66); // 0..=65: empty through all tails
+        let x = rng.normal_vec(len);
+        let y = rng.normal_vec(len);
+        let d = linalg::dot(&x, &y);
+        let d_ref = scalar::dot(&x, &y);
+        assert!(d.to_bits() == d_ref.to_bits(), "dot(len {len}): {d:?} vs {d_ref:?}");
+
+        let alpha = rng.normal();
+        let y0 = rng.normal_vec(len);
+        let mut ya = y0.clone();
+        let mut yb = y0;
+        linalg::axpy(alpha, &x, &mut ya);
+        scalar::axpy(alpha, &x, &mut yb);
+        assert_bits_eq(&ya, &yb, "axpy");
+    });
+}
+
+#[test]
+fn zero_skip_branch_is_bitwise_conformant() {
+    // exact ±0.0 entries in A trigger the sparsity skip; both tiers
+    // must take it identically (signed-zero accumulation included)
+    Sweep::new(200).run(|rng| {
+        let (m, k, n) = shape(rng);
+        let mut a = rng.normal_vec(m * k);
+        inject_zeros(rng, &mut a);
+        let mut b = rng.normal_vec(k * n);
+        inject_zeros(rng, &mut b);
+
+        let c0 = rng.normal_vec(m * n);
+        let mut c = c0.clone();
+        let mut c_ref = c0;
+        linalg::gemm_nn_acc(m, k, n, &a, &b, &mut c);
+        scalar::gemm_nn_acc(m, k, n, &a, &b, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_nn_acc (zeros)");
+
+        let a_tn = {
+            let mut v = rng.normal_vec(m * k);
+            inject_zeros(rng, &mut v);
+            v
+        };
+        let b_tn = rng.normal_vec(m * n);
+        let c0 = rng.normal_vec(k * n);
+        let mut c = c0.clone();
+        let mut c_ref = c0;
+        linalg::gemm_tn_acc(m, k, n, &a_tn, &b_tn, &mut c);
+        scalar::gemm_tn_acc(m, k, n, &a_tn, &b_tn, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_tn_acc (zeros)");
+
+        let mut a_nt = rng.normal_vec(m * k);
+        inject_zeros(rng, &mut a_nt);
+        let mut b_nt = rng.normal_vec(n * k);
+        inject_zeros(rng, &mut b_nt);
+        let mut c = vec![0.0; m * n];
+        let mut c_ref = vec![0.0; m * n];
+        linalg::gemm_nt(m, k, n, &a_nt, &b_nt, &mut c);
+        scalar::gemm_nt(m, k, n, &a_nt, &b_nt, &mut c_ref);
+        assert_bits_eq(&c, &c_ref, "gemm_nt (zeros)");
+    });
+}
+
+#[test]
+fn gemv_rides_on_dispatched_kernels_bitwise() {
+    Sweep::new(100).run(|rng| {
+        let (m, _, n) = shape(rng);
+        let a = rng.normal_vec(m * n);
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0; m];
+        linalg::gemv(m, n, &a, &x, &mut y);
+        // reference: one scalar dot per row (gemv's own loop structure)
+        for (i, yi) in y.iter().enumerate() {
+            let d = scalar::dot(&a[i * n..(i + 1) * n], &x);
+            assert!(yi.to_bits() == d.to_bits(), "gemv[{i}]: {yi:?} vs {d:?}");
+        }
+
+        let xt = rng.normal_vec(m);
+        let mut yt = vec![0.0; n];
+        linalg::gemv_t(m, n, &a, &xt, &mut yt);
+        let mut yt_ref = vec![0.0; n];
+        for i in 0..m {
+            scalar::axpy(xt[i], &a[i * n..(i + 1) * n], &mut yt_ref);
+        }
+        assert_bits_eq(&yt, &yt_ref, "gemv_t");
+    });
+}
+
+/// The unified `(m, k, n)` parameter order is enforced by slice-length
+/// debug-asserts: a call in the historical swapped `(m, n, k)` order
+/// with distinct dims dies immediately instead of corrupting memory
+/// layouts. (Debug assertions are active under `cargo test`.)
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "gemm_nt")]
+fn gemm_nt_swapped_parameter_order_fails_loudly() {
+    let (m, k, n) = (2usize, 3, 4);
+    let a = vec![0.0; m * k];
+    let b = vec![0.0; n * k];
+    let mut c = vec![0.0; m * n];
+    // deliberately swapped: (m, n, k) instead of (m, k, n)
+    linalg::gemm_nt(m, n, k, &a, &b, &mut c);
+}

@@ -14,7 +14,12 @@
 //! - the tape backends (`CnfSystem`, `HnnSystem`) must reproduce the
 //!   allocating `eval_traced` + `vjp_traced` reference bit-for-bit from
 //!   their fused workspace paths, stay deterministic across warm calls
-//!   on a reused arena, and stop taking pool misses once warm.
+//!   on a reused arena, and stop taking pool misses once warm;
+//! - the full symplectic-adjoint gradient must be **dispatch-invariant**:
+//!   bitwise identical under the default linalg kernel tier (AVX2 where
+//!   the CPU has it) and under forced-scalar dispatch, with the warm
+//!   workspace pool staying allocation-free across the backend flip
+//!   (the SIMD kernels reuse the same caller buffers as the reference).
 
 use sympode::adjoint::{
     adjoint_step, adjoint_step_ws, method_by_name, GradientMethod, StageSource,
@@ -23,6 +28,7 @@ use sympode::cnf::{CnfSystem, TraceEstimator};
 use sympode::integrate::{
     rk_combine, rk_combine_into, rk_stages, rk_stages_ws, SolverConfig,
 };
+use sympode::linalg::{set_simd_backend, SimdBackend};
 use sympode::memory::MemTracker;
 use sympode::nn::{Mlp, MlpTrace};
 use sympode::ode::losses::SumLoss;
@@ -373,6 +379,111 @@ fn tape_backend_gradients_match_through_the_full_symplectic_sweep() {
     assert_eq!(a.grad_x0, b.grad_x0);
     assert_eq!(a.grad_params, b.grad_params);
     assert_eq!(a.stats.peak_mem_bytes, b.stats.peak_mem_bytes);
+}
+
+#[test]
+fn symplectic_gradient_is_invariant_under_forced_scalar_dispatch() {
+    // End-to-end dispatch invariance (the linalg kernel tiers are bitwise
+    // identical by construction, so forcing the scalar reference must not
+    // change a single bit of the full symplectic-adjoint gradient). On
+    // hardware without AVX2 both runs take the scalar tier and the test
+    // degenerates to determinism — still a valid (weaker) assertion.
+    //
+    // NOTE on the global flip: the backend override is process-wide, but
+    // because the tiers are bit-identical it is unobservable in any other
+    // concurrently running test's *results* — only in throughput.
+    let run_mlp = {
+        let sys = NativeMlpSystem::with_batch(&[3, 16, 16, 3], 4, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(31);
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.125);
+        move || {
+            let g = method_by_name("symplectic")
+                .unwrap()
+                .gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+                .unwrap();
+            (g.loss, g.grad_x0, g.grad_params)
+        }
+    };
+    let run_cnf = {
+        let mut rng = Rng::new(33);
+        let mut sys = CnfSystem::new(&[2, 12, 2], 3, TraceEstimator::Hutchinson);
+        sys.resample_eps(&mut rng);
+        let p = sys.init_params(34);
+        let z0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::bosh3(), 0.2);
+        let loss = sympode::cnf::CnfNllLoss { batch: 3, d: 2 };
+        move || {
+            let g = method_by_name("symplectic")
+                .unwrap()
+                .gradient(&sys, &p, &z0, 0.0, 1.0, &cfg, &loss)
+                .unwrap();
+            (g.loss, g.grad_x0, g.grad_params)
+        }
+    };
+
+    let default_mlp = run_mlp();
+    let default_cnf = run_cnf();
+
+    let prev = set_simd_backend(SimdBackend::Scalar);
+    let scalar_mlp = run_mlp();
+    let scalar_cnf = run_cnf();
+    set_simd_backend(prev);
+
+    assert_eq!(default_mlp.0.to_bits(), scalar_mlp.0.to_bits(), "MLP loss");
+    assert_eq!(default_mlp.1, scalar_mlp.1, "MLP grad_x0");
+    assert_eq!(default_mlp.2, scalar_mlp.2, "MLP grad_params");
+    assert_eq!(default_cnf.0.to_bits(), scalar_cnf.0.to_bits(), "CNF loss");
+    assert_eq!(default_cnf.1, scalar_cnf.1, "CNF grad_x0");
+    assert_eq!(default_cnf.2, scalar_cnf.2, "CNF grad_params");
+}
+
+#[test]
+fn warm_pool_stays_allocation_free_across_backend_flips() {
+    // Both kernel tiers consume the caller's buffers in place, so a warm
+    // workspace must take zero new pool misses when the dispatch backend
+    // flips mid-loop — the SIMD path must not demand different scratch.
+    let sys = NativeMlpSystem::with_batch(&[4, 24, 4], 6, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(35);
+    let x0 = rng.normal_vec(sys.dim());
+    let tab = Tableau::dopri5();
+    let h = 0.125;
+    let mem = MemTracker::new();
+    let mut ws = Workspace::new();
+    let mut k = Vec::new();
+    let mut stages = Vec::new();
+    let mut lam = rng.normal_vec(sys.dim());
+    let mut th = vec![0.0; sys.n_params()];
+
+    let mut sweep = |ws: &mut Workspace, lam: &mut Vec<f64>, th: &mut Vec<f64>| {
+        rk_stages_ws(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages), ws);
+        let stage_t: Vec<f64> = tab.c.iter().map(|&c| c * h).collect();
+        adjoint_step_ws(
+            &sys,
+            &p,
+            &tab,
+            0.0,
+            h,
+            lam,
+            th,
+            StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+            &mem,
+            ws,
+        );
+    };
+    sweep(&mut ws, &mut lam, &mut th); // warm-up under the default tier
+    let misses_after_warmup = ws.misses();
+    let prev = set_simd_backend(SimdBackend::Scalar);
+    sweep(&mut ws, &mut lam, &mut th);
+    set_simd_backend(prev);
+    sweep(&mut ws, &mut lam, &mut th);
+    assert_eq!(
+        ws.misses(),
+        misses_after_warmup,
+        "backend flips must not allocate new pool buffers"
+    );
 }
 
 #[test]
