@@ -311,6 +311,6 @@ fn main() {
 
     let mut json = results_to_json(&results);
     json.set("simd_backend", backend.name());
-    std::fs::write("BENCH_gradient_methods.json", format!("{json}\n")).unwrap();
+    sympode::util::atomic_write("BENCH_gradient_methods.json", &format!("{json}\n")).unwrap();
     println!("\nwrote BENCH_gradient_methods.json ({} results)", results.len());
 }

@@ -177,6 +177,6 @@ fn main() {
     let mut json = results_to_json(&results);
     json.set("simd_backend", backend.name());
     json.set("speedups", Json::Arr(speedups));
-    std::fs::write("BENCH_nn.json", format!("{json}\n")).unwrap();
+    sympode::util::atomic_write("BENCH_nn.json", &format!("{json}\n")).unwrap();
     println!("\nwrote BENCH_nn.json ({} results)", results.len());
 }

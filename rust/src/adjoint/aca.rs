@@ -14,7 +14,7 @@
 use super::backprop::rk_stages_traced;
 use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::{solve_ivp_tracked, SolverConfig};
+use crate::integrate::{first_non_finite, try_solve_ivp_tracked, SolverConfig};
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem};
 use crate::workspace::Workspace;
@@ -43,7 +43,8 @@ impl GradientMethod for AcaMethod {
         let tab = &cfg.tableau;
 
         // forward: checkpoints only
-        let sol = solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem);
+        let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("aca: forward integration failed: {e}"))?;
         let n_steps = sol.n_steps();
 
         let loss_val = loss.loss(sol.final_state());
@@ -85,6 +86,14 @@ impl GradientMethod for AcaMethod {
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
             mem.free(MemCategory::Tape, tape_bytes);
+            if let Some(i) =
+                first_non_finite(&lam).or_else(|| first_non_finite(&lam_theta))
+            {
+                anyhow::bail!(
+                    "aca: backward sweep produced a non-finite adjoint \
+                     (NonFiniteState: component {i} at step {n}, t = {t_n})"
+                );
+            }
         }
         mem.free_f64(MemCategory::Checkpoint, dim); // discard x₀
 

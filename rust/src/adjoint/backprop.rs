@@ -14,8 +14,8 @@
 use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
 use crate::integrate::{
-    error_norm, error_norm_dop853, rk_combine, select_initial_step, solve_ivp_final, Solution,
-    SolveStats, SolverConfig, StepMode,
+    error_norm, error_norm_dop853, first_non_finite, rk_combine, select_initial_step,
+    try_solve_ivp_final, Solution, SolveError, SolveFailure, SolveStats, SolverConfig, StepMode,
 };
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem, Trace};
@@ -108,6 +108,17 @@ pub(crate) fn traced_forward(
                 let (traces, nfe) = rk_stages_traced(sys, params, tab, t, &x, h_signed, &mut k);
                 stats.nfe += nfe;
                 let x_new = rk_combine(tab, &x, h_signed, &k);
+                if let Some(bad) = first_non_finite(&x_new) {
+                    return Err(SolveError {
+                        failure: SolveFailure::NonFiniteState {
+                            t,
+                            h: h_signed,
+                            first_bad_index: bad,
+                        },
+                        partial: Solution { ts, xs, stats },
+                    }
+                    .into());
+                }
                 records.push(retain_step(t, h_signed, traces, mem));
                 t += h_signed;
                 x = x_new;
@@ -121,6 +132,16 @@ pub(crate) fn traced_forward(
             let mut f0 = vec![0.0; dim];
             sys.eval(t0, &x, params, &mut f0);
             stats.nfe += 1;
+            // as in try_solve_core: NaN slopes at t0 must be reported
+            // directly — they do not make select_initial_step's h
+            // non-finite.
+            if let Some(bad) = first_non_finite(&f0) {
+                return Err(SolveError {
+                    failure: SolveFailure::NonFiniteState { t: t0, h: 0.0, first_bad_index: bad },
+                    partial: Solution { ts, xs, stats },
+                }
+                .into());
+            }
             let mut h = match h0 {
                 Some(h) => h,
                 None => select_initial_step(
@@ -128,12 +149,23 @@ pub(crate) fn traced_forward(
                     &mut stats.nfe,
                 ),
             };
+            if !h.is_finite() {
+                return Err(SolveError {
+                    failure: SolveFailure::NonFiniteState { t: t0, h, first_bad_index: 0 },
+                    partial: Solution { ts, xs, stats },
+                }
+                .into());
+            }
             const SAFETY: f64 = 0.9;
             const MIN_FACTOR: f64 = 0.2;
             const MAX_FACTOR: f64 = 10.0;
             while (t - t1) * direction < 0.0 {
                 if stats.n_steps + stats.n_rejected >= max_steps {
-                    anyhow::bail!("traced_forward exceeded {max_steps} steps");
+                    return Err(SolveError {
+                        failure: SolveFailure::MaxStepsExceeded { max_steps, t, h },
+                        partial: Solution { ts, xs, stats },
+                    }
+                    .into());
                 }
                 if (t + direction * h - t1) * direction > 0.0 {
                     h = (t1 - t).abs();
@@ -164,6 +196,22 @@ pub(crate) fn traced_forward(
                     ErrorSpec::None => anyhow::bail!("adaptive mode needs an error estimate"),
                 };
 
+                // divergence check before accept/reject — same contract
+                // as try_solve_core (a NaN err_norm must not decay h to
+                // the underflow floor).
+                if !err_norm_v.is_finite() || first_non_finite(&x_new).is_some() {
+                    let bad = first_non_finite(&x_new).unwrap_or(0);
+                    return Err(SolveError {
+                        failure: SolveFailure::NonFiniteState {
+                            t,
+                            h: h_signed,
+                            first_bad_index: bad,
+                        },
+                        partial: Solution { ts, xs, stats },
+                    }
+                    .into());
+                }
+
                 if err_norm_v <= 1.0 {
                     records.push(retain_step(t, h_signed, traces, mem));
                     t += h_signed;
@@ -185,7 +233,11 @@ pub(crate) fn traced_forward(
                         (SAFETY * err_norm_v.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
                     h *= factor;
                     if h < 1e-13 * span {
-                        anyhow::bail!("traced_forward: step size underflow at t = {t}");
+                        return Err(SolveError {
+                            failure: SolveFailure::StepSizeUnderflow { t, h, err_norm: err_norm_v },
+                            partial: Solution { ts, xs, stats },
+                        }
+                        .into());
                     }
                 }
             }
@@ -196,7 +248,8 @@ pub(crate) fn traced_forward(
 
 /// Run the exact discrete adjoint backward over retained step records,
 /// freeing each step's tapes as it is consumed (as PyTorch's backward
-/// does).
+/// does). Errs (with a `NonFiniteState`-tagged message) if the adjoint
+/// itself diverges mid-sweep.
 pub(crate) fn backward_over_records(
     sys: &dyn OdeSystem,
     params: &[f64],
@@ -206,7 +259,7 @@ pub(crate) fn backward_over_records(
     lam_theta: &mut [f64],
     mem: &MemTracker,
     stats: &mut GradStats,
-) {
+) -> anyhow::Result<()> {
     // one workspace for the whole sweep: adjoint-step scratch reused
     let mut ws = Workspace::new();
     for rec in records.into_iter().rev() {
@@ -225,7 +278,21 @@ pub(crate) fn backward_over_records(
         stats.nfe_backward += cost.nfe + cost.nvjp;
         stats.n_steps_backward += 1;
         mem.free(MemCategory::Tape, rec.tape_bytes);
+        if let Some(i) = first_non_finite(lam) {
+            anyhow::bail!(
+                "backward sweep produced a non-finite adjoint \
+                 (NonFiniteState: λ component {i} at t = {})",
+                rec.t
+            );
+        }
     }
+    if let Some(i) = first_non_finite(lam_theta) {
+        anyhow::bail!(
+            "backward sweep produced a non-finite parameter adjoint \
+             (NonFiniteState: λ_θ component {i})"
+        );
+    }
+    Ok(())
 }
 
 /// Naive backprop through the whole integration (`O(MNsL)` memory).
@@ -248,7 +315,8 @@ impl GradientMethod for BackpropMethod {
         loss: &dyn Loss,
     ) -> anyhow::Result<GradResult> {
         let mem = MemTracker::new();
-        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)?;
+        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("backprop: forward integration failed: {e}"))?;
 
         let loss_val = loss.loss(sol.final_state());
         let mut lam = vec![0.0; sys.dim()];
@@ -269,7 +337,8 @@ impl GradientMethod for BackpropMethod {
             &mut lam_theta,
             &mem,
             &mut stats,
-        );
+        )
+        .map_err(|e| anyhow::anyhow!("backprop: {e}"))?;
         // trajectory accounting released with the graph
         mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
 
@@ -307,11 +376,13 @@ impl GradientMethod for BaselineCheckpoint {
         let mem = MemTracker::new();
         // the training forward pass: graphs discarded, only x₀ kept
         mem.alloc_f64(MemCategory::Checkpoint, sys.dim()); // the x₀ checkpoint
-        let fwd = solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem);
+        let fwd = try_solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("baseline: forward integration failed: {e}"))?;
         let loss_val = loss.loss(fwd.final_state());
 
         // gradient time: re-solve with graph retention, then backprop
-        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)?;
+        let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("baseline: gradient re-solve failed: {e}"))?;
         let mut lam = vec![0.0; sys.dim()];
         loss.grad(sol.final_state(), &mut lam);
         let mut lam_theta = vec![0.0; sys.n_params()];
@@ -330,7 +401,8 @@ impl GradientMethod for BaselineCheckpoint {
             &mut lam_theta,
             &mem,
             &mut stats,
-        );
+        )
+        .map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
         mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
         mem.free_f64(MemCategory::Checkpoint, sys.dim());
 

@@ -15,7 +15,7 @@
 //! why a loose tolerance corrupts the gradient (Fig. 1).
 
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::{solve_ivp_final, SolverConfig, StepMode};
+use crate::integrate::{try_solve_ivp_final, SolverConfig, StepMode};
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem, Trace};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -138,7 +138,8 @@ impl GradientMethod for ContinuousAdjoint {
         let p = sys.n_params();
 
         // forward: no trajectory recorded — only x(T) is kept
-        let fwd = solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem);
+        let fwd = try_solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("continuous adjoint: forward integration failed: {e}"))?;
         mem.alloc_f64(MemCategory::Checkpoint, d); // the retained x(T)
         let x_final = fwd.final_state().to_vec();
         let loss_val = loss.loss(&x_final);
@@ -161,7 +162,9 @@ impl GradientMethod for ContinuousAdjoint {
                 },
             },
         };
-        let bwd = solve_ivp_final(&aug, &[], &z, t1, t0, &back_cfg, &mem);
+        let bwd = try_solve_ivp_final(&aug, &[], &z, t1, t0, &back_cfg, &mem).map_err(|e| {
+            anyhow::anyhow!("continuous adjoint: backward integration failed: {e}")
+        })?;
         mem.free_f64(MemCategory::Checkpoint, d);
 
         let zf = bwd.final_state();

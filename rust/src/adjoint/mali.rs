@@ -14,8 +14,10 @@
 
 use super::step::tracked_vjp;
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::alf::{alf_step, alf_step_reverse, alf_step_vjp};
-use crate::integrate::{SolverConfig, StepMode};
+use crate::integrate::alf::{alf_step_vjp, try_alf_step, try_alf_step_reverse};
+use crate::integrate::{
+    first_non_finite, SolveError, SolveFailure, Solution, SolveStats, SolverConfig, StepMode,
+};
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem};
 
@@ -68,8 +70,29 @@ impl GradientMethod for MaliMethod {
         let mut v = vec![0.0; dim];
         sys.eval(t0, &x, params, &mut v);
         stats.nfe_forward += 1;
+        // MALI keeps no trajectory, so the SolveError partial carries
+        // only the initial state; failures name the failing step via t/h.
+        let partial_at_start = || Solution {
+            ts: vec![t0],
+            xs: vec![x0.to_vec()],
+            stats: SolveStats::default(),
+        };
+        if let Some(bad) = first_non_finite(&v) {
+            let err = SolveError {
+                failure: SolveFailure::NonFiniteState { t: t0, h: 0.0, first_bad_index: bad },
+                partial: partial_at_start(),
+            };
+            return Err(anyhow::anyhow!("mali: forward integration failed: {err}"));
+        }
         for n in 0..n_steps {
-            alf_step(sys, params, t0 + n as f64 * h, h, &mut x, &mut v);
+            let t_n = t0 + n as f64 * h;
+            if let Err(bad) = try_alf_step(sys, params, t_n, h, &mut x, &mut v) {
+                let err = SolveError {
+                    failure: SolveFailure::NonFiniteState { t: t_n, h, first_bad_index: bad },
+                    partial: partial_at_start(),
+                };
+                return Err(anyhow::anyhow!("mali: forward integration failed: {err}"));
+            }
             stats.nfe_forward += 1;
         }
         let x_final = x.clone();
@@ -83,7 +106,13 @@ impl GradientMethod for MaliMethod {
 
         for n in (0..n_steps).rev() {
             let t_n = t0 + n as f64 * h;
-            let x_half = alf_step_reverse(sys, params, t_n, h, &mut x, &mut v);
+            let x_half = try_alf_step_reverse(sys, params, t_n, h, &mut x, &mut v)
+                .map_err(|bad| {
+                    anyhow::anyhow!(
+                        "mali: backward reconstruction diverged \
+                         (NonFiniteState: component {bad} at step {n}, t = {t_n})"
+                    )
+                })?;
             stats.nfe_backward += 1;
             // VJP through the step (one transient tape inside)
             let dim_guard =

@@ -37,6 +37,19 @@
 //! threads, one system + workspace per worker; see
 //! [`crate::train::ShardedMlpGradient`] and the sweep helpers in
 //! [`crate::coordinator`].
+//!
+//! ## Error taxonomy
+//!
+//! Every method returns `anyhow::Result<GradResult>`, and every failure
+//! message names the failing *phase* (`"symplectic adjoint: forward
+//! integration failed: …"`, `"backprop: backward sweep …"`). Forward
+//! solves go through the `try_solve_ivp*` entry points, so a diverging
+//! integration surfaces the typed [`crate::integrate::SolveFailure`]
+//! text (`MaxStepsExceeded` / `StepSizeUnderflow` / `NonFiniteState`)
+//! instead of panicking; backward sweeps additionally scan the adjoint
+//! pair `(λ, λ_θ)` after each step and report `NonFiniteState` at the
+//! step where divergence appears. The happy path is bitwise unchanged —
+//! detection is read-only scans of already-computed vectors.
 
 pub mod aca;
 pub mod backprop;

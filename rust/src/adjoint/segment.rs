@@ -13,7 +13,7 @@
 
 use super::backprop::{backward_over_records, rk_stages_traced, StepRecord};
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::{solve_ivp_tracked, SolverConfig};
+use crate::integrate::{try_solve_ivp_tracked, SolverConfig};
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::{Loss, OdeSystem};
 
@@ -56,7 +56,8 @@ impl GradientMethod for SegmentCheckpoint {
         // (The recording solve uses a scratch tracker; the real tracker
         // sees only the kept checkpoints.)
         let scratch = MemTracker::new();
-        let sol = solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &scratch);
+        let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &scratch)
+            .map_err(|e| anyhow::anyhow!("segment checkpoint: forward integration failed: {e}"))?;
         let n_steps = sol.n_steps();
         let mut kept = vec![false; n_steps + 1];
         for i in (0..=n_steps).step_by(k) {
@@ -105,7 +106,8 @@ impl GradientMethod for SegmentCheckpoint {
                 &mut lam_theta,
                 &mem,
                 &mut stats,
-            );
+            )
+            .map_err(|e| anyhow::anyhow!("segment checkpoint: {e}"))?;
             // discard the checkpoint that anchored this segment (except x₀,
             // freed below with the remaining trail)
             seg_end = seg_start;

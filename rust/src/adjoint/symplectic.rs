@@ -18,7 +18,7 @@
 
 use super::step::{adjoint_step_ws, StageSource};
 use super::{GradResult, GradStats, GradientMethod};
-use crate::integrate::{rk_stages_ws, solve_ivp_tracked, SolverConfig};
+use crate::integrate::{first_non_finite, rk_stages_ws, try_solve_ivp_tracked, SolverConfig};
 use crate::memory::{MemCategory, MemGuard, MemTracker};
 use crate::ode::{Loss, OdeSystem};
 use crate::workspace::Workspace;
@@ -47,7 +47,8 @@ impl GradientMethod for SymplecticAdjoint {
         let tab = &cfg.tableau;
 
         // ---- Algorithm 1: forward with {x_n} checkpoints -------------
-        let sol = solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem);
+        let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem)
+            .map_err(|e| anyhow::anyhow!("symplectic adjoint: forward integration failed: {e}"))?;
         let n_steps = sol.n_steps();
 
         let loss_val = loss.loss(sol.final_state());
@@ -107,6 +108,14 @@ impl GradientMethod for SymplecticAdjoint {
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
             drop(stage_guard); // line 12/15: discard stage checkpoints
+            if let Some(i) =
+                first_non_finite(&lam).or_else(|| first_non_finite(&lam_theta))
+            {
+                anyhow::bail!(
+                    "symplectic adjoint: backward recursion produced a non-finite adjoint \
+                     (NonFiniteState: component {i} at step {n}, t = {t_n})"
+                );
+            }
         }
         // discard x_0
         mem.free_f64(MemCategory::Checkpoint, dim);

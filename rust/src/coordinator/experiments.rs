@@ -60,35 +60,51 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
         ("mali", l),
         ("symplectic", l),
     ];
-    let results: Vec<anyhow::Result<GradResult>> =
-        crate::parallel::parallel_map_indexed(cells.len(), |i| {
+    // Containment: a panicking or erroring cell records its failure and
+    // the sweep still reports every other method.
+    let results: Vec<Result<GradResult, String>> =
+        crate::parallel::parallel_try_map(cells.len(), |i| {
             let sys = make_sys();
             let p = sys.init_params();
             let mut rng = Rng::new(1);
             let x0 = rng.normal_vec(sys.dim());
             let m = method_by_name(cells[i].0).expect("table1 method is registered");
             m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
-        });
+        })
+        .into_iter()
+        .map(|r| match r {
+            Ok(Ok(g)) => Ok(g),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(p) => Err(p.to_string()),
+        })
+        .collect();
     let mut rows = Vec::new();
     for (&(name, theory_tape), res) in cells.iter().zip(results) {
-        let g = res?;
-        println!(
-            "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
-            name,
-            g.stats.peak_tape_bytes,
-            theory_tape,
-            g.stats.peak_checkpoint_bytes,
-            g.stats.nfe_forward,
-            g.stats.nfe_backward
-        );
         let mut j = Json::obj();
-        j.set("method", name)
-            .set("tape_bytes", g.stats.peak_tape_bytes)
-            .set("theory_tape_bytes", theory_tape)
-            .set("checkpoint_bytes", g.stats.peak_checkpoint_bytes)
-            .set("total_bytes", g.stats.peak_mem_bytes)
-            .set("nfe_forward", g.stats.nfe_forward)
-            .set("nfe_backward", g.stats.nfe_backward);
+        j.set("method", name);
+        match res {
+            Ok(g) => {
+                println!(
+                    "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
+                    name,
+                    g.stats.peak_tape_bytes,
+                    theory_tape,
+                    g.stats.peak_checkpoint_bytes,
+                    g.stats.nfe_forward,
+                    g.stats.nfe_backward
+                );
+                j.set("tape_bytes", g.stats.peak_tape_bytes)
+                    .set("theory_tape_bytes", theory_tape)
+                    .set("checkpoint_bytes", g.stats.peak_checkpoint_bytes)
+                    .set("total_bytes", g.stats.peak_mem_bytes)
+                    .set("nfe_forward", g.stats.nfe_forward)
+                    .set("nfe_backward", g.stats.nfe_backward);
+            }
+            Err(err) => {
+                println!("{name:<12} FAILED: {err}");
+                j.set("error", err);
+            }
+        }
         rows.push(j);
     }
     write_results(opts, "table1", Json::Arr(rows))?;
@@ -370,8 +386,10 @@ pub fn fig2(opts: &ExpOpts) -> anyhow::Result<()> {
         .iter()
         .flat_map(|&n| METHODS.iter().map(move |&m| (n, m)))
         .collect();
-    let peaks: Vec<anyhow::Result<u64>> =
-        crate::parallel::parallel_map_indexed(grid.len(), |i| {
+    // Containment: a failed (n_steps, method) cell records its error and
+    // leaves a hole; every other cell of the grid still completes.
+    let peaks: Vec<Result<u64, String>> =
+        crate::parallel::parallel_try_map(grid.len(), |i| {
             let (n, mname) = grid[i];
             let sys = NativeMlpSystem::with_batch(&[d, 64, 64, d], 4, 0);
             let p = sys.init_params();
@@ -381,7 +399,14 @@ pub fn fig2(opts: &ExpOpts) -> anyhow::Result<()> {
             let m = method_by_name(mname).expect("fig2 method is registered");
             m.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
                 .map(|g| g.stats.peak_mem_bytes)
-        });
+        })
+        .into_iter()
+        .map(|r| match r {
+            Ok(Ok(bytes)) => Ok(bytes),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(p) => Err(p.to_string()),
+        })
+        .collect();
     let mut rows = Vec::new();
     let mut peaks = peaks.into_iter();
     for &n in ns {
@@ -389,12 +414,19 @@ pub fn fig2(opts: &ExpOpts) -> anyhow::Result<()> {
         row.set("n_steps", n);
         let mut cells = Vec::new();
         for name in METHODS {
-            let bytes = peaks.next().expect("grid covers ns × methods")?;
-            row.set(name, bytes);
-            cells.push(mib(bytes));
+            match peaks.next().expect("grid covers ns × methods") {
+                Ok(bytes) => {
+                    row.set(name, bytes);
+                    cells.push(format!("{:.4}", mib(bytes)));
+                }
+                Err(err) => {
+                    row.set(&format!("{name}_error"), err);
+                    cells.push("failed".to_string());
+                }
+            }
         }
         println!(
-            "{:<6} {:>12.4} {:>12.4} {:>12.4} {:>12.4}",
+            "{:<6} {:>12} {:>12} {:>12} {:>12}",
             n, cells[0], cells[1], cells[2], cells[3]
         );
         rows.push(row);

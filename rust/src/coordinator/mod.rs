@@ -29,11 +29,12 @@ impl Default for ExpOpts {
     }
 }
 
-/// Write an experiment's JSON rows to `<out_dir>/<name>.json`.
+/// Write an experiment's JSON rows to `<out_dir>/<name>.json` atomically
+/// (temp file + rename), so an interrupted run never leaves a truncated
+/// results file behind.
 pub fn write_results(opts: &ExpOpts, name: &str, rows: Json) -> std::io::Result<()> {
-    std::fs::create_dir_all(&opts.out_dir)?;
     let path = Path::new(&opts.out_dir).join(format!("{name}.json"));
-    std::fs::write(&path, rows.to_string())?;
+    crate::util::atomic_write(&path, &rows.to_string())?;
     println!("\n[results written to {}]", path.display());
     Ok(())
 }

@@ -42,6 +42,25 @@ pub fn alf_step(
     x_half
 }
 
+/// [`alf_step`] with divergence detection: `Err(i)` reports the first
+/// non-finite component of the updated `(x ‖ v)` pair (`v` indices are
+/// offset by `dim`). The step itself is identical — `(x, v)` are mutated
+/// in place either way, so on `Err` they hold the diverged values.
+pub fn try_alf_step(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t: f64,
+    h: f64,
+    x: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+) -> Result<Vec<f64>, usize> {
+    let x_half = alf_step(sys, params, t, h, x, v);
+    match first_bad_pair(x, v) {
+        Some(i) => Err(i),
+        None => Ok(x_half),
+    }
+}
+
 /// Invert one ALF step: reconstruct `(x_n, v_n)` from `(x_{n+1}, v_{n+1})`.
 /// Returns `x_{n+½}`.
 pub fn alf_step_reverse(
@@ -63,6 +82,28 @@ pub fn alf_step_reverse(
     *x = x_half.clone();
     crate::linalg::axpy(-0.5 * h, v, x);
     x_half
+}
+
+/// [`alf_step_reverse`] with the same divergence contract as
+/// [`try_alf_step`].
+pub fn try_alf_step_reverse(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    t: f64,
+    h: f64,
+    x: &mut Vec<f64>,
+    v: &mut Vec<f64>,
+) -> Result<Vec<f64>, usize> {
+    let x_half = alf_step_reverse(sys, params, t, h, x, v);
+    match first_bad_pair(x, v) {
+        Some(i) => Err(i),
+        None => Ok(x_half),
+    }
+}
+
+fn first_bad_pair(x: &[f64], v: &[f64]) -> Option<usize> {
+    crate::integrate::first_non_finite(x)
+        .or_else(|| crate::integrate::first_non_finite(v).map(|i| i + x.len()))
 }
 
 /// VJP of one ALF step.

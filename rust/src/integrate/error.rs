@@ -1,0 +1,88 @@
+//! Typed solver failures.
+//!
+//! [`SolveError`] is what the `try_solve_ivp*` entry points return: a
+//! [`SolveFailure`] naming *why* the integration stopped, plus the
+//! partial [`Solution`] accumulated up to the failing step — every
+//! accepted `(t_n, x_n)` and the [`SolveStats`](super::SolveStats)
+//! counters, so `ts.len() == xs.len()` holds at every error exit and a
+//! caller can inspect exactly how far the solve got.
+//!
+//! The `Display` form always leads with the variant name
+//! (`MaxStepsExceeded` / `StepSizeUnderflow` / `NonFiniteState`): the
+//! vendored `anyhow` shim carries messages only (no downcasting), so
+//! downstream phase-tagged errors and the robustness suite identify the
+//! failure kind by substring.
+
+use super::Solution;
+use std::fmt;
+
+/// Why an integration stopped before reaching the target time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolveFailure {
+    /// The adaptive loop spent its `max_steps` budget (accepted plus
+    /// rejected trial steps) without reaching `t1`.
+    MaxStepsExceeded { max_steps: usize, t: f64, h: f64 },
+    /// Step control shrank `h` below the underflow floor (`1e-13·span`)
+    /// without finding an acceptable step — the classic stiff-problem
+    /// failure mode.
+    StepSizeUnderflow { t: f64, h: f64, err_norm: f64 },
+    /// A trial state component (or the step's error norm) became
+    /// NaN/±∞ during the step starting at `t`. Divergence is reported
+    /// at the step where it appears — never by silently decaying `h`
+    /// down to the underflow floor.
+    NonFiniteState { t: f64, h: f64, first_bad_index: usize },
+}
+
+impl fmt::Display for SolveFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SolveFailure::MaxStepsExceeded { max_steps, t, h } => write!(
+                f,
+                "MaxStepsExceeded: {max_steps} steps exhausted at t = {t} (h = {h})"
+            ),
+            SolveFailure::StepSizeUnderflow { t, h, err_norm } => write!(
+                f,
+                "StepSizeUnderflow: h = {h:e} fell below the floor at t = {t} \
+                 (err_norm = {err_norm})"
+            ),
+            SolveFailure::NonFiniteState { t, h, first_bad_index } => write!(
+                f,
+                "NonFiniteState: component {first_bad_index} became non-finite \
+                 during the step at t = {t} (h = {h})"
+            ),
+        }
+    }
+}
+
+/// An early-stopped integration: the failure plus everything that was
+/// successfully integrated before it.
+#[derive(Debug, Clone)]
+pub struct SolveError {
+    pub failure: SolveFailure,
+    /// Trajectory up to the last *accepted* step (the final recorded
+    /// state is always finite). For the non-recording `_final` entry
+    /// points this holds only the initial and last accepted states.
+    pub partial: Solution,
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} after {} accepted steps ({} rejected, {} evaluations)",
+            self.failure,
+            self.partial.stats.n_steps,
+            self.partial.stats.n_rejected,
+            self.partial.stats.nfe
+        )
+    }
+}
+
+impl std::error::Error for SolveError {}
+
+/// Index of the first NaN/±∞ entry, if any. The detection primitive the
+/// step loops use — a read-only scan, so evaluation counts (`nfe`) are
+/// unchanged on the happy path.
+pub fn first_non_finite(xs: &[f64]) -> Option<usize> {
+    xs.iter().position(|v| !v.is_finite())
+}

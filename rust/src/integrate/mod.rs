@@ -20,13 +20,27 @@
 //! [`crate::memory::MemTracker`] accounting (checkpoints + solver
 //! working set) is unchanged by this reuse.
 //!
+//! Failures are typed: [`try_solve_ivp`] (and its `_tracked`/`_final`
+//! variants) return `Result<Solution, SolveError>`, where [`SolveError`]
+//! names the failure — [`SolveFailure::MaxStepsExceeded`],
+//! [`SolveFailure::StepSizeUnderflow`], or
+//! [`SolveFailure::NonFiniteState`] — and carries the partial trajectory
+//! plus [`SolveStats`] accumulated up to the failing step. The step loop
+//! detects non-finite trial states and error norms at the step where
+//! they appear, so a diverging model surfaces as `NonFiniteState`
+//! instead of wedging step control into the underflow floor. The
+//! panicking [`solve_ivp`] wrappers delegate to the `try_` forms, so the
+//! happy path stays bitwise identical.
+//!
 //! [`alf`] implements the asynchronous leapfrog integrator MALI is built
 //! on.
 
 pub mod alf;
 pub mod dense;
+pub mod error;
 
 pub use dense::DenseSolution;
+pub use error::{first_non_finite, SolveError, SolveFailure};
 
 use crate::memory::{MemCategory, MemTracker};
 use crate::ode::OdeSystem;
@@ -331,7 +345,8 @@ pub(crate) fn select_initial_step(
 }
 
 /// Integrate from `t0` to `t1` (either direction). The solution records
-/// every accepted step.
+/// every accepted step. Panics on solver failure — use [`try_solve_ivp`]
+/// for a recoverable `Result`.
 pub fn solve_ivp(
     sys: &dyn OdeSystem,
     params: &[f64],
@@ -340,7 +355,21 @@ pub fn solve_ivp(
     t1: f64,
     cfg: &SolverConfig,
 ) -> Solution {
-    solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &MemTracker::new())
+    try_solve_ivp(sys, params, x0, t0, t1, cfg)
+        .unwrap_or_else(|e| panic!("solve_ivp: {}", e.failure))
+}
+
+/// [`solve_ivp`] returning a typed [`SolveError`] (carrying the partial
+/// trajectory and stats) instead of panicking.
+pub fn try_solve_ivp(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+) -> Result<Solution, SolveError> {
+    try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &MemTracker::new())
 }
 
 /// [`solve_ivp`] with solver working-buffer accounting: the live stage
@@ -355,7 +384,22 @@ pub fn solve_ivp_tracked(
     cfg: &SolverConfig,
     mem: &MemTracker,
 ) -> Solution {
-    solve_core(sys, params, x0, t0, t1, cfg, mem, true)
+    try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, mem)
+        .unwrap_or_else(|e| panic!("solve_ivp: {}", e.failure))
+}
+
+/// [`solve_ivp_tracked`] returning a typed [`SolveError`] instead of
+/// panicking.
+pub fn try_solve_ivp_tracked(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+) -> Result<Solution, SolveError> {
+    try_solve_core(sys, params, x0, t0, t1, cfg, mem, true)
 }
 
 /// Like [`solve_ivp_tracked`] but does **not** record the trajectory —
@@ -371,10 +415,43 @@ pub fn solve_ivp_final(
     cfg: &SolverConfig,
     mem: &MemTracker,
 ) -> Solution {
-    solve_core(sys, params, x0, t0, t1, cfg, mem, false)
+    try_solve_ivp_final(sys, params, x0, t0, t1, cfg, mem)
+        .unwrap_or_else(|e| panic!("solve_ivp: {}", e.failure))
 }
 
-fn solve_core(
+/// [`solve_ivp_final`] returning a typed [`SolveError`] instead of
+/// panicking.
+pub fn try_solve_ivp_final(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+) -> Result<Solution, SolveError> {
+    try_solve_core(sys, params, x0, t0, t1, cfg, mem, false)
+}
+
+/// Bundle the trajectory accumulated so far into the partial
+/// [`Solution`] attached to a [`SolveError`]. In non-recording mode the
+/// last accepted state is appended first, mirroring the happy-path exit.
+fn partial_solution(
+    mut ts: Vec<f64>,
+    mut xs: Vec<Vec<f64>>,
+    stats: SolveStats,
+    record: bool,
+    t: f64,
+    x: &[f64],
+) -> Solution {
+    if !record {
+        ts.push(t);
+        xs.push(x.to_vec());
+    }
+    Solution { ts, xs, stats }
+}
+
+fn try_solve_core(
     sys: &dyn OdeSystem,
     params: &[f64],
     x0: &[f64],
@@ -383,7 +460,7 @@ fn solve_core(
     cfg: &SolverConfig,
     mem: &MemTracker,
     record: bool,
-) -> Solution {
+) -> Result<Solution, SolveError> {
     assert_eq!(x0.len(), sys.dim(), "x0 has wrong dimension");
     assert!(t1 != t0, "empty integration interval");
     let direction = if t1 > t0 { 1.0 } else { -1.0 };
@@ -444,6 +521,16 @@ fn solve_core(
                 );
                 stats.nfe += nfe;
                 rk_combine_into(tab, &x, h_signed, &k, &mut x_new);
+                if let Some(bad) = first_non_finite(&x_new) {
+                    return Err(SolveError {
+                        failure: SolveFailure::NonFiniteState {
+                            t,
+                            h: h_signed,
+                            first_bad_index: bad,
+                        },
+                        partial: partial_solution(ts, xs, stats, record, t, &x),
+                    });
+                }
                 if tab.fsal && !tab.error_uses_new_f() {
                     set_k1(&mut k1_fsal, &k[tab.s - 1]);
                 } else {
@@ -463,6 +550,15 @@ fn solve_core(
             let mut f0 = vec![0.0; dim];
             sys.eval(t0, &x, params, &mut f0);
             stats.nfe += 1;
+            // A NaN in f(t0, x0) does NOT make select_initial_step's
+            // result non-finite (NaN.min(span) == span), so the slopes
+            // are scanned directly before any stepping is attempted.
+            if let Some(bad) = first_non_finite(&f0) {
+                return Err(SolveError {
+                    failure: SolveFailure::NonFiniteState { t: t0, h: 0.0, first_bad_index: bad },
+                    partial: partial_solution(ts, xs, stats, record, t, &x),
+                });
+            }
             let mut h = match h0 {
                 Some(h) => h,
                 None => select_initial_step(
@@ -470,6 +566,13 @@ fn solve_core(
                     &mut stats.nfe,
                 ),
             };
+            if !h.is_finite() {
+                let bad = first_non_finite(&x).unwrap_or(0);
+                return Err(SolveError {
+                    failure: SolveFailure::NonFiniteState { t: t0, h, first_bad_index: bad },
+                    partial: partial_solution(ts, xs, stats, record, t, &x),
+                });
+            }
             k1_fsal = Some(f0);
             let mut err = vec![0.0; dim];
             let mut fn_new = vec![0.0; dim];
@@ -479,10 +582,10 @@ fn solve_core(
 
             while (t - t1) * direction < 0.0 {
                 if stats.n_steps + stats.n_rejected >= max_steps {
-                    panic!(
-                        "solve_ivp: exceeded {} steps (t = {t}, target {t1}, h = {h})",
-                        max_steps
-                    );
+                    return Err(SolveError {
+                        failure: SolveFailure::MaxStepsExceeded { max_steps, t, h },
+                        partial: partial_solution(ts, xs, stats, record, t, &x),
+                    });
                 }
                 let h_min = 1e-14 * t.abs().max(1.0);
                 h = h.max(h_min);
@@ -531,6 +634,24 @@ fn solve_core(
                     ErrorSpec::None => unreachable!("adaptive mode requires an error estimate"),
                 };
 
+                // Divergence check BEFORE accept/reject: a non-finite
+                // trial state or error norm must surface here, at the
+                // step where it happened — a NaN err_norm fails the
+                // `<= 1.0` test and would otherwise shrink `h` by
+                // MIN_FACTOR every iteration down to the underflow
+                // floor, masking the real failure.
+                if !err_norm.is_finite() || first_non_finite(&x_new).is_some() {
+                    let bad = first_non_finite(&x_new).unwrap_or(0);
+                    return Err(SolveError {
+                        failure: SolveFailure::NonFiniteState {
+                            t,
+                            h: h_signed,
+                            first_bad_index: bad,
+                        },
+                        partial: partial_solution(ts, xs, stats, record, t, &x),
+                    });
+                }
+
                 if err_norm <= 1.0 {
                     // accept
                     t += h_signed;
@@ -562,7 +683,10 @@ fn solve_core(
                         (SAFETY * err_norm.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
                     h *= factor;
                     if h < 1e-13 * span {
-                        panic!("solve_ivp: step size underflow at t = {t} (err = {err_norm})");
+                        return Err(SolveError {
+                            failure: SolveFailure::StepSizeUnderflow { t, h, err_norm },
+                            partial: partial_solution(ts, xs, stats, record, t, &x),
+                        });
                     }
                 }
             }
@@ -573,7 +697,7 @@ fn solve_core(
         ts.push(t);
         xs.push(x);
     }
-    Solution { ts, xs, stats }
+    Ok(Solution { ts, xs, stats })
 }
 
 #[cfg(test)]

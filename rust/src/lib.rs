@@ -52,7 +52,10 @@ pub mod prelude {
         AcaMethod, BackpropMethod, BaselineCheckpoint, ContinuousAdjoint, GradResult,
         GradientMethod, MaliMethod, SymplecticAdjoint,
     };
-    pub use crate::integrate::{solve_ivp, Solution, SolveStats, SolverConfig, StepMode};
+    pub use crate::integrate::{
+        solve_ivp, try_solve_ivp, Solution, SolveError, SolveFailure, SolveStats, SolverConfig,
+        StepMode,
+    };
     pub use crate::memory::MemTracker;
     pub use crate::nn::{Adam, Mlp, Optimizer, Sgd};
     pub use crate::ode::{losses::SumLoss, Loss, NativeMlpSystem, OdeSystem};

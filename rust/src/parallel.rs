@@ -10,12 +10,69 @@
 //! (per-thread system + [`crate::workspace::Workspace`]; nothing shared),
 //! so the output is identical to running the same items serially — a
 //! property `rust/tests/workspace_suite.rs` asserts.
+//!
+//! ## Panic-containment contract
+//!
+//! [`parallel_map_indexed`] is fail-fast: a panicking item is re-raised
+//! (`resume_unwind`) on the calling thread and aborts the whole map.
+//! [`parallel_try_map`] is the containment variant: each item runs under
+//! `catch_unwind`, a panicking item yields its own `Err(`[`ItemPanic`]`)`
+//! while every other item still completes — this is what the sharded
+//! gradients and coordinator sweeps use so one poisoned cell degrades
+//! only itself. The thread count comes from [`num_threads`], which
+//! honors the `SYMPODE_THREADS` env override (clamped to ≥ 1) for
+//! reproducible CI runs and debugging.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Worker threads to use: the machine's available parallelism (≥ 1).
+/// Worker threads to use: the `SYMPODE_THREADS` env override (clamped to
+/// ≥ 1) when set to a parseable value, otherwise the machine's available
+/// parallelism (≥ 1).
 pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("SYMPODE_THREADS") {
+        if let Some(n) = parse_thread_override(&v) {
+            return n;
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parse a `SYMPODE_THREADS` value: whitespace-trimmed non-negative
+/// integer, clamped to ≥ 1. `None` (fall back to auto-detection) when
+/// unparseable.
+fn parse_thread_override(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// One item's contained panic, from [`parallel_try_map`].
+#[derive(Debug, Clone)]
+pub struct ItemPanic {
+    pub index: usize,
+    /// The panic payload's message (`String`/`&str` payloads; a
+    /// placeholder otherwise).
+    pub message: String,
+}
+
+impl std::fmt::Display for ItemPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "item {} panicked: {}", self.index, self.message)
+    }
+}
+
+impl std::error::Error for ItemPanic {}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic payload>".to_string())
+}
+
+/// Run `f` under `catch_unwind`, mapping a panic to its message. The
+/// single-item containment primitive behind [`parallel_try_map`], also
+/// usable directly by serial drivers that need the same contract.
+pub fn contain_panic<R>(f: impl FnOnce() -> R) -> Result<R, String> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|e| panic_message(&*e))
 }
 
 /// Evaluate `f(i)` for `i in 0..n` across up to [`num_threads`] scoped
@@ -69,6 +126,21 @@ where
     results.into_iter().map(|r| r.expect("parallel_map_indexed missed an index")).collect()
 }
 
+/// [`parallel_map_indexed`] with per-item panic containment: item `i`'s
+/// panic becomes `Err(ItemPanic { index: i, .. })` in slot `i` while all
+/// other items run to completion. Results are in index order; with a
+/// deterministic `f` the output is identical to running serially under
+/// [`contain_panic`].
+pub fn parallel_try_map<R, F>(n: usize, f: F) -> Vec<Result<R, ItemPanic>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    parallel_map_indexed(n, |i| {
+        contain_panic(|| f(i)).map_err(|message| ItemPanic { index: i, message })
+    })
+}
+
 /// Split `n` items into `shards` contiguous `(start, end)` ranges of
 /// near-equal size (the first `n % shards` ranges get one extra item).
 /// Empty ranges are never produced; fewer than `shards` ranges are
@@ -93,6 +165,10 @@ pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// Serializes tests that read or write `SYMPODE_THREADS`.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn matches_serial_in_order() {
@@ -110,11 +186,11 @@ mod tests {
 
     #[test]
     fn uses_multiple_threads_when_available() {
+        let _guard = ENV_LOCK.lock().unwrap();
         if num_threads() < 2 {
             return; // single-core runner: nothing to assert
         }
         use std::collections::HashSet;
-        use std::sync::Mutex;
         let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
         parallel_map_indexed(64, |_| {
             seen.lock().unwrap().insert(std::thread::current().id());
@@ -155,5 +231,69 @@ mod tests {
             }
             i
         });
+    }
+
+    #[test]
+    fn parse_thread_override_clamps_and_rejects() {
+        assert_eq!(parse_thread_override("3"), Some(3));
+        assert_eq!(parse_thread_override(" 8 "), Some(8));
+        assert_eq!(parse_thread_override("0"), Some(1)); // clamped to ≥ 1
+        assert_eq!(parse_thread_override("1"), Some(1));
+        assert_eq!(parse_thread_override(""), None);
+        assert_eq!(parse_thread_override("auto"), None);
+        assert_eq!(parse_thread_override("-2"), None);
+    }
+
+    #[test]
+    fn env_override_controls_num_threads() {
+        let _guard = ENV_LOCK.lock().unwrap();
+        let prev = std::env::var("SYMPODE_THREADS").ok();
+        let default = {
+            std::env::remove_var("SYMPODE_THREADS");
+            num_threads()
+        };
+        assert!(default >= 1);
+
+        std::env::set_var("SYMPODE_THREADS", "3");
+        assert_eq!(num_threads(), 3);
+        std::env::set_var("SYMPODE_THREADS", "0"); // clamped, never 0 workers
+        assert_eq!(num_threads(), 1);
+        std::env::set_var("SYMPODE_THREADS", "not-a-number"); // fall back
+        assert_eq!(num_threads(), default);
+        std::env::remove_var("SYMPODE_THREADS");
+        assert_eq!(num_threads(), default);
+
+        match prev {
+            Some(v) => std::env::set_var("SYMPODE_THREADS", v),
+            None => std::env::remove_var("SYMPODE_THREADS"),
+        }
+    }
+
+    #[test]
+    fn try_map_contains_panics_to_their_own_item() {
+        let results = parallel_try_map(8, |i| {
+            if i == 3 {
+                panic!("cell 3 exploded");
+            }
+            i * 2
+        });
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            if i == 3 {
+                let p = r.as_ref().unwrap_err();
+                assert_eq!(p.index, 3);
+                assert!(p.message.contains("cell 3 exploded"), "{}", p.message);
+                assert!(p.to_string().contains("item 3 panicked"), "{p}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn contain_panic_passes_values_through() {
+        assert_eq!(contain_panic(|| 41 + 1), Ok(42));
+        let msg = contain_panic(|| -> u8 { panic!("kaboom {}", 7) }).unwrap_err();
+        assert!(msg.contains("kaboom 7"), "{msg}");
     }
 }

@@ -4,8 +4,142 @@
 //! Tests express "for all" properties as seeded sweeps: a [`Sweep`] runs a
 //! closure over `n` reproducible random cases and reports the failing seed
 //! on panic, so failures can be replayed by constructing `Rng::new(seed)`.
+//!
+//! [`FaultyOde`] is the deterministic fault-injection harness of the
+//! robustness suite: it wraps any [`OdeSystem`] and corrupts (or panics
+//! in) exactly the N-th evaluation, so divergence handling can be tested
+//! reproducibly through every solver and gradient method.
 
+use crate::ode::{OdeSystem, Trace};
 use crate::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// What [`FaultyOde`] injects at the chosen evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Write `NaN` into one output component.
+    Nan,
+    /// Write `+∞` into one output component.
+    Inf,
+    /// Panic mid-evaluation (tests panic containment).
+    Panic,
+}
+
+/// Deterministic fault injector: delegates to `inner`, corrupting the
+/// `fault_at`-th evaluation (0-based, counting `eval` and `eval_traced`
+/// together, across the forward and backward passes). With
+/// `fault_at = usize::MAX` the wrapper is transparent — outputs are
+/// bitwise identical to `inner`'s, which the robustness suite asserts.
+pub struct FaultyOde<S: OdeSystem> {
+    pub inner: S,
+    pub kind: FaultKind,
+    /// Index of the evaluation to corrupt.
+    pub fault_at: usize,
+    /// Output component to corrupt (ignored for [`FaultKind::Panic`]).
+    pub bad_index: usize,
+    calls: AtomicUsize,
+}
+
+impl<S: OdeSystem> FaultyOde<S> {
+    pub fn new(inner: S, kind: FaultKind, fault_at: usize) -> FaultyOde<S> {
+        FaultyOde { inner, kind, fault_at, bad_index: 0, calls: AtomicUsize::new(0) }
+    }
+
+    /// Seeded constructor: the faulted evaluation index is drawn
+    /// reproducibly from `0..max_eval`.
+    pub fn seeded(inner: S, kind: FaultKind, seed: u64, max_eval: usize) -> FaultyOde<S> {
+        let fault_at = Rng::new(seed).below(max_eval);
+        FaultyOde::new(inner, kind, fault_at)
+    }
+
+    /// Evaluations observed so far.
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Reset the evaluation counter (e.g. between gradient calls).
+    pub fn reset(&self) {
+        self.calls.store(0, Ordering::Relaxed);
+    }
+
+    fn maybe_inject(&self, out: &mut [f64]) {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if n != self.fault_at {
+            return;
+        }
+        match self.kind {
+            FaultKind::Nan => out[self.bad_index.min(out.len() - 1)] = f64::NAN,
+            FaultKind::Inf => out[self.bad_index.min(out.len() - 1)] = f64::INFINITY,
+            FaultKind::Panic => panic!("FaultyOde: injected panic at evaluation {n}"),
+        }
+    }
+}
+
+impl<S: OdeSystem> OdeSystem for FaultyOde<S> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn eval(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) {
+        self.inner.eval(t, x, params, out);
+        self.maybe_inject(out);
+    }
+
+    fn eval_traced(&self, t: f64, x: &[f64], params: &[f64], out: &mut [f64]) -> Box<dyn Trace> {
+        let tr = self.inner.eval_traced(t, x, params, out);
+        self.maybe_inject(out);
+        tr
+    }
+
+    fn vjp_traced(
+        &self,
+        trace: &dyn Trace,
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        self.inner.vjp_traced(trace, params, lam, g_x, g_p)
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        self.inner.trace_bytes()
+    }
+
+    // The VJP entry points delegate directly (rather than through the
+    // trait defaults) so the wrapper stays bitwise-transparent for
+    // backends that override the fused path. Injection therefore targets
+    // `eval`/`eval_traced` calls — the forward integrations — which is
+    // where divergence enters a training run.
+    fn vjp(
+        &self,
+        t: f64,
+        x: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+    ) {
+        self.inner.vjp(t, x, params, lam, g_x, g_p)
+    }
+
+    fn vjp_fused_ws(
+        &self,
+        t: f64,
+        x: &[f64],
+        params: &[f64],
+        lam: &[f64],
+        g_x: &mut [f64],
+        g_p: &mut [f64],
+        ws: &mut crate::workspace::Workspace,
+    ) -> u64 {
+        self.inner.vjp_fused_ws(t, x, params, lam, g_x, g_p, ws)
+    }
+}
 
 /// Runs a property over `n` seeded cases; on failure the panic message
 /// contains the case index and seed for replay.

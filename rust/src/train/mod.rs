@@ -11,10 +11,25 @@
 //! workspace — nothing shared), and the shard results are merged in shard
 //! order, so the parallel result is bit-identical to running the same
 //! shards serially.
+//!
+//! ## Failure handling
+//!
+//! Shard drivers run every cell under the panic-containment contract of
+//! [`crate::parallel::parallel_try_map`]: a panicking shard surfaces as
+//! an error naming that shard while the other shards complete, and solver
+//! failures arrive as phase-tagged messages carrying the typed
+//! [`crate::integrate::SolveFailure`] text. On top of that,
+//! [`RecoveryPolicy`] + [`CnfTrainer::train_step_recovering`] make
+//! divergence a recoverable event: a failed step is retried a bounded
+//! number of times from a deterministically halved step size (same RNG
+//! draw, same batch), and if every attempt fails the batch is skipped
+//! with the trainer state (parameters, optimizer, config, RNG) restored
+//! exactly — so the subsequent steps are bit-for-bit the ones an
+//! unfaulted run would have taken.
 
 use crate::adjoint::{method_by_name, GradResult, GradientMethod};
 use crate::cnf::{CnfNllLoss, CnfSystem, Dataset, TraceEstimator};
-use crate::integrate::SolverConfig;
+use crate::integrate::{SolverConfig, StepMode};
 use crate::nn::{Adam, Optimizer};
 use crate::ode::losses::{LinearLoss, MseLoss, ScaledLoss, SumLoss};
 use crate::ode::{Loss, NativeMlpSystem, OdeSystem};
@@ -161,7 +176,15 @@ impl CnfTrainer {
         let mut z = self.augment(x_batch);
         for i in 0..m {
             inputs.push(z.clone());
-            let sol = crate::integrate::solve_ivp(&self.stack[i], &self.params[i], &z, 0.0, self.t1, &self.cfg);
+            let sol = crate::integrate::try_solve_ivp(
+                &self.stack[i],
+                &self.params[i],
+                &z,
+                0.0,
+                self.t1,
+                &self.cfg,
+            )
+            .map_err(|e| anyhow::anyhow!("cnf forward chain (component {i}): {e}"))?;
             z = sol.final_state().to_vec();
         }
 
@@ -215,6 +238,99 @@ impl CnfTrainer {
             StackStats::aggregate(&flat, graph_retaining, start.elapsed().as_secs_f64());
         stats.loss = final_loss;
         Ok(stats)
+    }
+
+    /// [`CnfTrainer::train_step`] under a [`RecoveryPolicy`]: failed (or
+    /// panicking) steps are retried deterministically from a halved step
+    /// size, and when every attempt fails the batch is skipped with the
+    /// trainer state restored bit-for-bit.
+    ///
+    /// Determinism contract: each retry replays the *same* RNG state
+    /// (`rng` is snapshotted on entry), so the only difference between
+    /// attempts is the halved step; on skip, parameters, optimizer
+    /// states, solver config, and `rng` are restored exactly, making the
+    /// subsequent training trajectory identical to one that never saw
+    /// the poisoned batch. A healthy step is bitwise identical to
+    /// calling [`CnfTrainer::train_step`] directly.
+    pub fn train_step_recovering(
+        &mut self,
+        x_batch: &[f64],
+        method: &dyn GradientMethod,
+        rng: &mut Rng,
+        policy: &RecoveryPolicy,
+    ) -> anyhow::Result<StepOutcome> {
+        let params0 = self.params.clone();
+        let opts0 = self.opts.clone();
+        let cfg0 = self.cfg.clone();
+        let rng0 = rng.clone();
+        let mut last_err = String::new();
+        for attempt in 0..=policy.max_retries {
+            if attempt > 0 {
+                // deterministic restart: same randomness, halved step
+                *rng = rng0.clone();
+                halve_initial_step(&mut self.cfg.mode, self.t1);
+            }
+            match crate::parallel::contain_panic(|| self.train_step(x_batch, method, rng)) {
+                Ok(Ok(stats)) => {
+                    self.cfg = cfg0.clone();
+                    return Ok(StepOutcome::Stepped { stats, retries: attempt });
+                }
+                Ok(Err(e)) => last_err = e.to_string(),
+                Err(msg) => last_err = format!("step panicked: {msg}"),
+            }
+            // failed attempt: roll back any partial mutation
+            self.params = params0.clone();
+            self.opts = opts0.clone();
+        }
+        self.cfg = cfg0;
+        *rng = rng0;
+        if policy.skip_on_failure {
+            Ok(StepOutcome::Skipped { attempts: policy.max_retries + 1, error: last_err })
+        } else {
+            anyhow::bail!(
+                "training step failed after {} attempts: {last_err}",
+                policy.max_retries + 1
+            )
+        }
+    }
+}
+
+/// Bounded-retry policy for [`CnfTrainer::train_step_recovering`].
+#[derive(Debug, Clone)]
+pub struct RecoveryPolicy {
+    /// Retries after the first failed attempt (each from a halved step).
+    pub max_retries: usize,
+    /// On exhaustion: skip the batch (`true`, restoring trainer state
+    /// exactly) or propagate the error (`false`).
+    pub skip_on_failure: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy { max_retries: 1, skip_on_failure: true }
+    }
+}
+
+/// What a recovering training step did.
+#[derive(Debug)]
+pub enum StepOutcome {
+    /// The step applied an update (possibly after `retries` restarts).
+    Stepped { stats: StackStats, retries: usize },
+    /// Every attempt failed; the batch was skipped and the trainer state
+    /// restored exactly. `error` is the last attempt's failure text.
+    Skipped { attempts: usize, error: String },
+}
+
+/// Halve the step size of a [`StepMode`] in place: the deterministic
+/// restart knob of [`RecoveryPolicy`]. For adaptive modes with no
+/// explicit `h0`, the halving starts from the integration `span`.
+pub fn halve_initial_step(mode: &mut StepMode, span: f64) {
+    match mode {
+        StepMode::Fixed { h } => *h *= 0.5,
+        StepMode::Adaptive { h0, .. } => {
+            let current = h0.unwrap_or(span);
+            *h0 = Some(0.5 * current);
+        }
     }
 }
 
@@ -310,14 +426,38 @@ impl ShardedMlpGradient {
                 .ok_or_else(|| anyhow::anyhow!("unknown gradient method {method:?}"))?;
             m.gradient(&sys, params, &x0[a * d..b * d], t0, t1, cfg, &SumLoss)
         };
-        let results: Vec<anyhow::Result<GradResult>> = if parallel {
-            crate::parallel::parallel_map_indexed(ranges.len(), cell)
-        } else {
-            (0..ranges.len()).map(cell).collect()
-        };
-        results.into_iter().collect()
+        run_shards_contained(ranges.len(), parallel, cell)
     }
+}
 
+/// Drive shard cells with panic containment: a panicking cell becomes an
+/// error naming its shard (while, in the parallel path, every other cell
+/// still runs to completion via [`crate::parallel::parallel_try_map`]).
+/// The serial path applies the identical containment per cell, so both
+/// paths fail with the same message for the same fault.
+fn run_shards_contained(
+    n: usize,
+    parallel: bool,
+    cell: impl Fn(usize) -> anyhow::Result<GradResult> + Sync,
+) -> anyhow::Result<Vec<GradResult>> {
+    let results: Vec<anyhow::Result<GradResult>> = if parallel {
+        crate::parallel::parallel_try_map(n, &cell)
+            .into_iter()
+            .enumerate()
+            .map(|(si, r)| match r {
+                Ok(res) => res,
+                Err(p) => Err(anyhow::anyhow!("gradient shard {si} panicked: {}", p.message)),
+            })
+            .collect()
+    } else {
+        (0..n)
+            .map(|si| match crate::parallel::contain_panic(|| cell(si)) {
+                Ok(res) => res,
+                Err(msg) => Err(anyhow::anyhow!("gradient shard {si} panicked: {msg}")),
+            })
+            .collect()
+    };
+    results.into_iter().collect()
 }
 
 /// Merge per-shard results in shard order: losses and parameter
@@ -449,12 +589,7 @@ impl<S: ShardSpec> ShardedGradient<S> {
                 .ok_or_else(|| anyhow::anyhow!("unknown gradient method {method:?}"))?;
             m.gradient(sys.as_ref(), params, &x0[a * rd..b * rd], t0, t1, cfg, loss.as_ref())
         };
-        let results: Vec<anyhow::Result<GradResult>> = if parallel {
-            crate::parallel::parallel_map_indexed(ranges.len(), cell)
-        } else {
-            (0..ranges.len()).map(cell).collect()
-        };
-        results.into_iter().collect()
+        run_shards_contained(ranges.len(), parallel, cell)
     }
 }
 

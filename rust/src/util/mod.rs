@@ -9,6 +9,8 @@
 //! - [`json`]: a minimal JSON value type with writer and parser, used for
 //!   experiment results and the artifact manifest.
 //! - [`stats`]: medians/means/std-devs for reporting experiment rows.
+//! - [`atomic_write`]: temp-file-then-rename writes for result/bench
+//!   artifacts, so a crash mid-write never leaves a truncated file.
 
 pub mod json;
 pub mod rng;
@@ -16,3 +18,54 @@ pub mod stats;
 
 pub use json::Json;
 pub use rng::Rng;
+
+use std::path::Path;
+
+/// Write `contents` to `path` atomically: the bytes go to a sibling
+/// temporary file first and are renamed into place, so readers (and
+/// post-crash inspection) see either the old contents or the new ones,
+/// never a partial write. Parent directories are created as needed.
+pub fn atomic_write(path: impl AsRef<Path>, contents: &str) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        e
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_creates_dirs_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("sympode_aw_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.json");
+
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+
+        atomic_write(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+
+        // no .tmp.* residue next to the target
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp residue: {leftovers:?}");
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,530 @@
+//! Robustness suite: typed solver failures, fault injection through every
+//! gradient method, shard panic containment, and deterministic training
+//! recovery.
+//!
+//! The contract under test, end to end:
+//! - divergence surfaces as a typed [`SolveFailure`] at the step where it
+//!   happens (no step-control wedge), carrying a consistent partial
+//!   trajectory;
+//! - a fault injected by [`FaultyOde`] at the N-th evaluation propagates
+//!   through each gradient method's `Result` as `NonFiniteState`;
+//! - a panicking shard fails only its own cell of a sharded gradient;
+//! - [`RecoveryPolicy`] skips a poisoned batch and leaves the training
+//!   trajectory bit-for-bit identical to one that never saw it;
+//! - the unfaulted paths (try-entry points, transparent `FaultyOde`)
+//!   are bitwise identical to the plain ones.
+
+use sympode::adjoint::method_by_name;
+use sympode::integrate::{
+    solve_ivp, try_solve_ivp, SolveFailure, SolverConfig, StepMode,
+};
+use sympode::ode::analytic::Harmonic;
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{Loss, NativeMlpSystem, OdeSystem, Trace};
+use sympode::tableau::Tableau;
+use sympode::testkit::{FaultKind, FaultyOde};
+use sympode::train::{
+    halve_initial_step, CnfTrainer, RecoveryPolicy, ShardSpec, ShardedGradient, StepOutcome,
+};
+use sympode::util::Rng;
+
+// ---------------------------------------------------------------------
+// Solver-only test systems (no VJP surface needed)
+// ---------------------------------------------------------------------
+
+/// `x' = x²`: finite-time blow-up at t = 1/x₀. The adaptive controller
+/// keeps the error in check by shrinking `h` toward the singularity, so
+/// the typed failure is a step-size underflow (the state itself stays
+/// finite the whole way down).
+struct Riccati;
+
+impl OdeSystem for Riccati {
+    fn dim(&self) -> usize {
+        1
+    }
+
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    fn eval(&self, _t: f64, x: &[f64], _params: &[f64], out: &mut [f64]) {
+        out[0] = x[0] * x[0];
+    }
+
+    fn eval_traced(&self, _t: f64, _x: &[f64], _p: &[f64], _out: &mut [f64]) -> Box<dyn Trace> {
+        unimplemented!("solver-only test system")
+    }
+
+    fn vjp_traced(&self, _: &dyn Trace, _: &[f64], _: &[f64], _: &mut [f64], _: &mut [f64]) {
+        unimplemented!("solver-only test system")
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Smooth decay that turns into NaN for `t ≥ 0.5` — a mid-interval model
+/// blow-up. Without explicit non-finite detection the adaptive loop would
+/// reject forever (NaN err_norm fails `<= 1.0`) and grind `h` to the
+/// underflow floor; with it, the failure is reported at the step that
+/// first touched `t = 0.5`.
+struct NanAfterHalf;
+
+impl OdeSystem for NanAfterHalf {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn n_params(&self) -> usize {
+        0
+    }
+
+    fn eval(&self, t: f64, x: &[f64], _params: &[f64], out: &mut [f64]) {
+        if t >= 0.5 {
+            out[0] = f64::NAN;
+            out[1] = f64::NAN;
+        } else {
+            out[0] = -x[0];
+            out[1] = -0.5 * x[1];
+        }
+    }
+
+    fn eval_traced(&self, _t: f64, _x: &[f64], _p: &[f64], _out: &mut [f64]) -> Box<dyn Trace> {
+        unimplemented!("solver-only test system")
+    }
+
+    fn vjp_traced(&self, _: &dyn Trace, _: &[f64], _: &[f64], _: &mut [f64], _: &mut [f64]) {
+        unimplemented!("solver-only test system")
+    }
+
+    fn trace_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Every error exit must hand back a coherent partial trajectory.
+fn assert_partial_consistent(err: &sympode::integrate::SolveError) {
+    let p = &err.partial;
+    assert_eq!(p.ts.len(), p.xs.len(), "ts/xs length mismatch");
+    assert!(!p.ts.is_empty(), "partial trajectory lost the initial state");
+    for (t, x) in p.ts.iter().zip(&p.xs) {
+        for (i, v) in x.iter().enumerate() {
+            assert!(v.is_finite(), "partial state at t={t} has non-finite component {i}: {v}");
+        }
+    }
+    assert!(p.stats.nfe >= 1, "failure exit before any evaluation");
+}
+
+// ---------------------------------------------------------------------
+// Typed solver failures
+// ---------------------------------------------------------------------
+
+#[test]
+fn riccati_blowup_reports_step_size_underflow() {
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+    let err = try_solve_ivp(&Riccati, &[], &[1.0], 0.0, 2.0, &cfg)
+        .expect_err("x' = x² must not reach t = 2");
+    match err.failure {
+        SolveFailure::StepSizeUnderflow { t, h, err_norm } => {
+            assert!(t > 0.5 && t < 1.1, "underflow should strike near the t=1 singularity: {t}");
+            assert!(h < 1e-12, "h did not underflow: {h}");
+            assert!(err_norm > 1.0, "underflow exit requires a rejected step");
+        }
+        ref other => panic!("expected StepSizeUnderflow, got {other}"),
+    }
+    assert!(err.failure.to_string().starts_with("StepSizeUnderflow"), "{}", err.failure);
+    assert_partial_consistent(&err);
+    // record mode: one state per accepted step plus the initial state
+    assert_eq!(err.partial.ts.len(), err.partial.stats.n_steps + 1);
+    let last_t = *err.partial.ts.last().unwrap();
+    assert!(last_t < 2.0, "partial trajectory claims to pass the singularity");
+}
+
+#[test]
+fn nan_midway_reports_nonfinite_without_wedging() {
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+    let err = try_solve_ivp(&NanAfterHalf, &[], &[1.0, 1.0], 0.0, 1.0, &cfg)
+        .expect_err("NaN RHS past t = 0.5 must fail");
+    match err.failure {
+        SolveFailure::NonFiniteState { t, .. } => {
+            assert!(t < 0.5, "failing step must start before the blow-up: {t}");
+        }
+        ref other => panic!("expected NonFiniteState, got {other}"),
+    }
+    // The wedge regression: before explicit detection this exact setup
+    // spiraled through rejected steps (NaN err_norm) down to the
+    // underflow floor. Detection fires on the first poisoned trial step.
+    assert!(
+        err.partial.stats.n_rejected <= 3,
+        "step control wedged: {} rejections before the typed failure",
+        err.partial.stats.n_rejected
+    );
+    assert_partial_consistent(&err);
+}
+
+#[test]
+fn nan_midway_fixed_mode_fails_at_the_poisoned_step() {
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    let err = try_solve_ivp(&NanAfterHalf, &[], &[1.0, 1.0], 0.0, 1.0, &cfg)
+        .expect_err("fixed-step run must fail too");
+    match err.failure {
+        SolveFailure::NonFiniteState { t, h, .. } => {
+            // the step from 0.25 evaluates its last stage at t = 0.5
+            assert!((t - 0.25).abs() < 1e-12, "wrong failing step: t = {t}");
+            assert!((h - 0.25).abs() < 1e-12);
+        }
+        ref other => panic!("expected NonFiniteState, got {other}"),
+    }
+    assert_eq!(err.partial.ts.len(), 2, "exactly one accepted step before the fault");
+    assert_partial_consistent(&err);
+}
+
+#[test]
+fn nan_at_t0_is_detected_before_stepping() {
+    // f(t0, x0) is already NaN: select_initial_step would still return a
+    // finite h (NaN.min(span) == span), so the slopes must be scanned
+    // directly — the regression this test pins down.
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+    let err = try_solve_ivp(&NanAfterHalf, &[], &[1.0, 1.0], 0.6, 1.0, &cfg)
+        .expect_err("NaN initial slopes must fail immediately");
+    match err.failure {
+        SolveFailure::NonFiniteState { t, h, first_bad_index } => {
+            assert_eq!(t, 0.6);
+            assert_eq!(h, 0.0, "failure precedes any step-size selection");
+            assert_eq!(first_bad_index, 0);
+        }
+        ref other => panic!("expected NonFiniteState, got {other}"),
+    }
+    assert_eq!(err.partial.stats.nfe, 1, "exactly the one poisoned evaluation");
+    assert_eq!(err.partial.ts, vec![0.6]);
+    assert_partial_consistent(&err);
+}
+
+#[test]
+fn max_steps_boundary_is_exact() {
+    let p = vec![3.0];
+    let x0 = [1.0, 0.0];
+    let free_cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+    let free = solve_ivp(&Harmonic, &p, &x0, 0.0, 5.0, &free_cfg);
+    let total = free.stats.n_steps + free.stats.n_rejected;
+    assert!(total > 2, "test needs a multi-step solve");
+
+    let with_max = |max_steps: usize| SolverConfig {
+        tableau: Tableau::dopri5(),
+        mode: StepMode::Adaptive { atol: 1e-8, rtol: 1e-6, h0: None, max_steps },
+    };
+
+    // exactly enough steps: succeeds, bitwise identical to the free run
+    let tight = try_solve_ivp(&Harmonic, &p, &x0, 0.0, 5.0, &with_max(total))
+        .expect("budget of exactly n_steps + n_rejected must suffice");
+    assert_eq!(tight.ts, free.ts);
+    assert_eq!(tight.xs, free.xs);
+    assert_eq!(tight.stats.nfe, free.stats.nfe);
+
+    // one fewer: typed failure naming the budget, consistent partial
+    let err = try_solve_ivp(&Harmonic, &p, &x0, 0.0, 5.0, &with_max(total - 1))
+        .expect_err("one step short must fail");
+    match err.failure {
+        SolveFailure::MaxStepsExceeded { max_steps, t, .. } => {
+            assert_eq!(max_steps, total - 1);
+            assert!(t < 5.0);
+        }
+        ref other => panic!("expected MaxStepsExceeded, got {other}"),
+    }
+    assert_partial_consistent(&err);
+    assert!(err.partial.stats.n_steps + err.partial.stats.n_rejected <= total - 1);
+    // the partial trajectory is a prefix of the free run
+    assert_eq!(err.partial.ts, free.ts[..err.partial.ts.len()]);
+}
+
+#[test]
+#[should_panic(expected = "NonFiniteState")]
+fn panicking_wrapper_names_the_failure_variant() {
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6);
+    solve_ivp(&NanAfterHalf, &[], &[1.0, 1.0], 0.0, 1.0, &cfg);
+}
+
+#[test]
+fn try_entry_points_match_plain_solves_bitwise() {
+    let p = vec![2.0];
+    let x0 = [1.0, 0.0];
+    let configs = [
+        SolverConfig::fixed(Tableau::rk4(), 0.05),
+        SolverConfig::fixed(Tableau::dopri5(), 0.1),
+        SolverConfig::adaptive(Tableau::dopri5(), 1e-8, 1e-6),
+        SolverConfig::adaptive(Tableau::dopri8(), 1e-8, 1e-6),
+    ];
+    for cfg in configs {
+        let plain = solve_ivp(&Harmonic, &p, &x0, 0.0, 3.0, &cfg);
+        let tried = try_solve_ivp(&Harmonic, &p, &x0, 0.0, 3.0, &cfg).unwrap();
+        assert_eq!(plain.ts, tried.ts, "{}", cfg.tableau.name);
+        assert_eq!(plain.xs, tried.xs, "{}", cfg.tableau.name);
+        assert_eq!(plain.stats.n_steps, tried.stats.n_steps);
+        assert_eq!(plain.stats.n_rejected, tried.stats.n_rejected);
+        assert_eq!(plain.stats.nfe, tried.stats.nfe);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fault injection through the gradient methods
+// ---------------------------------------------------------------------
+
+const ALL_METHODS: [&str; 7] =
+    ["adjoint", "backprop", "baseline", "aca", "symplectic", "segment", "mali"];
+
+fn mlp() -> NativeMlpSystem {
+    NativeMlpSystem::with_batch(&[4, 16, 4], 2, 0)
+}
+
+#[test]
+fn transparent_faulty_wrapper_leaves_gradients_bitwise_identical() {
+    let p = mlp().init_params();
+    let x0 = Rng::new(7).normal_vec(mlp().dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    for name in ALL_METHODS {
+        let m = method_by_name(name).unwrap();
+        let clean = m.gradient(&mlp(), &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        let faulty = FaultyOde::new(mlp(), FaultKind::Nan, usize::MAX);
+        let wrapped = m.gradient(&faulty, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+        assert!(faulty.calls() > 0, "{name}: wrapper never saw an evaluation");
+        assert_eq!(clean.loss, wrapped.loss, "{name}: loss differs");
+        assert_eq!(clean.x_final, wrapped.x_final, "{name}: x_final differs");
+        assert_eq!(clean.grad_x0, wrapped.grad_x0, "{name}: grad_x0 differs");
+        assert_eq!(clean.grad_params, wrapped.grad_params, "{name}: grad_params differs");
+    }
+}
+
+#[test]
+fn injected_nan_surfaces_as_nonfinite_through_every_method() {
+    let p = mlp().init_params();
+    let x0 = Rng::new(7).normal_vec(mlp().dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    for name in ALL_METHODS {
+        let m = method_by_name(name).unwrap();
+        let faulty = FaultyOde::new(mlp(), FaultKind::Nan, 3);
+        let err = m
+            .gradient(&faulty, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+            .expect_err(&format!("{name}: NaN at evaluation 3 must fail"));
+        let msg = err.to_string();
+        assert!(msg.contains("NonFiniteState"), "{name}: untyped failure: {msg}");
+        assert!(faulty.calls() >= 4, "{name}: fault was never reached ({} calls)", faulty.calls());
+    }
+}
+
+#[test]
+fn injected_inf_surfaces_as_nonfinite() {
+    let p = mlp().init_params();
+    let x0 = Rng::new(7).normal_vec(mlp().dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    let faulty = FaultyOde::new(mlp(), FaultKind::Inf, 3);
+    let err = method_by_name("symplectic")
+        .unwrap()
+        .gradient(&faulty, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+        .expect_err("Inf at evaluation 3 must fail");
+    assert!(err.to_string().contains("NonFiniteState"), "{err}");
+}
+
+#[test]
+fn seeded_fault_is_reproducible_and_counts_evaluations() {
+    let a = FaultyOde::seeded(mlp(), FaultKind::Nan, 9, 10);
+    let b = FaultyOde::seeded(mlp(), FaultKind::Nan, 9, 10);
+    assert_eq!(a.fault_at, b.fault_at, "same seed must pick the same evaluation");
+    assert!(a.fault_at < 10);
+
+    let p = mlp().init_params();
+    let x0 = Rng::new(7).normal_vec(mlp().dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    let err = method_by_name("symplectic")
+        .unwrap()
+        .gradient(&a, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)
+        .expect_err("an early fault must abort the forward solve");
+    assert!(err.to_string().contains("NonFiniteState"), "{err}");
+    assert!(a.calls() > a.fault_at);
+    a.reset();
+    assert_eq!(a.calls(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Shard panic containment
+// ---------------------------------------------------------------------
+
+/// [`ShardSpec`] over the batched MLP vector field where the shard
+/// containing `poison_row` panics on its first evaluation.
+struct PanickyShardSpec {
+    dims: Vec<usize>,
+    batch: usize,
+    poison_row: usize,
+}
+
+impl ShardSpec for PanickyShardSpec {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn row_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    fn system(&self, a: usize, b: usize) -> Box<dyn OdeSystem> {
+        let sys = NativeMlpSystem::with_batch(&self.dims, b - a, 0);
+        if (a..b).contains(&self.poison_row) {
+            Box::new(FaultyOde::new(sys, FaultKind::Panic, 0))
+        } else {
+            Box::new(sys)
+        }
+    }
+
+    fn loss(&self, _a: usize, _b: usize) -> Box<dyn Loss> {
+        Box::new(SumLoss)
+    }
+}
+
+#[test]
+fn panicking_shard_fails_only_its_own_cell() {
+    let dims = vec![4usize, 16, 4];
+    let batch = 8;
+    let p = NativeMlpSystem::with_batch(&dims, batch, 0).init_params();
+    let x0 = Rng::new(3).normal_vec(batch * dims[0]);
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+
+    // poison_row 4 lands in shard 2 of four 2-row shards
+    let spec = PanickyShardSpec { dims: dims.clone(), batch, poison_row: 4 };
+    let driver = ShardedGradient::with_shards(spec, 4);
+    let err = driver
+        .gradient("symplectic", &p, &x0, 0.0, 1.0, &cfg)
+        .expect_err("the poisoned shard must fail the merge");
+    let msg = err.to_string();
+    assert!(msg.contains("gradient shard 2 panicked"), "wrong cell blamed: {msg}");
+    assert!(msg.contains("injected panic"), "panic payload lost: {msg}");
+
+    // the serial path blames the identical cell with the identical text
+    let err_serial = driver
+        .gradient_serial("symplectic", &p, &x0, 0.0, 1.0, &cfg)
+        .expect_err("serial run must fail the same way");
+    assert_eq!(err_serial.to_string(), msg);
+
+    // an unpoisoned spec completes, parallel bitwise equal to serial
+    let healthy = PanickyShardSpec { dims, batch, poison_row: usize::MAX };
+    let driver = ShardedGradient::with_shards(healthy, 4);
+    let par = driver.gradient("symplectic", &p, &x0, 0.0, 1.0, &cfg).unwrap();
+    let ser = driver.gradient_serial("symplectic", &p, &x0, 0.0, 1.0, &cfg).unwrap();
+    assert_eq!(par.grad_params, ser.grad_params);
+    assert_eq!(par.grad_x0, ser.grad_x0);
+    assert_eq!(par.x_final, ser.x_final);
+    assert_eq!(par.loss, ser.loss);
+}
+
+// ---------------------------------------------------------------------
+// Training recovery
+// ---------------------------------------------------------------------
+
+fn trainer(seed: u64) -> CnfTrainer {
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+    CnfTrainer::new(1, &[2, 8, 2], 8, cfg, seed)
+}
+
+#[test]
+fn recovery_skips_poisoned_batch_and_preserves_the_trajectory() {
+    let spec = sympode::cnf::TabularSpec { name: "tiny", d: 2, m: 1, modes: 2, hidden: 8 };
+    let data = spec.generate(128, 42);
+    let mut data_rng = Rng::new(99);
+    let b0 = data.minibatch(8, &mut data_rng);
+    let b1 = data.minibatch(8, &mut data_rng);
+    let b2 = data.minibatch(8, &mut data_rng);
+    let poisoned = vec![f64::NAN; 8 * 2];
+    let method = method_by_name("symplectic").unwrap();
+    let policy = RecoveryPolicy { max_retries: 1, skip_on_failure: true };
+
+    // run A: the poisoned batch arrives between b1 and b2
+    let mut tr_a = trainer(11);
+    let mut rng_a = Rng::new(5);
+    for batch in [&b0, &b1] {
+        match tr_a.train_step_recovering(batch, method.as_ref(), &mut rng_a, &policy).unwrap() {
+            StepOutcome::Stepped { retries, .. } => assert_eq!(retries, 0),
+            StepOutcome::Skipped { error, .. } => panic!("healthy batch skipped: {error}"),
+        }
+    }
+    match tr_a.train_step_recovering(&poisoned, method.as_ref(), &mut rng_a, &policy).unwrap() {
+        StepOutcome::Skipped { attempts, error } => {
+            assert_eq!(attempts, 2, "max_retries = 1 means two attempts");
+            assert!(error.contains("NonFiniteState"), "untyped skip reason: {error}");
+        }
+        StepOutcome::Stepped { .. } => panic!("NaN batch must not produce an update"),
+    }
+    // the halved-step retries must not leak into the restored config
+    match tr_a.cfg.mode {
+        StepMode::Fixed { h } => assert_eq!(h, 0.25, "config not restored after skip"),
+        _ => unreachable!(),
+    }
+    match tr_a.train_step_recovering(&b2, method.as_ref(), &mut rng_a, &policy).unwrap() {
+        StepOutcome::Stepped { retries, .. } => assert_eq!(retries, 0),
+        StepOutcome::Skipped { error, .. } => panic!("healthy batch skipped: {error}"),
+    }
+
+    // run B: the same stream without the poisoned batch
+    let mut tr_b = trainer(11);
+    let mut rng_b = Rng::new(5);
+    for batch in [&b0, &b1, &b2] {
+        tr_b.train_step(batch, method.as_ref(), &mut rng_b).unwrap();
+    }
+
+    assert_eq!(tr_a.params, tr_b.params, "skip perturbed the training trajectory");
+    assert_eq!(
+        rng_a.next_u64(),
+        rng_b.next_u64(),
+        "skip perturbed the RNG stream"
+    );
+}
+
+#[test]
+fn recovering_step_is_bitwise_identical_to_plain_step_when_healthy() {
+    let spec = sympode::cnf::TabularSpec { name: "tiny", d: 2, m: 1, modes: 2, hidden: 8 };
+    let data = spec.generate(64, 17);
+    let mut data_rng = Rng::new(23);
+    let batch = data.minibatch(8, &mut data_rng);
+    let method = method_by_name("symplectic").unwrap();
+
+    let mut tr_plain = trainer(7);
+    let mut rng_plain = Rng::new(1);
+    let stats_plain = tr_plain.train_step(&batch, method.as_ref(), &mut rng_plain).unwrap();
+
+    let mut tr_rec = trainer(7);
+    let mut rng_rec = Rng::new(1);
+    let outcome = tr_rec
+        .train_step_recovering(&batch, method.as_ref(), &mut rng_rec, &RecoveryPolicy::default())
+        .unwrap();
+    match outcome {
+        StepOutcome::Stepped { stats, retries } => {
+            assert_eq!(retries, 0);
+            assert_eq!(stats.loss, stats_plain.loss);
+        }
+        StepOutcome::Skipped { error, .. } => panic!("healthy step skipped: {error}"),
+    }
+    assert_eq!(tr_plain.params, tr_rec.params);
+    assert_eq!(rng_plain.next_u64(), rng_rec.next_u64());
+}
+
+#[test]
+fn halve_initial_step_halves_both_modes() {
+    let mut fixed = StepMode::Fixed { h: 0.5 };
+    halve_initial_step(&mut fixed, 2.0);
+    match fixed {
+        StepMode::Fixed { h } => assert_eq!(h, 0.25),
+        _ => unreachable!(),
+    }
+
+    let mut adaptive = StepMode::Adaptive { atol: 1e-8, rtol: 1e-6, h0: None, max_steps: 100 };
+    halve_initial_step(&mut adaptive, 2.0);
+    match adaptive {
+        StepMode::Adaptive { h0, .. } => {
+            assert_eq!(h0, Some(1.0), "first halving starts from the span")
+        }
+        _ => unreachable!(),
+    }
+    halve_initial_step(&mut adaptive, 2.0);
+    match adaptive {
+        StepMode::Adaptive { h0, .. } => assert_eq!(h0, Some(0.5)),
+        _ => unreachable!(),
+    }
+}
