@@ -13,7 +13,9 @@
 //!
 //! Timed results are also written to `BENCH_gradient_methods.json`
 //! (`{"results": [{name, median_ns, mean_ns, std_ns, samples}, …],
-//! "simd_backend": "…"}`) so CI can archive them. Pass `--quick` (or set `BENCH_QUICK=1`) to run
+//! "simd_backend": "…", "pool_*": …}`) so CI can archive them; with
+//! `SYMPODE_TRACE=1` a `"telemetry"` summary object is attached and the
+//! trace is flushed to `SYMPODE_TRACE_FILE`. Pass `--quick` (or set `BENCH_QUICK=1`) to run
 //! with the reduced `Bench::quick()` budget — that mode doubles as the
 //! CI smoke test: every audit assertion still runs at full strength.
 
@@ -65,7 +67,7 @@ fn allocs() -> u64 {
     N_ALLOCS.load(Ordering::Relaxed)
 }
 
-fn alloc_audit() {
+fn alloc_audit() -> sympode::workspace::PoolStats {
     println!("\n# allocation audit: one backward adjoint step (dopri5, batch 16)");
     let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
     let p = sys.init_params();
@@ -134,6 +136,12 @@ fn alloc_audit() {
         "warm adjoint_step_ws inner loop must not allocate"
     );
     assert!(ref_allocs > 0, "reference path is the allocating baseline");
+    let pool = ws.pool_stats();
+    println!(
+        "workspace pool: buf takes/misses = {}/{}, tape takes/misses = {}/{}",
+        pool.buf_takes, pool.buf_misses, pool.tape_takes, pool.tape_misses
+    );
+    pool
 }
 
 /// Warm a system's fused stage (eval + vjp_fused_ws) twice, then count
@@ -305,12 +313,20 @@ fn main() {
     }
 
     tape_backend_bench(&b, &mut results);
-    alloc_audit();
+    let pool = alloc_audit();
     tape_backend_audit();
     sharded_parallel(&b, &mut results);
 
     let mut json = results_to_json(&results);
     json.set("simd_backend", backend.name());
+    json.set("pool_buf_takes", pool.buf_takes);
+    json.set("pool_buf_misses", pool.buf_misses);
+    json.set("pool_tape_takes", pool.tape_takes);
+    json.set("pool_tape_misses", pool.tape_misses);
+    if sympode::telemetry::enabled() {
+        json.set("telemetry", sympode::telemetry::summary_json());
+        sympode::telemetry::flush_env_trace();
+    }
     sympode::util::atomic_write("BENCH_gradient_methods.json", &format!("{json}\n")).unwrap();
     println!("\nwrote BENCH_gradient_methods.json ({} results)", results.len());
 }

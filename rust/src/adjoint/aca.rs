@@ -43,8 +43,10 @@ impl GradientMethod for AcaMethod {
         let tab = &cfg.tableau;
 
         // forward: checkpoints only
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("aca: forward integration failed: {e}"))?;
+        drop(fwd_span);
         let n_steps = sol.n_steps();
 
         let loss_val = loss.loss(sol.final_state());
@@ -55,10 +57,12 @@ impl GradientMethod for AcaMethod {
         let mut stats = GradStats {
             n_steps_forward: n_steps,
             nfe_forward: sol.stats.nfe,
+            n_rejected_forward: sol.stats.n_rejected,
             n_steps_backward: n_steps,
             ..Default::default()
         };
 
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let mut ws = Workspace::new();
         let mut k: Vec<Vec<f64>> = Vec::new();
         for n in (0..n_steps).rev() {
@@ -69,6 +73,7 @@ impl GradientMethod for AcaMethod {
             // recompute the step with graphs retained: s tapes live at once
             let (traces, nfe) = rk_stages_traced(sys, params, tab, t_n, &sol.xs[n], h, &mut k);
             stats.nfe_backward += nfe;
+            stats.nfe_reconstruct += nfe;
             let tape_bytes: u64 = traces.iter().map(|t| t.bytes()).sum();
             mem.alloc(MemCategory::Tape, tape_bytes);
 
@@ -85,6 +90,7 @@ impl GradientMethod for AcaMethod {
                 &mut ws,
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
+            stats.nfe_vjp += cost.nfe + cost.nvjp;
             mem.free(MemCategory::Tape, tape_bytes);
             if let Some(i) =
                 first_non_finite(&lam).or_else(|| first_non_finite(&lam_theta))
@@ -96,8 +102,11 @@ impl GradientMethod for AcaMethod {
             }
         }
         mem.free_f64(MemCategory::Checkpoint, dim); // discard x₀
+        drop(bwd_span);
 
         stats.absorb_mem(&mem);
+        crate::telemetry::record_pool(&ws.pool_stats());
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final: sol.final_state().to_vec(),

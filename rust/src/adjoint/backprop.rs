@@ -63,6 +63,20 @@ pub(crate) fn rk_stages_traced(
     (traces, s)
 }
 
+/// Bundle a traced-forward failure into its typed error, folding the
+/// stats into the telemetry solver counters at the one point where they
+/// are still accessible (the `anyhow` shim cannot downcast back to
+/// [`SolveError`] later).
+fn traced_failure(
+    failure: SolveFailure,
+    ts: Vec<f64>,
+    xs: Vec<Vec<f64>>,
+    stats: SolveStats,
+) -> anyhow::Error {
+    crate::telemetry::record_solve(&stats, true);
+    SolveError { failure, partial: Solution { ts, xs, stats } }.into()
+}
+
 /// Forward integration retaining the whole computation graph: every
 /// accepted step keeps its `s` traces alive (registered as `Tape` memory)
 /// until the backward pass consumes them.
@@ -109,15 +123,12 @@ pub(crate) fn traced_forward(
                 stats.nfe += nfe;
                 let x_new = rk_combine(tab, &x, h_signed, &k);
                 if let Some(bad) = first_non_finite(&x_new) {
-                    return Err(SolveError {
-                        failure: SolveFailure::NonFiniteState {
-                            t,
-                            h: h_signed,
-                            first_bad_index: bad,
-                        },
-                        partial: Solution { ts, xs, stats },
-                    }
-                    .into());
+                    return Err(traced_failure(
+                        SolveFailure::NonFiniteState { t, h: h_signed, first_bad_index: bad },
+                        ts,
+                        xs,
+                        stats,
+                    ));
                 }
                 records.push(retain_step(t, h_signed, traces, mem));
                 t += h_signed;
@@ -136,11 +147,12 @@ pub(crate) fn traced_forward(
             // directly — they do not make select_initial_step's h
             // non-finite.
             if let Some(bad) = first_non_finite(&f0) {
-                return Err(SolveError {
-                    failure: SolveFailure::NonFiniteState { t: t0, h: 0.0, first_bad_index: bad },
-                    partial: Solution { ts, xs, stats },
-                }
-                .into());
+                return Err(traced_failure(
+                    SolveFailure::NonFiniteState { t: t0, h: 0.0, first_bad_index: bad },
+                    ts,
+                    xs,
+                    stats,
+                ));
             }
             let mut h = match h0 {
                 Some(h) => h,
@@ -150,22 +162,24 @@ pub(crate) fn traced_forward(
                 ),
             };
             if !h.is_finite() {
-                return Err(SolveError {
-                    failure: SolveFailure::NonFiniteState { t: t0, h, first_bad_index: 0 },
-                    partial: Solution { ts, xs, stats },
-                }
-                .into());
+                return Err(traced_failure(
+                    SolveFailure::NonFiniteState { t: t0, h, first_bad_index: 0 },
+                    ts,
+                    xs,
+                    stats,
+                ));
             }
             const SAFETY: f64 = 0.9;
             const MIN_FACTOR: f64 = 0.2;
             const MAX_FACTOR: f64 = 10.0;
             while (t - t1) * direction < 0.0 {
                 if stats.n_steps + stats.n_rejected >= max_steps {
-                    return Err(SolveError {
-                        failure: SolveFailure::MaxStepsExceeded { max_steps, t, h },
-                        partial: Solution { ts, xs, stats },
-                    }
-                    .into());
+                    return Err(traced_failure(
+                        SolveFailure::MaxStepsExceeded { max_steps, t, h },
+                        ts,
+                        xs,
+                        stats,
+                    ));
                 }
                 if (t + direction * h - t1) * direction > 0.0 {
                     h = (t1 - t).abs();
@@ -201,15 +215,12 @@ pub(crate) fn traced_forward(
                 // the underflow floor).
                 if !err_norm_v.is_finite() || first_non_finite(&x_new).is_some() {
                     let bad = first_non_finite(&x_new).unwrap_or(0);
-                    return Err(SolveError {
-                        failure: SolveFailure::NonFiniteState {
-                            t,
-                            h: h_signed,
-                            first_bad_index: bad,
-                        },
-                        partial: Solution { ts, xs, stats },
-                    }
-                    .into());
+                    return Err(traced_failure(
+                        SolveFailure::NonFiniteState { t, h: h_signed, first_bad_index: bad },
+                        ts,
+                        xs,
+                        stats,
+                    ));
                 }
 
                 if err_norm_v <= 1.0 {
@@ -233,16 +244,18 @@ pub(crate) fn traced_forward(
                         (SAFETY * err_norm_v.powf(-1.0 / tab.order as f64)).max(MIN_FACTOR);
                     h *= factor;
                     if h < 1e-13 * span {
-                        return Err(SolveError {
-                            failure: SolveFailure::StepSizeUnderflow { t, h, err_norm: err_norm_v },
-                            partial: Solution { ts, xs, stats },
-                        }
-                        .into());
+                        return Err(traced_failure(
+                            SolveFailure::StepSizeUnderflow { t, h, err_norm: err_norm_v },
+                            ts,
+                            xs,
+                            stats,
+                        ));
                     }
                 }
             }
         }
     }
+    crate::telemetry::record_solve(&stats, false);
     Ok((Solution { ts, xs, stats }, records))
 }
 
@@ -276,6 +289,7 @@ pub(crate) fn backward_over_records(
             &mut ws,
         );
         stats.nfe_backward += cost.nfe + cost.nvjp;
+        stats.nfe_vjp += cost.nfe + cost.nvjp;
         stats.n_steps_backward += 1;
         mem.free(MemCategory::Tape, rec.tape_bytes);
         if let Some(i) = first_non_finite(lam) {
@@ -315,8 +329,10 @@ impl GradientMethod for BackpropMethod {
         loss: &dyn Loss,
     ) -> anyhow::Result<GradResult> {
         let mem = MemTracker::new();
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("backprop: forward integration failed: {e}"))?;
+        drop(fwd_span);
 
         let loss_val = loss.loss(sol.final_state());
         let mut lam = vec![0.0; sys.dim()];
@@ -326,8 +342,10 @@ impl GradientMethod for BackpropMethod {
         let mut stats = GradStats {
             n_steps_forward: sol.n_steps(),
             nfe_forward: sol.stats.nfe,
+            n_rejected_forward: sol.stats.n_rejected,
             ..Default::default()
         };
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         backward_over_records(
             sys,
             params,
@@ -339,10 +357,12 @@ impl GradientMethod for BackpropMethod {
             &mut stats,
         )
         .map_err(|e| anyhow::anyhow!("backprop: {e}"))?;
+        drop(bwd_span);
         // trajectory accounting released with the graph
         mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
 
         stats.absorb_mem(&mem);
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final: sol.final_state().to_vec(),
@@ -376,20 +396,29 @@ impl GradientMethod for BaselineCheckpoint {
         let mem = MemTracker::new();
         // the training forward pass: graphs discarded, only x₀ kept
         mem.alloc_f64(MemCategory::Checkpoint, sys.dim()); // the x₀ checkpoint
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let fwd = try_solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("baseline: forward integration failed: {e}"))?;
+        drop(fwd_span);
         let loss_val = loss.loss(fwd.final_state());
 
-        // gradient time: re-solve with graph retention, then backprop
+        // gradient time: re-solve with graph retention, then backprop.
+        // The re-solve counts as forward work (it reproduces the forward
+        // trajectory, not a reconstruction inside the backward recursion),
+        // so both passes merge into the forward stats.
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let (sol, records) = traced_forward(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("baseline: gradient re-solve failed: {e}"))?;
         let mut lam = vec![0.0; sys.dim()];
         loss.grad(sol.final_state(), &mut lam);
         let mut lam_theta = vec![0.0; sys.n_params()];
 
+        let mut fwd_stats = fwd.stats.clone();
+        fwd_stats.merge(&sol.stats);
         let mut stats = GradStats {
             n_steps_forward: fwd.stats.n_steps,
-            nfe_forward: fwd.stats.nfe + sol.stats.nfe,
+            nfe_forward: fwd_stats.nfe,
+            n_rejected_forward: fwd_stats.n_rejected,
             ..Default::default()
         };
         backward_over_records(
@@ -403,10 +432,12 @@ impl GradientMethod for BaselineCheckpoint {
             &mut stats,
         )
         .map_err(|e| anyhow::anyhow!("baseline: {e}"))?;
+        drop(bwd_span);
         mem.free(MemCategory::Checkpoint, (sol.xs.len() * sys.dim() * 8) as u64);
         mem.free_f64(MemCategory::Checkpoint, sys.dim());
 
         stats.absorb_mem(&mem);
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final: sol.final_state().to_vec(),

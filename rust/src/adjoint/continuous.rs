@@ -138,8 +138,10 @@ impl GradientMethod for ContinuousAdjoint {
         let p = sys.n_params();
 
         // forward: no trajectory recorded — only x(T) is kept
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let fwd = try_solve_ivp_final(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("continuous adjoint: forward integration failed: {e}"))?;
+        drop(fwd_span);
         mem.alloc_f64(MemCategory::Checkpoint, d); // the retained x(T)
         let x_final = fwd.final_state().to_vec();
         let loss_val = loss.loss(&x_final);
@@ -162,23 +164,33 @@ impl GradientMethod for ContinuousAdjoint {
                 },
             },
         };
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let bwd = try_solve_ivp_final(&aug, &[], &z, t1, t0, &back_cfg, &mem).map_err(|e| {
             anyhow::anyhow!("continuous adjoint: backward integration failed: {e}")
         })?;
+        drop(bwd_span);
         mem.free_f64(MemCategory::Checkpoint, d);
 
         let zf = bwd.final_state();
         let grad_x0 = zf[d..2 * d].to_vec();
         let grad_params = zf[2 * d..].to_vec();
 
+        // every augmented-system evaluation is a traced forward + VJP
+        // pair, so the whole backward cost is VJP work (there is no
+        // checkpoint reconstruction in the continuous adjoint).
+        let nfe_backward = aug.inner_evals.load(Ordering::Relaxed);
         let mut stats = GradStats {
             n_steps_forward: fwd.stats.n_steps,
             nfe_forward: fwd.stats.nfe,
+            n_rejected_forward: fwd.stats.n_rejected,
             n_steps_backward: bwd.stats.n_steps,
-            nfe_backward: aug.inner_evals.load(Ordering::Relaxed),
+            nfe_backward,
+            n_rejected_backward: bwd.stats.n_rejected,
+            nfe_vjp: nfe_backward,
             ..Default::default()
         };
         stats.absorb_mem(&mem);
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult { loss: loss_val, x_final, grad_x0, grad_params, stats })
     }
 }

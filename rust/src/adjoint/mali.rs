@@ -65,6 +65,7 @@ impl GradientMethod for MaliMethod {
         };
 
         // forward: (x, v) pair only — this is the whole retained state
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         mem.alloc_f64(MemCategory::Checkpoint, 2 * dim);
         let mut x = x0.to_vec();
         let mut v = vec![0.0; dim];
@@ -95,10 +96,12 @@ impl GradientMethod for MaliMethod {
             }
             stats.nfe_forward += 1;
         }
+        drop(fwd_span);
         let x_final = x.clone();
         let loss_val = loss.loss(&x_final);
 
         // backward: reverse each step exactly, then apply its VJP
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let mut g_x = vec![0.0; dim];
         loss.grad(&x_final, &mut g_x);
         let mut g_v = vec![0.0; dim];
@@ -114,11 +117,13 @@ impl GradientMethod for MaliMethod {
                     )
                 })?;
             stats.nfe_backward += 1;
+            stats.nfe_reconstruct += 1;
             // VJP through the step (one transient tape inside)
             let dim_guard =
                 crate::memory::MemGuard::f64s(&mem, MemCategory::Solver, 4 * dim);
             alf_step_vjp_tracked(sys, params, t_n, h, &x_half, &mut g_x, &mut g_v, &mut g_p, &mem);
             stats.nfe_backward += 2;
+            stats.nfe_vjp += 2;
             drop(dim_guard);
         }
 
@@ -126,10 +131,13 @@ impl GradientMethod for MaliMethod {
         let mut jx = vec![0.0; dim];
         tracked_vjp(sys, t0, &x, params, &g_v, &mut jx, &mut g_p, &mem);
         stats.nfe_backward += 2;
+        stats.nfe_vjp += 2;
         crate::linalg::axpy(1.0, &jx, &mut g_x);
+        drop(bwd_span);
 
         mem.free_f64(MemCategory::Checkpoint, 2 * dim);
         stats.absorb_mem(&mem);
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final,

@@ -83,6 +83,17 @@ pub struct GradStats {
     pub nfe_forward: usize,
     /// `f` evaluations (incl. those inside VJPs) in the backward pass.
     pub nfe_backward: usize,
+    /// Rejected trial steps in the forward pass.
+    pub n_rejected_forward: usize,
+    /// Rejected trial steps in the backward pass (continuous adjoint's
+    /// backward solve; zero for the discrete-exact methods, which replay
+    /// the accepted forward grid).
+    pub n_rejected_backward: usize,
+    /// The share of `nfe_backward` spent recomputing forward stages
+    /// (checkpoint replay / trajectory reconstruction).
+    pub nfe_reconstruct: usize,
+    /// The share of `nfe_backward` spent inside VJP evaluations.
+    pub nfe_vjp: usize,
     /// Peak of total tracked bytes.
     pub peak_mem_bytes: u64,
     /// Peak of retained computation-graph (tape) bytes.
@@ -96,6 +107,7 @@ impl GradStats {
         self.peak_mem_bytes = mem.peak_total();
         self.peak_tape_bytes = mem.peak(MemCategory::Tape);
         self.peak_checkpoint_bytes = mem.peak(MemCategory::Checkpoint);
+        crate::telemetry::record_mem(mem);
     }
 }
 

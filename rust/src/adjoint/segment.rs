@@ -56,8 +56,10 @@ impl GradientMethod for SegmentCheckpoint {
         // (The recording solve uses a scratch tracker; the real tracker
         // sees only the kept checkpoints.)
         let scratch = MemTracker::new();
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &scratch)
             .map_err(|e| anyhow::anyhow!("segment checkpoint: forward integration failed: {e}"))?;
+        drop(fwd_span);
         let n_steps = sol.n_steps();
         let mut kept = vec![false; n_steps + 1];
         for i in (0..=n_steps).step_by(k) {
@@ -75,11 +77,13 @@ impl GradientMethod for SegmentCheckpoint {
         let mut stats = GradStats {
             n_steps_forward: n_steps,
             nfe_forward: sol.stats.nfe,
+            n_rejected_forward: sol.stats.n_rejected,
             ..Default::default()
         };
 
         // Backward, segment by segment (last first): re-integrate each
         // segment from its anchoring checkpoint with graphs retained.
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let mut seg_end = n_steps;
         while seg_end > 0 {
             let seg_start = ((seg_end - 1) / k) * k;
@@ -92,6 +96,7 @@ impl GradientMethod for SegmentCheckpoint {
                 let (traces, nfe) =
                     rk_stages_traced(sys, params, tab, t_n, &x_cur, h, &mut kbuf);
                 stats.nfe_backward += nfe;
+                stats.nfe_reconstruct += nfe;
                 x_cur = crate::integrate::rk_combine(tab, &x_cur, h, &kbuf);
                 let tape_bytes: u64 = traces.iter().map(|t| t.bytes()).sum();
                 mem.alloc(MemCategory::Tape, tape_bytes);
@@ -112,10 +117,12 @@ impl GradientMethod for SegmentCheckpoint {
             // freed below with the remaining trail)
             seg_end = seg_start;
         }
+        drop(bwd_span);
         // free the retained checkpoint trail
         mem.free(MemCategory::Checkpoint, (kept_count * dim * 8) as u64);
 
         stats.absorb_mem(&mem);
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final: sol.final_state().to_vec(),

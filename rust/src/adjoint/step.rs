@@ -102,6 +102,7 @@ pub fn adjoint_step_ws(
     let mut jx = ws.take(dim);
 
     for i in (0..s).rev() {
+        let _stage_span = crate::telemetry::Span::enter_stage("vjp_stage", i as i64);
         let bi = tab.b[i];
         // Λ_{n,i} per Eq. (22), written in terms of m_j = h·b̃_j·l_j:
         //   i ∉ I₀: Λ_i = λ_{n+1} − Σ_j (a_{j,i}/b_i) m_j

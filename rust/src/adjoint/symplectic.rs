@@ -47,8 +47,10 @@ impl GradientMethod for SymplecticAdjoint {
         let tab = &cfg.tableau;
 
         // ---- Algorithm 1: forward with {x_n} checkpoints -------------
+        let fwd_span = crate::telemetry::Span::enter("forward_solve");
         let sol = try_solve_ivp_tracked(sys, params, x0, t0, t1, cfg, &mem)
             .map_err(|e| anyhow::anyhow!("symplectic adjoint: forward integration failed: {e}"))?;
+        drop(fwd_span);
         let n_steps = sol.n_steps();
 
         let loss_val = loss.loss(sol.final_state());
@@ -59,6 +61,7 @@ impl GradientMethod for SymplecticAdjoint {
         let mut stats = GradStats {
             n_steps_forward: n_steps,
             nfe_forward: sol.stats.nfe,
+            n_rejected_forward: sol.stats.n_rejected,
             n_steps_backward: n_steps,
             ..Default::default()
         };
@@ -69,6 +72,7 @@ impl GradientMethod for SymplecticAdjoint {
         // reused, so the per-step inner loop is allocation-free once warm
         // (the MemTracker accounting below is unchanged — it models the
         // paper's memory, not the allocator).
+        let bwd_span = crate::telemetry::Span::enter("backward_sweep");
         let mut ws = Workspace::new();
         let mut k: Vec<Vec<f64>> = Vec::new();
         let mut stages: Vec<Vec<f64>> = Vec::new();
@@ -89,6 +93,7 @@ impl GradientMethod for SymplecticAdjoint {
                 sys, params, tab, t_n, &sol.xs[n], h, None, &mut k, Some(&mut stages), &mut ws,
             );
             stats.nfe_backward += nfe;
+            stats.nfe_reconstruct += nfe;
             stage_t.clear();
             stage_t.extend(tab.c.iter().map(|&c| t_n + c * h));
             drop(kwork); // the slopes k are not needed by the adjoint recursion
@@ -107,6 +112,7 @@ impl GradientMethod for SymplecticAdjoint {
                 &mut ws,
             );
             stats.nfe_backward += cost.nfe + cost.nvjp;
+            stats.nfe_vjp += cost.nfe + cost.nvjp;
             drop(stage_guard); // line 12/15: discard stage checkpoints
             if let Some(i) =
                 first_non_finite(&lam).or_else(|| first_non_finite(&lam_theta))
@@ -119,8 +125,11 @@ impl GradientMethod for SymplecticAdjoint {
         }
         // discard x_0
         mem.free_f64(MemCategory::Checkpoint, dim);
+        drop(bwd_span);
 
         stats.absorb_mem(&mem);
+        crate::telemetry::record_pool(&ws.pool_stats());
+        crate::telemetry::record_grad(&stats);
         Ok(GradResult {
             loss: loss_val,
             x_final: sol.final_state().to_vec(),

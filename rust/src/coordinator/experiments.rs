@@ -47,8 +47,8 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
 
     println!("Table 1 — measured peak memory vs theory (dopri5, N={n_steps}, s={s}, L={l}B)");
     println!(
-        "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
-        "method", "tape[B]", "theory", "checkpoint[B]", "nfe fwd", "nfe bwd"
+        "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10} {:>10} {:>10}",
+        "method", "tape[B]", "theory", "checkpoint[B]", "nfe fwd", "nfe bwd", "nfe rec", "nfe vjp"
     );
     // (method, theoretical tape peak): adjoint O(L), backprop/baseline
     // O(NsL), aca O(sL), mali O(L), symplectic O(L) + s state checkpoints
@@ -85,20 +85,24 @@ pub fn table1(opts: &ExpOpts) -> anyhow::Result<()> {
         match res {
             Ok(g) => {
                 println!(
-                    "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10}",
+                    "{:<12} {:>12} {:>12} {:>14} {:>10} {:>10} {:>10} {:>10}",
                     name,
                     g.stats.peak_tape_bytes,
                     theory_tape,
                     g.stats.peak_checkpoint_bytes,
                     g.stats.nfe_forward,
-                    g.stats.nfe_backward
+                    g.stats.nfe_backward,
+                    g.stats.nfe_reconstruct,
+                    g.stats.nfe_vjp
                 );
                 j.set("tape_bytes", g.stats.peak_tape_bytes)
                     .set("theory_tape_bytes", theory_tape)
                     .set("checkpoint_bytes", g.stats.peak_checkpoint_bytes)
                     .set("total_bytes", g.stats.peak_mem_bytes)
                     .set("nfe_forward", g.stats.nfe_forward)
-                    .set("nfe_backward", g.stats.nfe_backward);
+                    .set("nfe_backward", g.stats.nfe_backward)
+                    .set("nfe_reconstruct", g.stats.nfe_reconstruct)
+                    .set("nfe_vjp", g.stats.nfe_vjp);
             }
             Err(err) => {
                 println!("{name:<12} FAILED: {err}");
@@ -218,8 +222,16 @@ pub fn fig1(opts: &ExpOpts) -> anyhow::Result<()> {
     };
     println!("Figure 1 — tolerance sweep (rtol = 100·atol): s/itr, final NLL, gradient error");
     println!(
-        "{:<8} {:>14} {:>14} {:>12} {:>12} {:>13} {:>13}",
-        "atol", "adjoint s/itr", "sympl s/itr", "adjoint NLL", "sympl NLL", "adj grad-err", "sympl grad-err"
+        "{:<8} {:>14} {:>14} {:>12} {:>12} {:>13} {:>13} {:>9} {:>9}",
+        "atol",
+        "adjoint s/itr",
+        "sympl s/itr",
+        "adjoint NLL",
+        "sympl NLL",
+        "adj grad-err",
+        "sympl grad-err",
+        "adj rej",
+        "sympl rej"
     );
 
     // gradient-error probe: a fixed CNF model + batch; reference gradient
@@ -268,10 +280,14 @@ pub fn fig1(opts: &ExpOpts) -> anyhow::Result<()> {
             let mut rng = Rng::new(77);
             let mut times = Vec::new();
             let mut ok = true;
+            let mut rejected = 0usize;
             for _ in 0..opts.iters {
                 let xb = data.minibatch(batch, &mut rng);
                 match tr.train_step(&xb, method.as_ref(), &mut rng) {
-                    Ok(st) => times.push(st.wall_seconds),
+                    Ok(st) => {
+                        times.push(st.wall_seconds);
+                        rejected += st.n_rejected;
+                    }
                     Err(_) => {
                         ok = false;
                         break;
@@ -283,9 +299,10 @@ pub fn fig1(opts: &ExpOpts) -> anyhow::Result<()> {
             let nll = if ok { tr.eval_nll(&data, 4) } else { f64::NAN };
             row.set(&format!("{mname}_time"), median(&times));
             row.set(&format!("{mname}_nll"), nll);
+            row.set(&format!("{mname}_rejected"), rejected);
         }
         println!(
-            "{:<8.0e} {:>14.4} {:>14.4} {:>12.3} {:>12.3} {:>13.2e} {:>13.2e}",
+            "{:<8.0e} {:>14.4} {:>14.4} {:>12.3} {:>12.3} {:>13.2e} {:>13.2e} {:>9.0} {:>9.0}",
             atol,
             row.get("adjoint_time").unwrap().as_f64().unwrap(),
             row.get("symplectic_time").unwrap().as_f64().unwrap(),
@@ -293,6 +310,8 @@ pub fn fig1(opts: &ExpOpts) -> anyhow::Result<()> {
             row.get("symplectic_nll").unwrap().as_f64().unwrap_or(f64::NAN),
             row.get("adjoint_grad_err").unwrap().as_f64().unwrap_or(f64::NAN),
             row.get("symplectic_grad_err").unwrap().as_f64().unwrap_or(f64::NAN),
+            row.get("adjoint_rejected").unwrap().as_f64().unwrap_or(f64::NAN),
+            row.get("symplectic_rejected").unwrap().as_f64().unwrap_or(f64::NAN),
         );
         rows.push(row);
     }

@@ -32,7 +32,16 @@ impl Default for ExpOpts {
 /// Write an experiment's JSON rows to `<out_dir>/<name>.json` atomically
 /// (temp file + rename), so an interrupted run never leaves a truncated
 /// results file behind.
-pub fn write_results(opts: &ExpOpts, name: &str, rows: Json) -> std::io::Result<()> {
+///
+/// When telemetry is enabled, a `telemetry_summary` record is appended
+/// as a final row so the run-wide counters travel with the results; with
+/// tracing off the file is byte-identical to what it always was.
+pub fn write_results(opts: &ExpOpts, name: &str, mut rows: Json) -> std::io::Result<()> {
+    if crate::telemetry::enabled() {
+        if let Json::Arr(v) = &mut rows {
+            v.push(crate::telemetry::summary_json());
+        }
+    }
     let path = Path::new(&opts.out_dir).join(format!("{name}.json"));
     crate::util::atomic_write(&path, &rows.to_string())?;
     println!("\n[results written to {}]", path.display());

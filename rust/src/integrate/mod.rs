@@ -88,6 +88,17 @@ pub struct SolveStats {
     pub nfe: usize,
 }
 
+impl SolveStats {
+    /// Accumulate another integration's counters into this one — the
+    /// combinator for multi-segment solves (checkpoint segments, solve
+    /// chains) so no call site drops `n_rejected` when summing.
+    pub fn merge(&mut self, other: &SolveStats) {
+        self.n_steps += other.n_steps;
+        self.n_rejected += other.n_rejected;
+        self.nfe += other.nfe;
+    }
+}
+
 /// Forward trajectory: accepted states only (`xs[0] = x₀`, `xs[n]` the
 /// state after step n), i.e. Algorithm 1's checkpoint set plus the final
 /// state.
@@ -451,7 +462,33 @@ fn partial_solution(
     Solution { ts, xs, stats }
 }
 
+/// Run the step loop and fold the resulting [`SolveStats`] — success or
+/// typed failure — into the telemetry counters (a no-op while telemetry
+/// is disabled, leaving the hot path untouched).
 fn try_solve_core(
+    sys: &dyn OdeSystem,
+    params: &[f64],
+    x0: &[f64],
+    t0: f64,
+    t1: f64,
+    cfg: &SolverConfig,
+    mem: &MemTracker,
+    record: bool,
+) -> Result<Solution, SolveError> {
+    let _span = crate::telemetry::Span::enter_stage("solve", -1);
+    match try_solve_core_inner(sys, params, x0, t0, t1, cfg, mem, record) {
+        Ok(sol) => {
+            crate::telemetry::record_solve(&sol.stats, false);
+            Ok(sol)
+        }
+        Err(e) => {
+            crate::telemetry::record_solve(&e.partial.stats, true);
+            Err(e)
+        }
+    }
+}
+
+fn try_solve_core_inner(
     sys: &dyn OdeSystem,
     params: &[f64],
     x0: &[f64],

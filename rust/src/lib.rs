@@ -41,6 +41,7 @@ pub mod parallel;
 pub mod physics;
 pub mod runtime;
 pub mod tableau;
+pub mod telemetry;
 pub mod testkit;
 pub mod train;
 pub mod util;

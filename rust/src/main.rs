@@ -6,7 +6,11 @@
 //! sympode train [k=v …]          train a CNF on a synthetic tabular set
 //! sympode datagen [k=v …]        generate + describe a PDE trajectory
 //! sympode list                   list methods, tableaux, datasets
+//! sympode trace <file.jsonl>     validate an emitted telemetry trace
 //! ```
+//!
+//! Set `SYMPODE_TRACE=1` (and optionally `SYMPODE_TRACE_FILE=run.jsonl`)
+//! to record a structured trace of any command; see `sympode::telemetry`.
 
 use sympode::adjoint::{method_by_name, GradientMethod, SymplecticAdjoint};
 use sympode::cnf::TabularSpec;
@@ -28,7 +32,8 @@ fn usage() -> ! {
          \u{20} gradcheck   [method=symplectic tableau=dopri5 atol=1e-6]  gradient agreement vs backprop\n\
          \u{20} train       [dataset=gas iters=50 method=symplectic batch=32 hidden=32]\n\
          \u{20} datagen     [system=kdv grid=64 snapshots=10]\n\
-         \u{20} list"
+         \u{20} list\n\
+         \u{20} trace <file.jsonl>   validate a telemetry trace (see SYMPODE_TRACE)"
     );
     std::process::exit(2)
 }
@@ -167,7 +172,19 @@ fn main() -> anyhow::Result<()> {
             );
             let _ = SymplecticAdjoint; // the default everywhere
         }
+        "trace" => {
+            let Some(path) = args.get(1) else { usage() };
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+            match sympode::telemetry::validate_trace(&text) {
+                Ok(n) => println!("{path}: valid trace, {n} records"),
+                Err(e) => anyhow::bail!("{path}: invalid trace: {e}"),
+            }
+        }
         _ => usage(),
     }
+    // With SYMPODE_TRACE on and SYMPODE_TRACE_FILE set, persist whatever
+    // the command above recorded; a no-op otherwise.
+    sympode::telemetry::flush_env_trace();
     Ok(())
 }

@@ -153,6 +153,57 @@ impl MemTracker {
         }
         s
     }
+
+    /// Point-in-time copy of every counter, for reporting.
+    pub fn snapshot(&self) -> MemSnapshot {
+        MemSnapshot {
+            live: MemCategory::ALL.map(|c| self.live(c)),
+            peak: MemCategory::ALL.map(|c| self.peak(c)),
+            peak_total: self.peak_total(),
+            n_allocs: self.n_allocs(),
+            n_frees: self.n_frees(),
+        }
+    }
+}
+
+/// A plain-data snapshot of a [`MemTracker`], indexed like
+/// [`MemCategory::ALL`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemSnapshot {
+    /// Live bytes per category.
+    pub live: [u64; N_CATS],
+    /// Peak bytes per category.
+    pub peak: [u64; N_CATS],
+    /// Peak of total live bytes.
+    pub peak_total: u64,
+    /// Alloc events recorded.
+    pub n_allocs: u64,
+    /// Free events recorded.
+    pub n_frees: u64,
+}
+
+impl MemSnapshot {
+    pub fn live(&self, cat: MemCategory) -> u64 {
+        self.live[cat.idx()]
+    }
+
+    pub fn peak(&self, cat: MemCategory) -> u64 {
+        self.peak[cat.idx()]
+    }
+
+    /// The snapshot as a sorted-key JSON object
+    /// (`peak_total_bytes`, `peak_<cat>_bytes`, `live_<cat>_bytes`, …).
+    pub fn to_json(&self) -> crate::util::Json {
+        let mut j = crate::util::Json::obj();
+        j.set("peak_total_bytes", self.peak_total)
+            .set("n_allocs", self.n_allocs)
+            .set("n_frees", self.n_frees);
+        for c in MemCategory::ALL {
+            j.set(&format!("peak_{}_bytes", c.name()), self.peak(c));
+            j.set(&format!("live_{}_bytes", c.name()), self.live(c));
+        }
+        j
+    }
 }
 
 fn bump_max(slot: &AtomicU64, candidate: u64) {
@@ -233,6 +284,22 @@ mod tests {
         assert_eq!(m.peak_total(), 0);
         assert_eq!(m.live_total(), 0);
         assert_eq!(m.n_allocs(), 0);
+    }
+
+    #[test]
+    fn snapshot_copies_counters() {
+        let m = MemTracker::new();
+        m.alloc(MemCategory::Tape, 100);
+        m.free(MemCategory::Tape, 40);
+        let s = m.snapshot();
+        assert_eq!(s.live(MemCategory::Tape), 60);
+        assert_eq!(s.peak(MemCategory::Tape), 100);
+        assert_eq!(s.peak_total, 100);
+        assert_eq!(s.n_allocs, 1);
+        assert_eq!(s.n_frees, 1);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"peak_tape_bytes\":100"), "{j}");
+        assert!(j.contains("\"live_tape_bytes\":60"), "{j}");
     }
 
     #[test]

@@ -95,18 +95,22 @@ where
     let next = AtomicUsize::new(0);
     let f_ref = &f;
     let next_ref = &next;
-    let mut collected: Vec<Vec<(usize, R)>> = Vec::with_capacity(threads);
+    // Each item runs inside a telemetry scope: its span events are
+    // captured per item and replayed below in index order, so an enabled
+    // trace is identical to the serial one regardless of scheduling.
+    type Scoped<R> = (R, crate::telemetry::LocalEvents);
+    let mut collected: Vec<Vec<(usize, Scoped<R>)>> = Vec::with_capacity(threads);
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 scope.spawn(move || {
-                    let mut local: Vec<(usize, R)> = Vec::new();
+                    let mut local: Vec<(usize, Scoped<R>)> = Vec::new();
                     loop {
                         let i = next_ref.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        local.push((i, f_ref(i)));
+                        local.push((i, crate::telemetry::collect_scoped(|| f_ref(i))));
                     }
                     local
                 })
@@ -119,11 +123,18 @@ where
             }
         }
     });
-    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut results: Vec<Option<Scoped<R>>> = (0..n).map(|_| None).collect();
     for (i, r) in collected.into_iter().flatten() {
         results[i] = Some(r);
     }
-    results.into_iter().map(|r| r.expect("parallel_map_indexed missed an index")).collect()
+    results
+        .into_iter()
+        .map(|slot| {
+            let (r, ev) = slot.expect("parallel_map_indexed missed an index");
+            crate::telemetry::absorb_events(ev);
+            r
+        })
+        .collect()
 }
 
 /// [`parallel_map_indexed`] with per-item panic containment: item `i`'s
@@ -137,7 +148,10 @@ where
     F: Fn(usize) -> R + Sync,
 {
     parallel_map_indexed(n, |i| {
-        contain_panic(|| f(i)).map_err(|message| ItemPanic { index: i, message })
+        contain_panic(|| f(i)).map_err(|message| {
+            crate::telemetry::incr(crate::telemetry::Counter::ShardPanics);
+            ItemPanic { index: i, message }
+        })
     })
 }
 

@@ -1,0 +1,852 @@
+//! Zero-overhead run telemetry: spans, counters/gauges, JSONL traces.
+//!
+//! The paper's claims are quantitative resource claims — peak memory,
+//! NFE counts, s/itr — and the crate tracks all of them internally
+//! ([`crate::integrate::SolveStats`], [`crate::adjoint::GradStats`],
+//! [`crate::memory::MemTracker`], workspace pool hits/misses). This
+//! module is the single place those signals surface: a global, always-on
+//! registry of **counters and gauges**, hierarchical wall-time **spans**
+//! recorded into a pre-allocated ring buffer, and a deterministic
+//! **JSONL trace** export.
+//!
+//! ## Cost model (the hard constraint)
+//!
+//! - **Disabled** (the default): every probe is one relaxed atomic load
+//!   and a branch. No clocks are read, no events are stored, no heap
+//!   allocation happens — the instrumented hot paths are bitwise
+//!   identical to their uninstrumented form (asserted by the
+//!   counting-allocator harness in `rust/tests/telemetry_suite.rs`).
+//! - **Enabled**: counters are relaxed atomic adds; span events are
+//!   `Copy` pushes into storage pre-allocated at enable time (the global
+//!   ring, or a worker's scope buffer). Once warm, no per-event
+//!   allocation occurs; overflow *drops* events (and counts the drops)
+//!   rather than growing.
+//!
+//! ## Enabling
+//!
+//! Tracing turns on when `SYMPODE_TRACE=1` (or any of `true`, or a
+//! non-empty `SYMPODE_TRACE_FILE`) is set in the environment, checked
+//! lazily on first probe, or programmatically via [`set_enabled`].
+//! High-volume per-stage spans (`vjp_stage`) additionally require
+//! `SYMPODE_TRACE_DETAIL=stage` ([`set_stage_detail`]) so the default
+//! trace volume stays bounded by the ring capacity.
+//! `SYMPODE_TRACE_FILE=<path>` names the JSONL sink honored by
+//! [`flush_env_trace`] at the end of a run. Telemetry composes with
+//! `SYMPODE_NO_SIMD` / `SYMPODE_THREADS`: the summary records the
+//! resolved SIMD backend and thread count, and because counters commute
+//! and worker spans are merged in index order ([`collect_scoped`] /
+//! [`absorb_events`]), the normalized trace is identical for any thread
+//! count.
+//!
+//! ## Trace schema
+//!
+//! One JSON object per line, sorted keys ([`crate::util::Json`]):
+//!
+//! ```text
+//! {"record":"run_start","simd_backend":…,"stage_detail":…,"threads":…}
+//! {"kind":"enter","name":"forward_solve","record":"span"}
+//! {"dur_ns":…,"kind":"exit","name":"forward_solve","record":"span"}
+//! {"arg":0,"kind":"enter","name":"shard","record":"span"}   // arg = index
+//! …
+//! {"record":"telemetry_summary","counters":{…},"gauges":{…},…}
+//! ```
+//!
+//! The only wall-clock data is the span-relative `dur_ns` on exit
+//! events; [`normalize_trace`] strips it, after which two identical
+//! seeded runs produce byte-identical traces (asserted by the suite).
+
+use crate::util::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// On/off state
+// ---------------------------------------------------------------------------
+
+const STATE_UNINIT: u8 = 0;
+const STATE_OFF: u8 = 1;
+const STATE_ON: u8 = 2;
+
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+static STAGE_DETAIL: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+
+/// Is telemetry collection on? One relaxed load on the hot path; the
+/// first call resolves `SYMPODE_TRACE` / `SYMPODE_TRACE_FILE`.
+#[inline]
+pub fn enabled() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let flag = std::env::var("SYMPODE_TRACE").map(|v| v == "1" || v == "true").unwrap_or(false);
+    let file = std::env::var("SYMPODE_TRACE_FILE").map(|v| !v.is_empty()).unwrap_or(false);
+    set_enabled(flag || file);
+    STATE.load(Ordering::Relaxed) == STATE_ON
+}
+
+/// Turn collection on or off programmatically (tests, embedding code).
+/// Enabling pre-allocates the event ring so subsequent recording is
+/// allocation-free.
+pub fn set_enabled(on: bool) {
+    if on {
+        let mut ring = lock_ring();
+        let have = ring.buf.capacity();
+        if have < RING_CAP {
+            ring.buf.reserve_exact(RING_CAP - have);
+        }
+    }
+    STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+/// Are high-volume per-stage spans (`vjp_stage`) recorded? Resolved from
+/// `SYMPODE_TRACE_DETAIL=stage` on first use.
+#[inline]
+pub fn stage_detail() -> bool {
+    match STAGE_DETAIL.load(Ordering::Relaxed) {
+        STATE_ON => true,
+        STATE_OFF => false,
+        _ => init_stage_detail(),
+    }
+}
+
+#[cold]
+fn init_stage_detail() -> bool {
+    let on = std::env::var("SYMPODE_TRACE_DETAIL").map(|v| v == "stage").unwrap_or(false);
+    set_stage_detail(on);
+    on
+}
+
+/// Force the per-stage span knob (overrides `SYMPODE_TRACE_DETAIL`).
+pub fn set_stage_detail(on: bool) {
+    STAGE_DETAIL.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Metrics registry: counters and gauges
+// ---------------------------------------------------------------------------
+
+/// Monotonic run-wide counters. Additions commute, so totals are
+/// identical for serial and parallel execution of the same work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// `try_solve_*` integrations started (success or failure).
+    SolvesStarted,
+    /// Integrations that exited through a typed [`crate::integrate::SolveFailure`].
+    SolvesFailed,
+    /// Accepted integrator steps across all solves.
+    StepsAccepted,
+    /// Rejected (error-controlled) integrator steps across all solves.
+    StepsRejected,
+    /// Vector-field evaluations inside the integrator step loops.
+    NfeSolve,
+    /// Gradient-method invocations completed.
+    GradCalls,
+    /// Forward-pass NFE summed over gradient calls.
+    NfeForward,
+    /// Backward-pass NFE (reconstruction + VJP) summed over gradient calls.
+    NfeBackward,
+    /// The reconstruction share of the backward NFE.
+    NfeReconstruct,
+    /// The VJP share of the backward NFE.
+    NfeVjp,
+    /// Rejected steps in gradient-call forward passes.
+    RejectedForward,
+    /// Rejected steps in gradient-call backward passes.
+    RejectedBackward,
+    /// Workspace buffer checkouts.
+    PoolBufTakes,
+    /// Workspace buffer checkouts that had to heap-allocate.
+    PoolBufMisses,
+    /// Workspace tape-arena checkouts.
+    PoolTapeTakes,
+    /// Workspace tape-arena checkouts that had to heap-allocate.
+    PoolTapeMisses,
+    /// Training steps applied.
+    TrainSteps,
+    /// Deterministic restarts taken by `train_step_recovering`.
+    RecoveryRetries,
+    /// Batches skipped after exhausting the recovery policy.
+    BatchesSkipped,
+    /// Gradient shard cells executed.
+    ShardsRun,
+    /// Shard cells that panicked (contained to their own cell).
+    ShardPanics,
+}
+
+const N_COUNTERS: usize = 21;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::SolvesStarted,
+        Counter::SolvesFailed,
+        Counter::StepsAccepted,
+        Counter::StepsRejected,
+        Counter::NfeSolve,
+        Counter::GradCalls,
+        Counter::NfeForward,
+        Counter::NfeBackward,
+        Counter::NfeReconstruct,
+        Counter::NfeVjp,
+        Counter::RejectedForward,
+        Counter::RejectedBackward,
+        Counter::PoolBufTakes,
+        Counter::PoolBufMisses,
+        Counter::PoolTapeTakes,
+        Counter::PoolTapeMisses,
+        Counter::TrainSteps,
+        Counter::RecoveryRetries,
+        Counter::BatchesSkipped,
+        Counter::ShardsRun,
+        Counter::ShardPanics,
+    ];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SolvesStarted => "solves_started",
+            Counter::SolvesFailed => "solves_failed",
+            Counter::StepsAccepted => "steps_accepted",
+            Counter::StepsRejected => "steps_rejected",
+            Counter::NfeSolve => "nfe_solve",
+            Counter::GradCalls => "grad_calls",
+            Counter::NfeForward => "nfe_forward",
+            Counter::NfeBackward => "nfe_backward",
+            Counter::NfeReconstruct => "nfe_reconstruct",
+            Counter::NfeVjp => "nfe_vjp",
+            Counter::RejectedForward => "rejected_forward",
+            Counter::RejectedBackward => "rejected_backward",
+            Counter::PoolBufTakes => "pool_buf_takes",
+            Counter::PoolBufMisses => "pool_buf_misses",
+            Counter::PoolTapeTakes => "pool_tape_takes",
+            Counter::PoolTapeMisses => "pool_tape_misses",
+            Counter::TrainSteps => "train_steps",
+            Counter::RecoveryRetries => "recovery_retries",
+            Counter::BatchesSkipped => "batches_skipped",
+            Counter::ShardsRun => "shards_run",
+            Counter::ShardPanics => "shard_panics",
+        }
+    }
+}
+
+/// Peak-tracking gauges (combined by max, mirroring
+/// [`crate::memory::MemTracker`] peak semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak total tracked bytes across any single gradient computation.
+    PeakMemTotal,
+    /// Peak checkpoint bytes ([`crate::memory::MemCategory::Checkpoint`]).
+    PeakCheckpoint,
+    /// Peak tape bytes ([`crate::memory::MemCategory::Tape`]).
+    PeakTape,
+    /// Peak solver working-set bytes ([`crate::memory::MemCategory::Solver`]).
+    PeakSolver,
+    /// Peak bytes of everything else ([`crate::memory::MemCategory::Other`]).
+    PeakOther,
+}
+
+const N_GAUGES: usize = 5;
+
+impl Gauge {
+    pub const ALL: [Gauge; N_GAUGES] = [
+        Gauge::PeakMemTotal,
+        Gauge::PeakCheckpoint,
+        Gauge::PeakTape,
+        Gauge::PeakSolver,
+        Gauge::PeakOther,
+    ];
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::PeakMemTotal => "peak_mem_total_bytes",
+            Gauge::PeakCheckpoint => "peak_checkpoint_bytes",
+            Gauge::PeakTape => "peak_tape_bytes",
+            Gauge::PeakSolver => "peak_solver_bytes",
+            Gauge::PeakOther => "peak_other_bytes",
+        }
+    }
+}
+
+// A const item as the array-repeat seed is the standard way to build a
+// static array of atomics; the "interior mutable const" lint fires on
+// any such seed by design.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; N_COUNTERS] = [ZERO; N_COUNTERS];
+static GAUGES: [AtomicU64; N_GAUGES] = [ZERO; N_GAUGES];
+
+/// Add `v` to a counter (no-op while disabled).
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    if enabled() {
+        COUNTERS[c.idx()].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Add 1 to a counter (no-op while disabled).
+#[inline]
+pub fn incr(c: Counter) {
+    add(c, 1);
+}
+
+/// Current value of a counter.
+pub fn counter(c: Counter) -> u64 {
+    COUNTERS[c.idx()].load(Ordering::Relaxed)
+}
+
+/// Raise a peak gauge to at least `v` (no-op while disabled).
+#[inline]
+pub fn gauge_max(g: Gauge, v: u64) {
+    if !enabled() {
+        return;
+    }
+    let slot = &GAUGES[g.idx()];
+    let mut cur = slot.load(Ordering::Relaxed);
+    while v > cur {
+        match slot.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Current value of a gauge.
+pub fn gauge(g: Gauge) -> u64 {
+    GAUGES[g.idx()].load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Span events
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Enter,
+    Exit,
+}
+
+/// One span boundary. `Copy` so recording is a plain store into
+/// pre-allocated storage; `arg < 0` means "no argument".
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub arg: i64,
+    /// Span-relative duration, only meaningful on [`EventKind::Exit`].
+    pub dur_ns: u64,
+}
+
+const RING_CAP: usize = 16384;
+
+struct Ring {
+    buf: Vec<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        // Capacity is fixed at enable time: never grow on the hot path.
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { buf: Vec::new(), dropped: 0 });
+
+fn lock_ring() -> std::sync::MutexGuard<'static, Ring> {
+    RING.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const LOCAL_CAP: usize = 4096;
+
+struct LocalBuf {
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalBuf>> = const { RefCell::new(None) };
+}
+
+#[inline]
+fn record(ev: Event) {
+    let routed = LOCAL.with(|l| {
+        if let Some(buf) = l.borrow_mut().as_mut() {
+            if buf.events.len() < buf.events.capacity() {
+                buf.events.push(ev);
+            } else {
+                buf.dropped += 1;
+            }
+            true
+        } else {
+            false
+        }
+    });
+    if !routed {
+        lock_ring().push(ev);
+    }
+}
+
+/// RAII wall-time span. Construction records an `enter` event and reads
+/// the monotonic clock; drop records an `exit` event carrying the
+/// elapsed nanoseconds. While telemetry is disabled the guard is inert:
+/// no clock read, no event, no allocation.
+pub struct Span {
+    name: &'static str,
+    arg: i64,
+    start: Option<Instant>,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(name: &'static str) -> Span {
+        Span::enter_arg(name, -1)
+    }
+
+    /// Span with an integer argument (e.g. a shard index).
+    #[inline]
+    pub fn enter_arg(name: &'static str, arg: i64) -> Span {
+        if !enabled() {
+            return Span { name, arg, start: None };
+        }
+        record(Event { kind: EventKind::Enter, name, arg, dur_ns: 0 });
+        Span { name, arg, start: Some(Instant::now()) }
+    }
+
+    /// High-volume per-stage span: inert unless [`stage_detail`] is also
+    /// on, so default traces stay bounded.
+    #[inline]
+    pub fn enter_stage(name: &'static str, arg: i64) -> Span {
+        if !enabled() || !stage_detail() {
+            return Span { name, arg, start: None };
+        }
+        record(Event { kind: EventKind::Enter, name, arg, dur_ns: 0 });
+        Span { name, arg, start: Some(Instant::now()) }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            let dur_ns = start.elapsed().as_nanos() as u64;
+            record(Event { kind: EventKind::Exit, name: self.name, arg: self.arg, dur_ns });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker-scope capture (deterministic serial == parallel merging)
+// ---------------------------------------------------------------------------
+
+/// Events captured on one worker by [`collect_scoped`], to be replayed
+/// into the global stream in a deterministic order by [`absorb_events`].
+pub struct LocalEvents {
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+impl LocalEvents {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Run `f` with span events diverted into a private, pre-allocated
+/// scope buffer instead of the global ring. The parallel driver wraps
+/// each item in a scope and [`absorb_events`]s the results **in index
+/// order** after the join, so the recorded stream is identical whether
+/// the items ran serially or concurrently. Scopes nest: an inner scope's
+/// absorbed events land in the enclosing scope's buffer.
+///
+/// With telemetry disabled this is exactly `f()` plus an empty marker —
+/// no clock, no allocation.
+pub fn collect_scoped<R>(f: impl FnOnce() -> R) -> (R, LocalEvents) {
+    if !enabled() {
+        return (f(), LocalEvents { events: Vec::new(), dropped: 0 });
+    }
+    // Restore the enclosing scope (or None) even if `f` panics, so a
+    // contained panic cannot leave a stale buffer installed.
+    struct Restore(Option<LocalBuf>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            LOCAL.with(|l| *l.borrow_mut() = prev);
+        }
+    }
+    let prev = LOCAL.with(|l| {
+        l.borrow_mut().replace(LocalBuf { events: Vec::with_capacity(LOCAL_CAP), dropped: 0 })
+    });
+    let restore = Restore(prev);
+    let r = f();
+    let buf = LOCAL.with(|l| l.borrow_mut().take());
+    drop(restore);
+    match buf {
+        Some(b) => (r, LocalEvents { events: b.events, dropped: b.dropped }),
+        None => (r, LocalEvents { events: Vec::new(), dropped: 0 }),
+    }
+}
+
+/// Append a scope's captured events to the active stream: the enclosing
+/// scope's buffer when one is installed, the global ring otherwise.
+pub fn absorb_events(ev: LocalEvents) {
+    if ev.events.is_empty() && ev.dropped == 0 {
+        return;
+    }
+    let absorbed = LOCAL.with(|l| {
+        if let Some(buf) = l.borrow_mut().as_mut() {
+            for e in &ev.events {
+                if buf.events.len() < buf.events.capacity() {
+                    buf.events.push(*e);
+                } else {
+                    buf.dropped += 1;
+                }
+            }
+            buf.dropped += ev.dropped;
+            true
+        } else {
+            false
+        }
+    });
+    if !absorbed {
+        let mut ring = lock_ring();
+        for e in &ev.events {
+            ring.push(*e);
+        }
+        ring.dropped += ev.dropped;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recording hooks for the crate's existing stats types
+// ---------------------------------------------------------------------------
+
+/// Fold one integration's [`crate::integrate::SolveStats`] into the
+/// solver counters.
+pub fn record_solve(stats: &crate::integrate::SolveStats, failed: bool) {
+    if !enabled() {
+        return;
+    }
+    incr(Counter::SolvesStarted);
+    if failed {
+        incr(Counter::SolvesFailed);
+    }
+    add(Counter::StepsAccepted, stats.n_steps as u64);
+    add(Counter::StepsRejected, stats.n_rejected as u64);
+    add(Counter::NfeSolve, stats.nfe as u64);
+}
+
+/// Fold one gradient call's [`crate::adjoint::GradStats`] into the
+/// per-phase NFE counters and memory gauges.
+pub fn record_grad(stats: &crate::adjoint::GradStats) {
+    if !enabled() {
+        return;
+    }
+    incr(Counter::GradCalls);
+    add(Counter::NfeForward, stats.nfe_forward as u64);
+    add(Counter::NfeBackward, stats.nfe_backward as u64);
+    add(Counter::NfeReconstruct, stats.nfe_reconstruct as u64);
+    add(Counter::NfeVjp, stats.nfe_vjp as u64);
+    add(Counter::RejectedForward, stats.n_rejected_forward as u64);
+    add(Counter::RejectedBackward, stats.n_rejected_backward as u64);
+    gauge_max(Gauge::PeakMemTotal, stats.peak_mem_bytes);
+    gauge_max(Gauge::PeakTape, stats.peak_tape_bytes);
+    gauge_max(Gauge::PeakCheckpoint, stats.peak_checkpoint_bytes);
+}
+
+/// Fold a workspace's [`crate::workspace::PoolStats`] into the pool
+/// counters.
+pub fn record_pool(stats: &crate::workspace::PoolStats) {
+    if !enabled() {
+        return;
+    }
+    add(Counter::PoolBufTakes, stats.buf_takes);
+    add(Counter::PoolBufMisses, stats.buf_misses);
+    add(Counter::PoolTapeTakes, stats.tape_takes);
+    add(Counter::PoolTapeMisses, stats.tape_misses);
+}
+
+/// Raise the per-category peak gauges from a
+/// [`crate::memory::MemTracker`].
+pub fn record_mem(mem: &crate::memory::MemTracker) {
+    if !enabled() {
+        return;
+    }
+    use crate::memory::MemCategory;
+    gauge_max(Gauge::PeakMemTotal, mem.peak_total());
+    gauge_max(Gauge::PeakCheckpoint, mem.peak(MemCategory::Checkpoint));
+    gauge_max(Gauge::PeakTape, mem.peak(MemCategory::Tape));
+    gauge_max(Gauge::PeakSolver, mem.peak(MemCategory::Solver));
+    gauge_max(Gauge::PeakOther, mem.peak(MemCategory::Other));
+}
+
+// ---------------------------------------------------------------------------
+// Export
+// ---------------------------------------------------------------------------
+
+/// The per-run summary record: all counters, all gauges, event totals,
+/// and the run's execution configuration.
+pub fn summary_json() -> Json {
+    let mut counters = Json::obj();
+    for c in Counter::ALL {
+        counters.set(c.name(), counter(c));
+    }
+    let mut gauges = Json::obj();
+    for g in Gauge::ALL {
+        gauges.set(g.name(), gauge(g));
+    }
+    let (n_events, dropped) = {
+        let ring = lock_ring();
+        (ring.buf.len(), ring.dropped)
+    };
+    let mut j = Json::obj();
+    j.set("record", "telemetry_summary")
+        .set("counters", counters)
+        .set("gauges", gauges)
+        .set("events", n_events)
+        .set("events_dropped", dropped)
+        .set("simd_backend", crate::linalg::simd_backend().name())
+        .set("threads", crate::parallel::num_threads());
+    j
+}
+
+fn run_start_json() -> Json {
+    let mut j = Json::obj();
+    j.set("record", "run_start")
+        .set("simd_backend", crate::linalg::simd_backend().name())
+        .set("threads", crate::parallel::num_threads())
+        .set("stage_detail", stage_detail());
+    j
+}
+
+fn event_json(ev: &Event) -> Json {
+    let mut j = Json::obj();
+    j.set("record", "span")
+        .set(
+            "kind",
+            match ev.kind {
+                EventKind::Enter => "enter",
+                EventKind::Exit => "exit",
+            },
+        )
+        .set("name", ev.name);
+    if ev.arg >= 0 {
+        j.set("arg", ev.arg);
+    }
+    if ev.kind == EventKind::Exit {
+        j.set("dur_ns", ev.dur_ns);
+    }
+    j
+}
+
+/// Serialize the accumulated run as JSONL: a `run_start` header, one
+/// line per span event, and the `telemetry_summary` footer.
+pub fn trace_string() -> String {
+    let mut out = String::new();
+    out.push_str(&run_start_json().to_string());
+    out.push('\n');
+    {
+        let ring = lock_ring();
+        for ev in &ring.buf {
+            out.push_str(&event_json(ev).to_string());
+            out.push('\n');
+        }
+    }
+    out.push_str(&summary_json().to_string());
+    out.push('\n');
+    out
+}
+
+/// Strip the wall-clock fields (`dur_ns`) from a JSONL trace, leaving
+/// the deterministic skeleton: two identical seeded runs normalize to
+/// byte-identical text.
+pub fn normalize_trace(trace: &str) -> Result<String, String> {
+    let mut out = String::new();
+    for (i, line) in trace.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        if let Json::Obj(m) = &mut j {
+            m.remove("dur_ns");
+        }
+        out.push_str(&j.to_string());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Validate a JSONL trace's envelope: every line parses, the first
+/// record is `run_start`, the last is `telemetry_summary`, span records
+/// are well-formed, and enter/exit events balance. A trace whose summary
+/// records dropped events (`events_dropped > 0`) is exempt from the
+/// balance check — a ring that filled mid-span legitimately truncates
+/// exits. Returns the number of records.
+pub fn validate_trace(trace: &str) -> Result<usize, String> {
+    let mut records = Vec::new();
+    for (i, line) in trace.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        let kind = j
+            .get("record")
+            .and_then(|r| r.as_str())
+            .ok_or_else(|| format!("line {}: missing \"record\" field", i + 1))?
+            .to_string();
+        records.push((i + 1, kind, j));
+    }
+    if records.is_empty() {
+        return Err("empty trace".to_string());
+    }
+    if records[0].1 != "run_start" {
+        return Err(format!("first record is {:?}, expected \"run_start\"", records[0].1));
+    }
+    let last = records.len() - 1;
+    if records[last].1 != "telemetry_summary" {
+        return Err(format!(
+            "last record is {:?}, expected \"telemetry_summary\"",
+            records[last].1
+        ));
+    }
+    let mut depth = 0i64;
+    for (line_no, kind, j) in &records[1..last] {
+        if kind != "span" {
+            return Err(format!("line {line_no}: unexpected record {kind:?}"));
+        }
+        let name = j
+            .get("name")
+            .and_then(|n| n.as_str())
+            .ok_or_else(|| format!("line {line_no}: span without a name"))?;
+        if name.is_empty() {
+            return Err(format!("line {line_no}: empty span name"));
+        }
+        match j.get("kind").and_then(|k| k.as_str()) {
+            Some("enter") => depth += 1,
+            Some("exit") => depth -= 1,
+            other => return Err(format!("line {line_no}: bad span kind {other:?}")),
+        }
+    }
+    let summary = &records[last].2;
+    let dropped = summary.get("events_dropped").and_then(Json::as_f64).unwrap_or(0.0);
+    if depth != 0 && dropped == 0.0 {
+        return Err(format!("unbalanced spans: enter - exit = {depth}"));
+    }
+    Ok(records.len())
+}
+
+/// Write the accumulated trace to `path` atomically.
+pub fn write_trace(path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    crate::util::atomic_write(path, &trace_string())
+}
+
+/// End-of-run hook for the binaries: when tracing is enabled and
+/// `SYMPODE_TRACE_FILE` names a path, flush the trace there. Write
+/// errors are reported to stderr, never fatal.
+pub fn flush_env_trace() {
+    if !enabled() {
+        return;
+    }
+    if let Ok(path) = std::env::var("SYMPODE_TRACE_FILE") {
+        if path.is_empty() {
+            return;
+        }
+        if let Err(e) = write_trace(&path) {
+            eprintln!("telemetry: failed to write trace to {path}: {e}");
+        }
+    }
+}
+
+/// Clear all counters, gauges, and recorded events (the enable state is
+/// left as-is). Tests use this to isolate runs.
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &GAUGES {
+        g.store(0, Ordering::Relaxed);
+    }
+    let mut ring = lock_ring();
+    ring.buf.clear();
+    ring.dropped = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tests that flip the global enable state live in
+    // `rust/tests/telemetry_suite.rs` (their own process), so nothing
+    // here can race the rest of the lib test binary.
+
+    #[test]
+    fn counter_and_gauge_names_are_unique() {
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Counter::ALL.len());
+        let mut gnames: Vec<&str> = Gauge::ALL.iter().map(|g| g.name()).collect();
+        gnames.sort_unstable();
+        gnames.dedup();
+        assert_eq!(gnames.len(), Gauge::ALL.len());
+    }
+
+    #[test]
+    fn normalize_strips_durations_only() {
+        let raw = concat!(
+            "{\"record\":\"run_start\",\"threads\":4}\n",
+            "{\"kind\":\"enter\",\"name\":\"a\",\"record\":\"span\"}\n",
+            "{\"dur_ns\":123,\"kind\":\"exit\",\"name\":\"a\",\"record\":\"span\"}\n",
+            "{\"record\":\"telemetry_summary\"}\n",
+        );
+        let norm = normalize_trace(raw).unwrap();
+        assert!(!norm.contains("dur_ns"));
+        assert!(norm.contains("\"name\":\"a\""));
+        assert_eq!(norm.lines().count(), 4);
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_and_rejects_broken() {
+        let good = concat!(
+            "{\"record\":\"run_start\"}\n",
+            "{\"kind\":\"enter\",\"name\":\"s\",\"record\":\"span\"}\n",
+            "{\"dur_ns\":1,\"kind\":\"exit\",\"name\":\"s\",\"record\":\"span\"}\n",
+            "{\"record\":\"telemetry_summary\"}\n",
+        );
+        assert_eq!(validate_trace(good).unwrap(), 4);
+        assert!(validate_trace("").is_err());
+        assert!(validate_trace("{\"record\":\"span\"}\n").is_err());
+        let unbalanced = concat!(
+            "{\"record\":\"run_start\"}\n",
+            "{\"kind\":\"enter\",\"name\":\"s\",\"record\":\"span\"}\n",
+            "{\"record\":\"telemetry_summary\"}\n",
+        );
+        assert!(validate_trace(unbalanced).is_err());
+        let truncated = concat!(
+            "{\"record\":\"run_start\"}\n",
+            "{\"kind\":\"enter\",\"name\":\"s\",\"record\":\"span\"}\n",
+            "{\"events_dropped\":3,\"record\":\"telemetry_summary\"}\n",
+        );
+        assert_eq!(validate_trace(truncated).unwrap(), 3, "drops excuse the imbalance");
+        assert!(validate_trace("not json\n").is_err());
+    }
+}

@@ -46,6 +46,8 @@ pub struct StackStats {
     pub nfe_backward: usize,
     pub n_steps_forward: usize,
     pub n_steps_backward: usize,
+    /// Rejected trial steps across both passes and all components.
+    pub n_rejected: usize,
     pub wall_seconds: f64,
 }
 
@@ -72,6 +74,7 @@ impl StackStats {
             s.nfe_backward += r.stats.nfe_backward;
             s.n_steps_forward += r.stats.n_steps_forward;
             s.n_steps_backward += r.stats.n_steps_backward;
+            s.n_rejected += r.stats.n_rejected_forward + r.stats.n_rejected_backward;
             tape_sum += r.stats.peak_tape_bytes;
             tape_max = tape_max.max(r.stats.peak_tape_bytes);
             ckpt_sum += r.stats.peak_checkpoint_bytes;
@@ -164,6 +167,8 @@ impl CnfTrainer {
         method: &dyn GradientMethod,
         rng: &mut Rng,
     ) -> anyhow::Result<StackStats> {
+        let _step_span = crate::telemetry::Span::enter("train_step");
+        crate::telemetry::incr(crate::telemetry::Counter::TrainSteps);
         let start = Instant::now();
         let m = self.stack.len();
         let (b, d) = (self.batch(), self.d());
@@ -273,6 +278,8 @@ impl CnfTrainer {
             match crate::parallel::contain_panic(|| self.train_step(x_batch, method, rng)) {
                 Ok(Ok(stats)) => {
                     self.cfg = cfg0.clone();
+                    let retries = crate::telemetry::Counter::RecoveryRetries;
+                    crate::telemetry::add(retries, attempt as u64);
                     return Ok(StepOutcome::Stepped { stats, retries: attempt });
                 }
                 Ok(Err(e)) => last_err = e.to_string(),
@@ -285,6 +292,11 @@ impl CnfTrainer {
         self.cfg = cfg0;
         *rng = rng0;
         if policy.skip_on_failure {
+            crate::telemetry::add(
+                crate::telemetry::Counter::RecoveryRetries,
+                policy.max_retries as u64,
+            );
+            crate::telemetry::incr(crate::telemetry::Counter::BatchesSkipped);
             Ok(StepOutcome::Skipped { attempts: policy.max_retries + 1, error: last_err })
         } else {
             anyhow::bail!(
@@ -440,8 +452,16 @@ fn run_shards_contained(
     parallel: bool,
     cell: impl Fn(usize) -> anyhow::Result<GradResult> + Sync,
 ) -> anyhow::Result<Vec<GradResult>> {
+    // the same span/counter wrapper on both paths (and on the worker
+    // thread for the parallel one), so serial and parallel runs emit
+    // identical traces once workers are merged in shard order
+    let traced_cell = |si: usize| -> anyhow::Result<GradResult> {
+        let _span = crate::telemetry::Span::enter_arg("shard", si as i64);
+        crate::telemetry::incr(crate::telemetry::Counter::ShardsRun);
+        cell(si)
+    };
     let results: Vec<anyhow::Result<GradResult>> = if parallel {
-        crate::parallel::parallel_try_map(n, &cell)
+        crate::parallel::parallel_try_map(n, &traced_cell)
             .into_iter()
             .enumerate()
             .map(|(si, r)| match r {
@@ -451,7 +471,7 @@ fn run_shards_contained(
             .collect()
     } else {
         (0..n)
-            .map(|si| match crate::parallel::contain_panic(|| cell(si)) {
+            .map(|si| match crate::parallel::contain_panic(|| traced_cell(si)) {
                 Ok(res) => res,
                 Err(msg) => Err(anyhow::anyhow!("gradient shard {si} panicked: {msg}")),
             })
@@ -478,6 +498,10 @@ fn merge_shards(shards: Vec<GradResult>, concurrent: bool) -> anyhow::Result<Gra
         }
         acc.stats.nfe_forward += r.stats.nfe_forward;
         acc.stats.nfe_backward += r.stats.nfe_backward;
+        acc.stats.nfe_reconstruct += r.stats.nfe_reconstruct;
+        acc.stats.nfe_vjp += r.stats.nfe_vjp;
+        acc.stats.n_rejected_forward += r.stats.n_rejected_forward;
+        acc.stats.n_rejected_backward += r.stats.n_rejected_backward;
         acc.stats.n_steps_forward = acc.stats.n_steps_forward.max(r.stats.n_steps_forward);
         acc.stats.n_steps_backward = acc.stats.n_steps_backward.max(r.stats.n_steps_backward);
         if concurrent {

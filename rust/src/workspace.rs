@@ -44,16 +44,48 @@
 
 use crate::autodiff::{Tape, TapeArena};
 
+/// Point-in-time snapshot of a [`Workspace`]'s checkout counters, split
+/// by pool (buffers vs tape arenas). The public face of what used to be
+/// test-only internals: reported in the gradient-method bench JSON and
+/// folded into [`crate::telemetry`] pool counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `f64`-buffer checkouts.
+    pub buf_takes: u64,
+    /// Buffer checkouts that had to heap-allocate.
+    pub buf_misses: u64,
+    /// Tape-arena checkouts.
+    pub tape_takes: u64,
+    /// Tape-arena checkouts that had to heap-allocate.
+    pub tape_misses: u64,
+}
+
+impl PoolStats {
+    /// Combined checkouts across both pools.
+    pub fn takes(&self) -> u64 {
+        self.buf_takes + self.tape_takes
+    }
+
+    /// Combined allocating checkouts across both pools.
+    pub fn misses(&self) -> u64 {
+        self.buf_misses + self.tape_misses
+    }
+}
+
 /// A pool of reusable `f64` buffers and autodiff tape arenas.
 #[derive(Debug, Default)]
 pub struct Workspace {
     free: Vec<Vec<f64>>,
     arenas: Vec<TapeArena>,
-    /// Buffers handed out since construction (diagnostics/tests).
-    takes: u64,
-    /// `take` calls that had to heap-allocate because no pooled buffer
-    /// had enough capacity (diagnostics/tests).
-    misses: u64,
+    /// Buffers handed out since construction.
+    buf_takes: u64,
+    /// Buffer `take` calls that had to heap-allocate because no pooled
+    /// buffer had enough capacity.
+    buf_misses: u64,
+    /// Tape arenas handed out since construction.
+    tape_takes: u64,
+    /// `take_tape` calls that found the arena pool empty.
+    tape_misses: u64,
 }
 
 impl Workspace {
@@ -72,7 +104,7 @@ impl Workspace {
     /// next to the GEMMs those buffers feed, but it guarantees no call
     /// site can observe another caller's stale data through the pool.
     pub fn take(&mut self, len: usize) -> Vec<f64> {
-        self.takes += 1;
+        self.buf_takes += 1;
         let mut best: Option<usize> = None;
         for (i, b) in self.free.iter().enumerate() {
             if b.capacity() >= len {
@@ -85,7 +117,7 @@ impl Workspace {
         let mut buf = match best {
             Some(i) => self.free.swap_remove(i),
             None => {
-                self.misses += 1;
+                self.buf_misses += 1;
                 // grow the largest pooled buffer rather than keeping a
                 // too-small one around forever
                 let largest = self
@@ -123,11 +155,11 @@ impl Workspace {
     /// `takes`/`misses` like buffer checkouts: a take with no pooled
     /// arena is a miss (it will allocate as the tape grows).
     pub fn take_tape(&mut self) -> Tape {
-        self.takes += 1;
+        self.tape_takes += 1;
         match self.arenas.pop() {
             Some(arena) => Tape::from_arena(arena),
             None => {
-                self.misses += 1;
+                self.tape_misses += 1;
                 Tape::new()
             }
         }
@@ -143,16 +175,27 @@ impl Workspace {
         self.free.len()
     }
 
-    /// Total `take` calls.
+    /// Total `take` + `take_tape` calls.
     pub fn takes(&self) -> u64 {
-        self.takes
+        self.buf_takes + self.tape_takes
     }
 
-    /// `take` calls that had to allocate (no pooled buffer was large
-    /// enough). After warm-up this must stop increasing on a steady-state
-    /// hot loop — the property the equivalence/bench suites assert.
+    /// Checkouts that had to allocate (no pooled buffer/arena was
+    /// available). After warm-up this must stop increasing on a
+    /// steady-state hot loop — the property the equivalence/bench suites
+    /// assert.
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.buf_misses + self.tape_misses
+    }
+
+    /// Snapshot the checkout counters, split by pool.
+    pub fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            buf_takes: self.buf_takes,
+            buf_misses: self.buf_misses,
+            tape_takes: self.tape_takes,
+            tape_misses: self.tape_misses,
+        }
     }
 }
 
@@ -213,6 +256,26 @@ mod tests {
         ws.put(small);
         let got = ws.take(8);
         assert!(got.capacity() < 1000, "should have reused the small buffer");
+    }
+
+    #[test]
+    fn pool_stats_split_buffers_and_tapes() {
+        let mut ws = Workspace::new();
+        let a = ws.take(4); // miss: pool empty
+        ws.put(a);
+        let t = ws.take_tape(); // miss: arena pool empty
+        ws.put_tape(t);
+        let b = ws.take(4); // warm hit
+        let t2 = ws.take_tape(); // warm hit
+        let s = ws.pool_stats();
+        assert_eq!(s.buf_takes, 2);
+        assert_eq!(s.buf_misses, 1);
+        assert_eq!(s.tape_takes, 2);
+        assert_eq!(s.tape_misses, 1);
+        assert_eq!(s.takes(), ws.takes());
+        assert_eq!(s.misses(), ws.misses());
+        ws.put(b);
+        ws.put_tape(t2);
     }
 
     #[test]

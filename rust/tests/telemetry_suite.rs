@@ -1,0 +1,270 @@
+//! Telemetry contract suite — the acceptance gates of the observability
+//! layer, measured rather than assumed:
+//!
+//! - **Zero-overhead off**: with tracing disabled, the warm instrumented
+//!   hot path (`adjoint_step_ws`, which carries `vjp_stage` span probes)
+//!   performs zero heap allocations — the probes compile down to one
+//!   relaxed atomic load and a branch.
+//! - **Allocation-free on**: with tracing *enabled* (stage detail
+//!   included), the same warm hot path still performs zero per-event
+//!   allocations — events land in the pre-reserved ring buffer.
+//! - **Determinism**: two identical seeded runs emit byte-identical
+//!   JSONL traces once wall-clock durations are normalized away, and a
+//!   parallel sweep's trace equals the serial one (events are captured
+//!   per item and replayed in index order).
+//! - **Counter/table agreement**: the run-wide NFE counters equal the
+//!   sums of the per-method values Table 1 prints and writes to JSON.
+//!
+//! All tests mutate process-global telemetry state, so every test takes
+//! `STATE_LOCK` first — the suite is effectively serial. It lives in its
+//! own test binary so flipping the enable switch cannot disturb the
+//! library's other suites.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use sympode::adjoint::{adjoint_step_ws, GradientMethod, StageSource, SymplecticAdjoint};
+use sympode::coordinator::{self, ExpOpts};
+use sympode::integrate::{rk_stages, SolverConfig};
+use sympode::memory::MemTracker;
+use sympode::ode::losses::SumLoss;
+use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::tableau::Tableau;
+use sympode::telemetry::{self, Counter, Gauge, Span};
+use sympode::util::{Json, Rng};
+use sympode::workspace::Workspace;
+
+/// Counts heap allocations so the zero-allocation claims are measured.
+struct CountingAlloc;
+
+static N_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        N_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        N_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    N_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Serializes every test in this binary: telemetry state (enable switch,
+/// counters, ring) is process-global. Poison-safe so one failing test
+/// doesn't cascade.
+static STATE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_state() -> std::sync::MutexGuard<'static, ()> {
+    STATE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One warm `adjoint_step_ws` invocation and the heap allocations it
+/// performed, minimized over `attempts` runs (the test harness may
+/// allocate concurrently from its own threads; the *minimum* isolates
+/// what the hot path itself does).
+fn warm_step_allocs(attempts: usize) -> u64 {
+    let sys = NativeMlpSystem::with_batch(&[8, 64, 64, 8], 16, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(7);
+    let x0 = rng.normal_vec(sys.dim());
+    let tab = Tableau::dopri5();
+    let h = 1.0 / 32.0;
+    let mem = MemTracker::new();
+
+    let mut k = Vec::new();
+    let mut stages = Vec::new();
+    rk_stages(&sys, &p, &tab, 0.0, &x0, h, None, &mut k, Some(&mut stages));
+    let stage_t: Vec<f64> = tab.c.iter().map(|&c| c * h).collect();
+    let mut lam = rng.normal_vec(sys.dim());
+    let mut lam_th = vec![0.0; sys.n_params()];
+    let mut ws = Workspace::new();
+
+    let step = |lam: &mut [f64], lam_th: &mut [f64], ws: &mut Workspace| {
+        adjoint_step_ws(
+            &sys,
+            &p,
+            &tab,
+            0.0,
+            h,
+            lam,
+            lam_th,
+            StageSource::Recompute { stage_states: &stages, stage_t: &stage_t },
+            &mem,
+            ws,
+        );
+    };
+
+    // warm-up: populate the workspace pool (and, when tracing, the ring)
+    for _ in 0..2 {
+        step(&mut lam, &mut lam_th, &mut ws);
+    }
+
+    let mut best = u64::MAX;
+    for _ in 0..attempts {
+        let before = allocs();
+        step(&mut lam, &mut lam_th, &mut ws);
+        best = best.min(allocs() - before);
+    }
+    best
+}
+
+#[test]
+fn disabled_telemetry_hot_path_is_allocation_free() {
+    let _g = lock_state();
+    telemetry::set_enabled(false);
+    let n = warm_step_allocs(5);
+    assert_eq!(n, 0, "warm adjoint_step_ws with tracing OFF must not allocate");
+}
+
+#[test]
+fn enabled_telemetry_hot_path_is_allocation_free_after_warmup() {
+    let _g = lock_state();
+    telemetry::set_enabled(true); // pre-reserves the event ring
+    telemetry::set_stage_detail(true); // emit vjp_stage spans too
+    telemetry::reset();
+    let n = warm_step_allocs(5);
+    telemetry::set_stage_detail(false);
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    assert_eq!(n, 0, "warm adjoint_step_ws with tracing ON must not allocate per event");
+}
+
+/// One seeded symplectic-adjoint gradient under tracing, returning the
+/// normalized (duration-stripped) JSONL trace and the parameter gradient.
+fn traced_symplectic_run() -> (String, Vec<f64>) {
+    telemetry::reset();
+    let sys = NativeMlpSystem::with_batch(&[4, 32, 4], 4, 0);
+    let p = sys.init_params();
+    let mut rng = Rng::new(3);
+    let x0 = rng.normal_vec(sys.dim());
+    let cfg = SolverConfig::adaptive(Tableau::dopri5(), 1e-6, 1e-4);
+    let g = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss).unwrap();
+    let raw = telemetry::trace_string();
+    telemetry::validate_trace(&raw).expect("emitted trace must validate");
+    let norm = telemetry::normalize_trace(&raw).expect("emitted trace must normalize");
+    (norm, g.grad_params)
+}
+
+#[test]
+fn identical_runs_emit_identical_traces() {
+    let _g = lock_state();
+    telemetry::set_enabled(true);
+    let (t1, g1) = traced_symplectic_run();
+    let (t2, g2) = traced_symplectic_run();
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    assert_eq!(g1, g2, "seeded runs must produce bitwise-identical gradients");
+    assert_eq!(t1, t2, "normalized JSONL traces must be byte-identical");
+    assert!(t1.lines().count() >= 3, "trace has run_start, spans, and summary");
+}
+
+#[test]
+fn parallel_sweep_trace_matches_serial() {
+    let _g = lock_state();
+    telemetry::set_enabled(true);
+
+    let work = |i: usize| {
+        let _s = Span::enter_arg("shard", i as i64);
+        telemetry::incr(Counter::ShardsRun);
+        i * 3 + 1
+    };
+
+    telemetry::reset();
+    let serial: Vec<usize> = (0..16).map(work).collect();
+    let t_serial = telemetry::normalize_trace(&telemetry::trace_string()).unwrap();
+
+    telemetry::reset();
+    let par = sympode::parallel::parallel_map_indexed(16, work);
+    let t_par = telemetry::normalize_trace(&telemetry::trace_string()).unwrap();
+
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    assert_eq!(serial, par);
+    assert_eq!(t_serial, t_par, "parallel trace must replay in serial index order");
+}
+
+#[test]
+fn counters_agree_with_table1_rows() {
+    let _g = lock_state();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    let out_dir = std::env::temp_dir().join(format!("sympode_tele_{}", std::process::id()));
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let exp = ExpOpts {
+        quick: true,
+        seeds: 1,
+        iters: 1,
+        out_dir: out_dir.to_string_lossy().into_owned(),
+    };
+    coordinator::table1(&exp).unwrap();
+
+    let text = std::fs::read_to_string(out_dir.join("table1.json")).unwrap();
+    let rows = match Json::parse(&text).unwrap() {
+        Json::Arr(v) => v,
+        other => panic!("table1.json is not an array: {other}"),
+    };
+
+    let field = |row: &Json, key: &str| -> u64 {
+        row.get(key).and_then(Json::as_f64).map(|x| x as u64).unwrap_or(0)
+    };
+    let mut n_methods = 0u64;
+    let (mut fwd, mut bwd, mut rec, mut vjp, mut peak) = (0u64, 0u64, 0u64, 0u64, 0u64);
+    let mut saw_summary = false;
+    for row in &rows {
+        if row.get("method").is_none() {
+            // the appended telemetry_summary record
+            saw_summary = row.get("record").and_then(Json::as_str) == Some("telemetry_summary");
+            continue;
+        }
+        assert!(row.get("error").is_none(), "table1 cell failed: {row}");
+        n_methods += 1;
+        fwd += field(row, "nfe_forward");
+        bwd += field(row, "nfe_backward");
+        rec += field(row, "nfe_reconstruct");
+        vjp += field(row, "nfe_vjp");
+        peak = peak.max(field(row, "total_bytes"));
+    }
+    assert!(saw_summary, "enabled tracing must append a telemetry_summary row");
+    assert_eq!(n_methods, 6);
+
+    let c = telemetry::counter;
+    assert_eq!(c(Counter::GradCalls), n_methods);
+    assert_eq!(c(Counter::NfeForward), fwd, "run-wide forward NFE == sum of Table 1 rows");
+    assert_eq!(c(Counter::NfeBackward), bwd, "run-wide backward NFE == sum of Table 1 rows");
+    assert_eq!(c(Counter::NfeReconstruct), rec);
+    assert_eq!(c(Counter::NfeVjp), vjp);
+    assert_eq!(
+        c(Counter::NfeReconstruct) + c(Counter::NfeVjp),
+        c(Counter::NfeBackward),
+        "per-phase split must partition the backward NFE"
+    );
+    assert_eq!(telemetry::gauge(Gauge::PeakMemTotal), peak);
+
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+#[test]
+fn solve_stats_merge_sums_fields() {
+    use sympode::integrate::SolveStats;
+    let mut a = SolveStats { n_steps: 3, n_rejected: 1, nfe: 20 };
+    let b = SolveStats { n_steps: 5, n_rejected: 2, nfe: 31 };
+    a.merge(&b);
+    assert_eq!((a.n_steps, a.n_rejected, a.nfe), (8, 3, 51));
+}
