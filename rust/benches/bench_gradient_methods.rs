@@ -9,7 +9,11 @@
 //!   `HnnSystem`), whose fused paths rebuild onto a pooled arena;
 //! - a **serial vs sharded-parallel** mini-batch gradient comparison
 //!   (`ShardedMlpGradient`), whose results are bit-identical by
-//!   construction.
+//!   construction;
+//! - a **dispatch-overhead head-to-head**: the persistent work-stealing
+//!   pool (`parallel_map_indexed`) vs the old per-call scoped-spawn path
+//!   (`scoped_map_indexed`) on a map of tiny items, where spawn cost
+//!   dominates.
 //!
 //! Timed results are also written to `BENCH_gradient_methods.json`
 //! (`{"results": [{name, median_ns, mean_ns, std_ns, samples}, …],
@@ -229,6 +233,35 @@ fn sharded_parallel(b: &Bench, results: &mut Vec<BenchResult>) {
     ));
 }
 
+fn pool_dispatch(b: &Bench, results: &mut Vec<BenchResult>) {
+    println!("\n# dispatch overhead: persistent pool vs per-call scoped spawns (64 tiny items)");
+    let work = |i: usize| -> f64 {
+        let mut acc = (i + 1) as f64;
+        for k in 0..256 {
+            acc = (acc + k as f64).sqrt() + 1.0;
+        }
+        acc
+    };
+    let n = 64;
+    let serial: Vec<f64> = (0..n).map(work).collect();
+    assert_eq!(
+        sympode::parallel::parallel_map_indexed(n, work),
+        serial,
+        "pool dispatch must be bitwise identical to serial"
+    );
+    assert_eq!(
+        sympode::parallel::scoped_map_indexed(n, work),
+        serial,
+        "scoped-spawn reference must be bitwise identical to serial"
+    );
+    results.push(b.run("dispatch/map64/pool", || {
+        std::hint::black_box(sympode::parallel::parallel_map_indexed(n, work));
+    }));
+    results.push(b.run("dispatch/map64/scoped-spawn", || {
+        std::hint::black_box(sympode::parallel::scoped_map_indexed(n, work));
+    }));
+}
+
 fn tape_backend_bench(b: &Bench, results: &mut Vec<BenchResult>) {
     println!("\n# tape backends: symplectic-adjoint gradient per iteration");
     let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.125);
@@ -316,6 +349,7 @@ fn main() {
     let pool = alloc_audit();
     tape_backend_audit();
     sharded_parallel(&b, &mut results);
+    pool_dispatch(&b, &mut results);
 
     let mut json = results_to_json(&results);
     json.set("simd_backend", backend.name());

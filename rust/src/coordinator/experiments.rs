@@ -530,19 +530,37 @@ pub fn table4(opts: &ExpOpts) -> anyhow::Result<()> {
 /// interpolating ACA at k=1 and the baseline at k=N), and show the
 /// symplectic adjoint's stage-level checkpointing beats the whole family:
 /// its `s + L` tape/stage term is below even k=1's `s·L`.
+///
+/// The `ks.len() + 1` cells run across the worker pool like the table1 /
+/// fig2 sweeps; each cell rebuilds its (seed-deterministic) system and
+/// initial state, so the results are bitwise identical to the old serial
+/// loop and the rows print in sweep order.
 pub fn ablation(opts: &ExpOpts) -> anyhow::Result<()> {
     use crate::adjoint::SegmentCheckpoint;
     let n = if opts.quick { 32 } else { 128 };
-    let sys = NativeMlpSystem::with_batch(&[4, 64, 64, 4], 8, 0);
-    let p = sys.init_params();
-    let mut rng = Rng::new(41);
-    let x0 = rng.normal_vec(sys.dim());
-    let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
+    let ks = [1usize, 2, 4, 8, 16, n];
 
     println!("Ablation — segment checkpoint interval k (N={n}, dopri5): peak mem [MiB]");
     println!("{:<16} {:>12} {:>12} {:>12}", "scheme", "total", "tape", "ckpt");
+    let cell = |ci: usize| -> anyhow::Result<(String, crate::adjoint::GradResult)> {
+        let sys = NativeMlpSystem::with_batch(&[4, 64, 64, 4], 8, 0);
+        let p = sys.init_params();
+        let mut rng = Rng::new(41);
+        let x0 = rng.normal_vec(sys.dim());
+        let cfg = SolverConfig::fixed(Tableau::dopri5(), 1.0 / n as f64);
+        if ci < ks.len() {
+            let k = ks[ci];
+            let g = SegmentCheckpoint::new(k).gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
+            Ok((format!("segment k={k}"), g))
+        } else {
+            let g = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
+            Ok(("symplectic".to_string(), g))
+        }
+    };
+    let cells = crate::parallel::parallel_try_map(ks.len() + 1, cell);
     let mut rows = Vec::new();
-    let mut report = |name: String, g: &crate::adjoint::GradResult| {
+    for r in cells {
+        let (name, g) = r.map_err(|p| anyhow::anyhow!("ablation cell panicked: {p}"))??;
         println!(
             "{:<16} {:>12.4} {:>12.4} {:>12.4}",
             name,
@@ -556,13 +574,7 @@ pub fn ablation(opts: &ExpOpts) -> anyhow::Result<()> {
             .set("tape_bytes", g.stats.peak_tape_bytes)
             .set("checkpoint_bytes", g.stats.peak_checkpoint_bytes);
         rows.push(j);
-    };
-    for k in [1usize, 2, 4, 8, 16, n] {
-        let g = SegmentCheckpoint::new(k).gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
-        report(format!("segment k={k}"), &g);
     }
-    let g = SymplecticAdjoint.gradient(&sys, &p, &x0, 0.0, 1.0, &cfg, &SumLoss)?;
-    report("symplectic".to_string(), &g);
     write_results(opts, "ablation", Json::Arr(rows))?;
     Ok(())
 }

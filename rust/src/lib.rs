@@ -39,6 +39,7 @@ pub mod nn;
 pub mod ode;
 pub mod parallel;
 pub mod physics;
+pub mod pool;
 pub mod runtime;
 pub mod tableau;
 pub mod telemetry;

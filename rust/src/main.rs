@@ -6,7 +6,9 @@
 //! sympode train [k=v …]          train a CNF on a synthetic tabular set
 //! sympode datagen [k=v …]        generate + describe a PDE trajectory
 //! sympode list                   list methods, tableaux, datasets
-//! sympode trace <file.jsonl>     validate an emitted telemetry trace
+//! sympode trace <file.jsonl> [normalize=out.jsonl]
+//!                                validate an emitted telemetry trace
+//!                                (optionally write its normalized form)
 //! ```
 //!
 //! Set `SYMPODE_TRACE=1` (and optionally `SYMPODE_TRACE_FILE=run.jsonl`)
@@ -33,7 +35,7 @@ fn usage() -> ! {
          \u{20} train       [dataset=gas iters=50 method=symplectic batch=32 hidden=32]\n\
          \u{20} datagen     [system=kdv grid=64 snapshots=10]\n\
          \u{20} list\n\
-         \u{20} trace <file.jsonl>   validate a telemetry trace (see SYMPODE_TRACE)"
+         \u{20} trace <file.jsonl> [normalize=out.jsonl]   validate a telemetry trace (see SYMPODE_TRACE)"
     );
     std::process::exit(2)
 }
@@ -174,11 +176,20 @@ fn main() -> anyhow::Result<()> {
         }
         "trace" => {
             let Some(path) = args.get(1) else { usage() };
+            let o = Options::parse(&args[2..]).map_err(|e| anyhow::anyhow!(e))?;
+            let norm_out = o.str("normalize", "");
+            o.check_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
             match sympode::telemetry::validate_trace(&text) {
                 Ok(n) => println!("{path}: valid trace, {n} records"),
                 Err(e) => anyhow::bail!("{path}: invalid trace: {e}"),
+            }
+            if !norm_out.is_empty() {
+                let norm = sympode::telemetry::normalize_trace(&text)
+                    .map_err(|e| anyhow::anyhow!("{path}: cannot normalize: {e}"))?;
+                sympode::util::atomic_write(&norm_out, &norm)?;
+                println!("{path}: normalized trace written to {norm_out}");
             }
         }
         _ => usage(),

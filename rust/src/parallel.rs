@@ -1,40 +1,65 @@
-//! Scoped-thread parallel execution for embarrassingly parallel work:
+//! Parallel execution façade for embarrassingly parallel work:
 //! per-method/per-cell experiment sweeps and sharded mini-batch gradient
 //! evaluation.
 //!
-//! Built on `std::thread::scope` only — no external dependencies. Workers
-//! claim item indices dynamically from a shared atomic counter (cheap
-//! work stealing, so one slow cell doesn't idle the other cores), and
-//! results are returned **in index order**, which makes a parallel sweep
-//! bitwise-deterministic: each item's computation is self-contained
-//! (per-thread system + [`crate::workspace::Workspace`]; nothing shared),
-//! so the output is identical to running the same items serially — a
-//! property `rust/tests/workspace_suite.rs` asserts.
+//! Built on std only — no external dependencies. Since the persistent
+//! [`crate::pool`] landed, [`parallel_map_indexed`] is a thin wrapper
+//! over the process-global work-stealing pool: workers are spawned once
+//! and reused across calls, and a blocked caller helps execute pending
+//! jobs, so nested parallelism (a sweep cell that internally runs a
+//! sharded gradient) composes without oversubscription. Items still
+//! claim indices dynamically (one slow cell doesn't idle the other
+//! cores), and results are returned **in index order**, which makes a
+//! parallel sweep bitwise-deterministic: each item's computation is
+//! self-contained (per-thread system + [`crate::workspace::Workspace`];
+//! nothing shared), so the output is identical to running the same items
+//! serially — a property `rust/tests/workspace_suite.rs` and
+//! `rust/tests/pool_suite.rs` assert. [`scoped_map_indexed`] keeps the
+//! old spawn-per-call implementation as a reference point (the dispatch
+//! bench races the two head-to-head).
+//!
+//! ## Thread count
+//!
+//! [`num_threads`] honors the `SYMPODE_THREADS` env override (clamped to
+//! ≥ 1), **snapshotted once** on first call — the same snapshot the pool
+//! is built from — so the thread count cannot change mid-run and env
+//! reads cannot race test mutation. Set the variable before the process
+//! (or the first parallel call) to control it.
 //!
 //! ## Panic-containment contract
 //!
-//! [`parallel_map_indexed`] is fail-fast: a panicking item is re-raised
-//! (`resume_unwind`) on the calling thread and aborts the whole map.
+//! [`parallel_map_indexed`] is fail-fast: a panicking item poisons the
+//! batch (remaining items are not claimed) and the first panic is
+//! re-raised (`resume_unwind`) on the calling thread.
 //! [`parallel_try_map`] is the containment variant: each item runs under
 //! `catch_unwind`, a panicking item yields its own `Err(`[`ItemPanic`]`)`
 //! while every other item still completes — this is what the sharded
 //! gradients and coordinator sweeps use so one poisoned cell degrades
-//! only itself. The thread count comes from [`num_threads`], which
-//! honors the `SYMPODE_THREADS` env override (clamped to ≥ 1) for
-//! reproducible CI runs and debugging.
+//! only itself. Contained items run with the panic hook silenced
+//! ([`silence_panic_hook`]) so *expected* panics don't spam backtraces
+//! to stderr; genuinely fail-fast panics stay loud.
 
+use std::cell::Cell;
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Once, OnceLock};
+
+/// `SYMPODE_THREADS` snapshot, taken exactly once.
+static THREADS: OnceLock<usize> = OnceLock::new();
 
 /// Worker threads to use: the `SYMPODE_THREADS` env override (clamped to
 /// ≥ 1) when set to a parseable value, otherwise the machine's available
-/// parallelism (≥ 1).
+/// parallelism (≥ 1). **Snapshotted on first call** — the pool is sized
+/// from this value and later env changes have no effect.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("SYMPODE_THREADS") {
-        if let Some(n) = parse_thread_override(&v) {
-            return n;
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("SYMPODE_THREADS") {
+            if let Some(n) = parse_thread_override(&v) {
+                return n;
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Parse a `SYMPODE_THREADS` value: whitespace-trimmed non-negative
@@ -68,22 +93,115 @@ fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
         .unwrap_or_else(|| "<non-string panic payload>".to_string())
 }
 
+// ---------------------------------------------------------------------------
+// Scoped panic-hook silencing
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Nesting depth of [`HookSilence`] guards on this thread.
+    static SILENCED: Cell<u32> = const { Cell::new(0) };
+}
+
+static SILENCE_HOOK: Once = Once::new();
+
+/// Install (once, process-wide) a panic-hook wrapper that consults the
+/// per-thread silence depth and otherwise delegates to whatever hook was
+/// installed before. Per-thread state is what keeps this scoped: a
+/// contained item on one worker never mutes a genuine panic on another.
+fn install_silence_hook() {
+    SILENCE_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if SILENCED.with(Cell::get) == 0 {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// RAII guard from [`silence_panic_hook`]: while alive, panics *on this
+/// thread* skip the default backtrace spew. `!Send`, so the depth
+/// accounting can't leak across threads.
+pub struct HookSilence {
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Silence the panic hook on the current thread until the guard drops.
+/// Used around *expected* panics — fault-injection tests, contained
+/// shard cells — so they don't spam stderr; panics on other threads
+/// (and after the guard drops) stay loud. Nests: the hook reactivates
+/// when the outermost guard drops.
+pub fn silence_panic_hook() -> HookSilence {
+    install_silence_hook();
+    SILENCED.with(|d| d.set(d.get() + 1));
+    HookSilence { _not_send: PhantomData }
+}
+
+impl Drop for HookSilence {
+    fn drop(&mut self) {
+        SILENCED.with(|d| d.set(d.get() - 1));
+    }
+}
+
+/// Is the panic hook currently silenced on this thread? (Test probe.)
+pub fn panic_hook_silenced() -> bool {
+    SILENCED.with(Cell::get) > 0
+}
+
 /// Run `f` under `catch_unwind`, mapping a panic to its message. The
 /// single-item containment primitive behind [`parallel_try_map`], also
-/// usable directly by serial drivers that need the same contract.
+/// usable directly by serial drivers that need the same contract. The
+/// panic hook is silenced for the duration: a contained panic is an
+/// expected outcome, not something to spam stderr over.
 pub fn contain_panic<R>(f: impl FnOnce() -> R) -> Result<R, String> {
+    let _quiet = silence_panic_hook();
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|e| panic_message(&*e))
 }
 
-/// Evaluate `f(i)` for `i in 0..n` across up to [`num_threads`] scoped
-/// workers and return the results in index order.
+/// Evaluate `f(i)` for `i in 0..n` across the persistent worker pool
+/// ([`crate::pool::global`]) and return the results in index order.
 ///
 /// `f` must be freely callable from several threads (`Sync`, no interior
 /// single-threaded state); per-item state — systems, workspaces, RNGs —
 /// should be constructed *inside* `f` so each item is self-contained.
 /// With a deterministic `f`, the result is identical to
-/// `(0..n).map(f).collect()` regardless of scheduling.
+/// `(0..n).map(f).collect()` regardless of scheduling. Fail-fast: an
+/// item panic poisons the batch and is re-raised here.
 pub fn parallel_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n <= 1 || num_threads() <= 1 {
+        return (0..n).map(f).collect();
+    }
+    crate::pool::global().map_indexed(n, &f)
+}
+
+/// [`parallel_map_indexed`] with per-item panic containment: item `i`'s
+/// panic becomes `Err(ItemPanic { index: i, .. })` in slot `i` while all
+/// other items run to completion. Results are in index order; with a
+/// deterministic `f` the output is identical to running serially under
+/// [`contain_panic`]. (Shard-level accounting — `Counter::ShardPanics`
+/// — lives with the shard driver, `train::run_shards_contained`, not
+/// here: coordinator sweep cells are not shards.)
+pub fn parallel_try_map<R, F>(n: usize, f: F) -> Vec<Result<R, ItemPanic>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    parallel_map_indexed(n, |i| {
+        contain_panic(|| f(i)).map_err(|message| ItemPanic { index: i, message })
+    })
+}
+
+/// The pre-pool implementation: spawn scoped threads for this one call
+/// and join them. Kept as the dispatch-overhead reference the bench
+/// suite races against the pool (`dispatch/map64/*` entries) and as an
+/// independently-implemented oracle for the pool's determinism contract.
+/// Same ordering/telemetry guarantees as [`parallel_map_indexed`]; the
+/// panic behavior is join-time re-raise (not fail-fast).
+pub fn scoped_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
@@ -130,29 +248,11 @@ where
     results
         .into_iter()
         .map(|slot| {
-            let (r, ev) = slot.expect("parallel_map_indexed missed an index");
+            let (r, ev) = slot.expect("scoped_map_indexed missed an index");
             crate::telemetry::absorb_events(ev);
             r
         })
         .collect()
-}
-
-/// [`parallel_map_indexed`] with per-item panic containment: item `i`'s
-/// panic becomes `Err(ItemPanic { index: i, .. })` in slot `i` while all
-/// other items run to completion. Results are in index order; with a
-/// deterministic `f` the output is identical to running serially under
-/// [`contain_panic`].
-pub fn parallel_try_map<R, F>(n: usize, f: F) -> Vec<Result<R, ItemPanic>>
-where
-    R: Send,
-    F: Fn(usize) -> R + Sync,
-{
-    parallel_map_indexed(n, |i| {
-        contain_panic(|| f(i)).map_err(|message| {
-            crate::telemetry::incr(crate::telemetry::Counter::ShardPanics);
-            ItemPanic { index: i, message }
-        })
-    })
 }
 
 /// Split `n` items into `shards` contiguous `(start, end)` ranges of
@@ -181,9 +281,6 @@ mod tests {
     use super::*;
     use std::sync::Mutex;
 
-    /// Serializes tests that read or write `SYMPODE_THREADS`.
-    static ENV_LOCK: Mutex<()> = Mutex::new(());
-
     #[test]
     fn matches_serial_in_order() {
         let serial: Vec<u64> = (0..257).map(|i| (i as u64) * 31 + 7).collect();
@@ -200,7 +297,6 @@ mod tests {
 
     #[test]
     fn uses_multiple_threads_when_available() {
-        let _guard = ENV_LOCK.lock().unwrap();
         if num_threads() < 2 {
             return; // single-core runner: nothing to assert
         }
@@ -259,28 +355,23 @@ mod tests {
     }
 
     #[test]
-    fn env_override_controls_num_threads() {
-        let _guard = ENV_LOCK.lock().unwrap();
-        let prev = std::env::var("SYMPODE_THREADS").ok();
-        let default = {
-            std::env::remove_var("SYMPODE_THREADS");
-            num_threads()
-        };
-        assert!(default >= 1);
-
-        std::env::set_var("SYMPODE_THREADS", "3");
-        assert_eq!(num_threads(), 3);
-        std::env::set_var("SYMPODE_THREADS", "0"); // clamped, never 0 workers
-        assert_eq!(num_threads(), 1);
-        std::env::set_var("SYMPODE_THREADS", "not-a-number"); // fall back
-        assert_eq!(num_threads(), default);
+    fn num_threads_is_a_stable_snapshot() {
+        // Whatever the ambient value, it must not move once observed —
+        // even if the env var changes afterwards.
+        let first = num_threads();
+        assert!(first >= 1);
+        std::env::set_var("SYMPODE_THREADS", (first + 7).to_string());
+        assert_eq!(num_threads(), first, "snapshot must ignore later env changes");
         std::env::remove_var("SYMPODE_THREADS");
-        assert_eq!(num_threads(), default);
+        assert_eq!(num_threads(), first);
+    }
 
-        match prev {
-            Some(v) => std::env::set_var("SYMPODE_THREADS", v),
-            None => std::env::remove_var("SYMPODE_THREADS"),
-        }
+    #[test]
+    fn scoped_map_matches_pool_map() {
+        let f = |i: usize| ((i as f64) + 1.0).sqrt().sin();
+        let serial: Vec<f64> = (0..97).map(f).collect();
+        assert_eq!(parallel_map_indexed(97, f), serial);
+        assert_eq!(scoped_map_indexed(97, f), serial);
     }
 
     #[test]
@@ -309,5 +400,20 @@ mod tests {
         assert_eq!(contain_panic(|| 41 + 1), Ok(42));
         let msg = contain_panic(|| -> u8 { panic!("kaboom {}", 7) }).unwrap_err();
         assert!(msg.contains("kaboom 7"), "{msg}");
+    }
+
+    #[test]
+    fn contain_panic_silences_hook_in_scope_only() {
+        assert!(!panic_hook_silenced());
+        {
+            let _outer = silence_panic_hook();
+            assert!(panic_hook_silenced());
+            {
+                let _inner = silence_panic_hook();
+                assert!(panic_hook_silenced(), "guards must nest");
+            }
+            assert!(panic_hook_silenced(), "inner drop must not unsilence the outer guard");
+        }
+        assert!(!panic_hook_silenced(), "hook must reactivate when the outermost guard drops");
     }
 }

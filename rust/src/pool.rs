@@ -1,0 +1,554 @@
+//! Persistent work-stealing worker pool behind the `parallel` façade.
+//!
+//! Previously every `parallel_map_indexed` call spawned and joined fresh
+//! scoped threads. This module keeps a process-global pool instead:
+//!
+//! - **Workers started once.** The global pool is built lazily on first
+//!   use, honoring a snapshot of `SYMPODE_THREADS` taken at pool init
+//!   ([`crate::parallel::num_threads`]); changing the variable afterwards
+//!   has no effect for the rest of the process.
+//! - **Injector + per-worker deques with stealing.** Submitted jobs land
+//!   in a shared injector (or the submitting worker's own deque); idle
+//!   workers drain their own deque first, then the injector, then steal
+//!   from siblings ([`Counter::PoolSteals`]).
+//! - **Blocked parents help.** A caller waiting for its batch executes
+//!   other pending jobs instead of sleeping, so nested parallelism
+//!   (a sweep cell that internally runs a sharded gradient) neither
+//!   serializes nor oversubscribes: the same fixed thread set runs both
+//!   levels.
+//!
+//! ## Determinism contract
+//!
+//! [`Pool::map_indexed`] preserves the `parallel` module's guarantees
+//! exactly: results in index order, per-item telemetry captured with
+//! [`crate::telemetry::collect_scoped`] and replayed in index order
+//! (an enabled trace is byte-identical to the serial one), and bitwise
+//! identical outputs for a deterministic `f` regardless of which thread
+//! claims which item.
+//!
+//! ## Fail-fast contract
+//!
+//! A panicking item poisons its batch: a shared flag stops the other
+//! participants from claiming further items, and the *first* panic
+//! payload is re-raised on the calling thread once every participant has
+//! left the batch. Item panics never unwind through a worker or a
+//! helping caller — only the batch's owner re-raises. In-flight items
+//! can poll [`current_batch_poisoned`] to stop cooperatively.
+
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::telemetry::{self, Counter};
+
+/// Poison-tolerant lock: pool state stays usable even if a holder
+/// panicked (the protected data is only ever counters and queue links).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+type PanicPayload = Box<dyn Any + Send>;
+
+/// One item's result plus the telemetry events it emitted.
+type Captured<R> = (R, telemetry::LocalEvents);
+
+// ---------------------------------------------------------------------------
+// Job handles
+// ---------------------------------------------------------------------------
+
+/// A type-erased handle to one in-flight batch. `data` points at a
+/// stack-allocated `MapBatch` owned by the submitting caller; `session`
+/// is the monomorphized entry point that reinterprets it.
+///
+/// Lifetime protocol (what makes the raw pointer sound): copies of the
+/// `Arc<JobHandle>` may sit in queues long after the batch is done, so a
+/// thread must *join* (`try_join`) before touching `data`. Joining fails
+/// once the owner has `closed` the job, and the owner only closes — and
+/// only then lets the batch go out of scope — after `active` has dropped
+/// to zero, i.e. after every joined participant has left. Stale queue
+/// copies therefore never dereference `data`.
+struct JobHandle {
+    state: Mutex<JobState>,
+    /// Signalled whenever `active` drops to zero.
+    done: Condvar,
+    data: *const (),
+    session: fn(*const ()),
+}
+
+struct JobState {
+    /// Threads currently executing inside the batch.
+    active: usize,
+    /// Set by the owner; no further joins are admitted.
+    closed: bool,
+}
+
+// Safety: `data` is only dereferenced between a successful `try_join`
+// and the matching `leave`, and the owner keeps the pointee alive until
+// `closed` is set with `active == 0` (see the protocol above). The
+// pointee itself is `Sync` (checked at submission via `assert_sync`).
+unsafe impl Send for JobHandle {}
+unsafe impl Sync for JobHandle {}
+
+type Job = Arc<JobHandle>;
+
+impl JobHandle {
+    /// Register as a participant. `false` if the owner already closed
+    /// the job (the batch may be gone — do not touch `data`).
+    fn try_join(&self) -> bool {
+        let mut st = lock(&self.state);
+        if st.closed {
+            return false;
+        }
+        st.active += 1;
+        true
+    }
+
+    fn leave(&self) {
+        let mut st = lock(&self.state);
+        st.active -= 1;
+        if st.active == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared pool state
+// ---------------------------------------------------------------------------
+
+struct Shared {
+    /// Overflow queue for jobs submitted from outside the pool.
+    injector: Mutex<VecDeque<Job>>,
+    /// One deque per worker; the owner pops LIFO, thieves steal FIFO.
+    locals: Vec<Mutex<VecDeque<Job>>>,
+    /// Wakeup generation: bumped under the lock on every submit so a
+    /// worker that raced a submission never sleeps on a stale snapshot.
+    sleep_gen: Mutex<u64>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Cumulative busy wall-time per worker (gauge; scheduling-dependent,
+    /// stripped by trace normalization).
+    busy_ns: Vec<AtomicU64>,
+}
+
+thread_local! {
+    /// `(worker index, owning pool)` when the current thread is a pool
+    /// worker; tagging with the pool pointer keeps dedicated test pools
+    /// from confusing the global one.
+    static WORKER: Cell<Option<(usize, *const Shared)>> = const { Cell::new(None) };
+}
+
+impl Shared {
+    /// This thread's worker index *in this pool*, if any.
+    fn my_worker(&self) -> Option<usize> {
+        WORKER
+            .with(|w| w.get())
+            .and_then(|(idx, pool)| std::ptr::eq(pool, self as *const Shared).then_some(idx))
+    }
+
+    /// Enqueue `copies` handles of `job` and wake sleepers. A worker
+    /// submitting from inside the pool pushes to its own deque (LIFO for
+    /// the owner, stealable by everyone else); outside callers use the
+    /// injector.
+    fn submit(&self, job: &Job, copies: usize) {
+        if copies == 0 {
+            return;
+        }
+        match self.my_worker() {
+            Some(idx) => {
+                let mut q = lock(&self.locals[idx]);
+                for _ in 0..copies {
+                    q.push_back(Arc::clone(job));
+                }
+            }
+            None => {
+                let mut q = lock(&self.injector);
+                for _ in 0..copies {
+                    q.push_back(Arc::clone(job));
+                }
+            }
+        }
+        {
+            let mut gen = lock(&self.sleep_gen);
+            *gen = (*gen).wrapping_add(1);
+        }
+        self.wake.notify_all();
+    }
+
+    /// Find a runnable job: own deque (LIFO), then the injector, then
+    /// steal from the other workers' deques (FIFO).
+    fn find_job(&self, me: Option<usize>) -> Option<Job> {
+        if let Some(idx) = me {
+            if let Some(job) = lock(&self.locals[idx]).pop_back() {
+                return Some(job);
+            }
+        }
+        if let Some(job) = lock(&self.injector).pop_front() {
+            return Some(job);
+        }
+        let n = self.locals.len();
+        let start = me.map(|i| i + 1).unwrap_or(0);
+        for off in 0..n {
+            let victim = (start + off) % n;
+            if Some(victim) == me {
+                continue;
+            }
+            if let Some(job) = lock(&self.locals[victim]).pop_front() {
+                telemetry::incr(Counter::PoolSteals);
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Join `job` and run its session to completion. Item panics are
+    /// contained inside the session (`MapBatch::work`); nothing unwinds
+    /// out of here.
+    fn execute(&self, job: &Job, me: Option<usize>) {
+        if !job.try_join() {
+            return; // stale queue copy: the batch is already closed
+        }
+        telemetry::incr(Counter::PoolJobsRun);
+        let t0 = match me {
+            Some(_) if telemetry::enabled() => Some(Instant::now()),
+            _ => None,
+        };
+        (job.session)(job.data);
+        if let (Some(w), Some(t0)) = (me, t0) {
+            self.busy_ns[w].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        job.leave();
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, idx: usize) {
+    WORKER.with(|w| w.set(Some((idx, Arc::as_ptr(&shared)))));
+    loop {
+        if let Some(job) = shared.find_job(Some(idx)) {
+            shared.execute(&job, Some(idx));
+            continue;
+        }
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        // Sleep under the generation protocol: re-check the queues after
+        // reading the generation so a submit that raced us either left a
+        // visible job or bumped the generation before we wait.
+        let gen = *lock(&shared.sleep_gen);
+        if let Some(job) = shared.find_job(Some(idx)) {
+            shared.execute(&job, Some(idx));
+            continue;
+        }
+        let mut g = lock(&shared.sleep_gen);
+        while *g == gen && !shared.shutdown.load(Ordering::Acquire) {
+            let (guard, timeout) = shared
+                .wake
+                .wait_timeout(g, Duration::from_millis(50))
+                .unwrap_or_else(PoisonError::into_inner);
+            g = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// A fixed set of worker threads executing type-erased map batches.
+/// `threads` counts the caller too: a pool of `t` threads spawns `t - 1`
+/// workers, because the submitting thread always participates.
+pub struct Pool {
+    shared: Arc<Shared>,
+    threads: usize,
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-global pool, built on first use with a `SYMPODE_THREADS`
+/// snapshot taken at that moment (see [`crate::parallel::num_threads`]).
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(crate::parallel::num_threads()))
+}
+
+/// The global pool if it has been started, without starting it. Lets
+/// telemetry report worker gauges without spawning threads as a side
+/// effect of a summary.
+pub fn try_global() -> Option<&'static Pool> {
+    GLOBAL.get()
+}
+
+impl Pool {
+    /// Start a pool of `threads.max(1)` total threads (`threads - 1`
+    /// detached workers named `sympode-pool-{i}`).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let workers = threads - 1;
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            locals: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep_gen: Mutex::new(0),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            busy_ns: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+        });
+        for idx in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("sympode-pool-{idx}"))
+                .spawn(move || worker_main(sh, idx))
+                .expect("failed to spawn pool worker");
+        }
+        Pool { shared, threads }
+    }
+
+    /// Total threads this pool schedules across (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Detached worker threads (excludes the caller).
+    pub fn workers(&self) -> usize {
+        self.threads - 1
+    }
+
+    /// Cumulative busy nanoseconds per worker (scheduling-dependent; the
+    /// telemetry summary reports it and trace normalization strips it).
+    pub fn worker_busy_ns(&self) -> Vec<u64> {
+        self.shared.busy_ns.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Evaluate `f(i)` for `i in 0..n` across the pool and return results
+    /// in index order, replaying per-item telemetry in index order.
+    /// Fail-fast on item panic (first payload re-raised here) with the
+    /// poison flag stopping further claims.
+    pub fn map_indexed<R, F>(&self, n: usize, f: &F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n <= 1 || self.threads <= 1 {
+            return (0..n).map(f).collect();
+        }
+        self.run_map(n, f)
+            .into_iter()
+            .map(|(r, ev)| {
+                telemetry::absorb_events(ev);
+                r
+            })
+            .collect()
+    }
+
+    fn run_map<R, F>(&self, n: usize, f: &F) -> Vec<Captured<R>>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let batch = MapBatch {
+            f,
+            n,
+            next: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            slots: (0..n).map(|_| Slot(UnsafeCell::new(None))).collect(),
+        };
+        // The `unsafe impl Sync for JobHandle` hands `&batch` to other
+        // threads; require the compiler to agree the batch is shareable.
+        fn assert_sync<T: Sync>(_: &T) {}
+        assert_sync(&batch);
+        let job: Job = Arc::new(JobHandle {
+            state: Mutex::new(JobState { active: 0, closed: false }),
+            done: Condvar::new(),
+            data: &batch as *const MapBatch<'_, R, F> as *const (),
+            session: run_session::<R, F>,
+        });
+        // One queue copy per helper we could use; the caller is the
+        // final participant, so n-1 helpers saturate n items.
+        self.shared.submit(&job, self.workers().min(n.saturating_sub(1)));
+        batch.work();
+        self.wait_close(&job);
+        // All participants have left and no new ones can join: the batch
+        // is exclusively ours again.
+        if let Some(payload) = lock(&batch.panic).take() {
+            std::panic::resume_unwind(payload);
+        }
+        batch
+            .slots
+            .into_iter()
+            .map(|s| s.0.into_inner().expect("pool map missed an index"))
+            .collect()
+    }
+
+    /// Wait until every participant has left `job`, then close it so
+    /// stale queue copies can never touch the batch again. While other
+    /// participants are still inside, help execute pending jobs (this is
+    /// what makes nested `map_indexed` calls compose without deadlock or
+    /// oversubscription).
+    fn wait_close(&self, job: &Job) {
+        let me = self.shared.my_worker();
+        loop {
+            {
+                let mut st = lock(&job.state);
+                if st.active == 0 {
+                    st.closed = true;
+                    return;
+                }
+            }
+            if let Some(other) = self.shared.find_job(me) {
+                self.shared.execute(&other, me);
+                continue;
+            }
+            let st = lock(&job.state);
+            if st.active > 0 {
+                let (st, _timeout) = job
+                    .done
+                    .wait_timeout(st, Duration::from_millis(1))
+                    .unwrap_or_else(PoisonError::into_inner);
+                drop(st);
+            }
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        // The global pool lives for the whole process; this path serves
+        // dedicated test pools. Workers holding no job observe the flag
+        // and exit; the 50 ms wait timeout bounds any missed wakeup.
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let mut gen = lock(&self.shared.sleep_gen);
+            *gen = (*gen).wrapping_add(1);
+        }
+        self.shared.wake.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Map batches
+// ---------------------------------------------------------------------------
+
+/// One result slot, written exactly once by whichever thread claims the
+/// index, read only after the batch has quiesced.
+struct Slot<T>(UnsafeCell<Option<T>>);
+
+// Safety: distinct indices are claimed by at-most-one thread each
+// (`fetch_add` on `MapBatch::next` hands out every index once), so no
+// slot is ever written concurrently, and reads happen only after every
+// participant has left the closed batch.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+struct MapBatch<'f, R, F> {
+    f: &'f F,
+    n: usize,
+    /// Dynamic index claiming — the same cheap load-balancing the scoped
+    /// implementation used.
+    next: AtomicUsize,
+    /// Fail-fast flag: set on first item panic; participants stop
+    /// claiming once they observe it.
+    poisoned: AtomicBool,
+    /// First panic payload, re-raised by the batch owner. Stored
+    /// *before* `poisoned` is published so poison implies a payload.
+    panic: Mutex<Option<PanicPayload>>,
+    slots: Vec<Slot<Captured<R>>>,
+}
+
+/// Monomorphized batch entry point stored in the type-erased
+/// [`JobHandle`].
+fn run_session<R, F>(data: *const ())
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    // Safety: `data` was created from a live `&MapBatch` in `run_map`,
+    // and the join protocol on `JobHandle` guarantees the batch outlives
+    // every session call (see `JobHandle`'s lifetime protocol).
+    let batch = unsafe { &*(data as *const MapBatch<'_, R, F>) };
+    batch.work();
+}
+
+thread_local! {
+    /// The innermost in-flight batch's poison flag on this thread, so
+    /// running items can poll [`current_batch_poisoned`]. Raw pointer
+    /// because the flag lives in the stack-owned batch; the `PoisonScope`
+    /// RAII guard bounds its validity.
+    static ACTIVE_POISON: Cell<*const AtomicBool> = const { Cell::new(std::ptr::null()) };
+}
+
+/// Scoped registration of a batch's poison flag, restoring the enclosing
+/// batch's flag on drop (nested maps re-enter `work` on one thread).
+struct PoisonScope {
+    prev: *const AtomicBool,
+}
+
+impl PoisonScope {
+    fn enter(flag: &AtomicBool) -> PoisonScope {
+        let prev = ACTIVE_POISON.with(|p| p.replace(flag as *const AtomicBool));
+        PoisonScope { prev }
+    }
+}
+
+impl Drop for PoisonScope {
+    fn drop(&mut self) {
+        ACTIVE_POISON.with(|p| p.set(self.prev));
+    }
+}
+
+/// Has the batch the current thread is executing an item for been
+/// poisoned by another item's panic? Long-running items can poll this to
+/// stop early; `false` when not inside a pool item.
+pub fn current_batch_poisoned() -> bool {
+    ACTIVE_POISON.with(|p| {
+        let flag = p.get();
+        // Safety: non-null only between `PoisonScope::enter` and drop,
+        // during which the batch (and its flag) is kept alive by the
+        // join protocol.
+        !flag.is_null() && unsafe { (*flag).load(Ordering::Acquire) }
+    })
+}
+
+impl<R, F> MapBatch<'_, R, F>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    /// Claim-and-run loop shared by the owner, workers, and helpers.
+    /// Contains every item panic: records the first payload, poisons the
+    /// batch, and returns normally — only the owner re-raises.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            // The poison check sits *after* the claim: a poisoned claim
+            // is abandoned, never executed.
+            if i >= self.n || self.poisoned.load(Ordering::Acquire) {
+                break;
+            }
+            let _scope = PoisonScope::enter(&self.poisoned);
+            let run = || telemetry::collect_scoped(|| (self.f)(i));
+            match std::panic::catch_unwind(AssertUnwindSafe(run)) {
+                Ok(captured) => {
+                    // Safety: index `i` came from `fetch_add`, so this
+                    // thread exclusively owns slot `i` (see `Slot`).
+                    unsafe { *self.slots[i].0.get() = Some(captured) };
+                }
+                Err(payload) => {
+                    let mut first = lock(&self.panic);
+                    if first.is_none() {
+                        *first = Some(payload);
+                    }
+                    drop(first);
+                    // Publish poison only after the payload is stored so
+                    // the owner always finds a payload behind the flag.
+                    self.poisoned.store(true, Ordering::Release);
+                    break;
+                }
+            }
+        }
+    }
+}

@@ -32,11 +32,15 @@
 //! trace volume stays bounded by the ring capacity.
 //! `SYMPODE_TRACE_FILE=<path>` names the JSONL sink honored by
 //! [`flush_env_trace`] at the end of a run. Telemetry composes with
-//! `SYMPODE_NO_SIMD` / `SYMPODE_THREADS`: the summary records the
-//! resolved SIMD backend and thread count, and because counters commute
-//! and worker spans are merged in index order ([`collect_scoped`] /
-//! [`absorb_events`]), the normalized trace is identical for any thread
-//! count.
+//! `SYMPODE_NO_SIMD` / `SYMPODE_THREADS` (the latter snapshotted once at
+//! pool init — see [`crate::parallel::num_threads`]): the summary
+//! records the resolved SIMD backend and thread count, and because
+//! counters commute and worker spans are merged in index order
+//! ([`collect_scoped`] / [`absorb_events`]), the normalized trace is
+//! identical for any thread count. The work-stealing pool reports
+//! `pool_jobs_run` / `pool_steals` counters and a per-worker
+//! `pool_busy_ns` gauge array in the summary; all three describe *how*
+//! work was scheduled, so normalization strips them.
 //!
 //! ## Trace schema
 //!
@@ -51,9 +55,13 @@
 //! {"record":"telemetry_summary","counters":{…},"gauges":{…},…}
 //! ```
 //!
-//! The only wall-clock data is the span-relative `dur_ns` on exit
-//! events; [`normalize_trace`] strips it, after which two identical
-//! seeded runs produce byte-identical traces (asserted by the suite).
+//! The `telemetry_summary` footer carries the counters/gauges objects
+//! plus `pool_busy_ns` (per-worker busy wall-time of the pool, `[]`
+//! until the pool starts). The wall-clock data (`dur_ns` on exits,
+//! `pool_busy_ns`) and the scheduling echoes (`threads`,
+//! `pool_jobs_run`, `pool_steals`) are stripped by [`normalize_trace`],
+//! after which two identical seeded runs produce byte-identical traces
+//! for any thread count (asserted by the suite).
 
 use crate::util::Json;
 use std::cell::RefCell;
@@ -178,9 +186,14 @@ pub enum Counter {
     ShardsRun,
     /// Shard cells that panicked (contained to their own cell).
     ShardPanics,
+    /// Work-stealing pool: job executions (one per participant joining a
+    /// batch — workers, stealers, and helping callers alike).
+    PoolJobsRun,
+    /// Work-stealing pool: jobs claimed from another worker's deque.
+    PoolSteals,
 }
 
-const N_COUNTERS: usize = 21;
+const N_COUNTERS: usize = 23;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -205,6 +218,8 @@ impl Counter {
         Counter::BatchesSkipped,
         Counter::ShardsRun,
         Counter::ShardPanics,
+        Counter::PoolJobsRun,
+        Counter::PoolSteals,
     ];
 
     fn idx(self) -> usize {
@@ -234,6 +249,8 @@ impl Counter {
             Counter::BatchesSkipped => "batches_skipped",
             Counter::ShardsRun => "shards_run",
             Counter::ShardPanics => "shard_panics",
+            Counter::PoolJobsRun => "pool_jobs_run",
+            Counter::PoolSteals => "pool_steals",
         }
     }
 }
@@ -624,9 +641,19 @@ pub fn summary_json() -> Json {
         .set("gauges", gauges)
         .set("events", n_events)
         .set("events_dropped", dropped)
+        .set("pool_busy_ns", pool_busy_json())
         .set("simd_backend", crate::linalg::simd_backend().name())
         .set("threads", crate::parallel::num_threads());
     j
+}
+
+/// Per-worker cumulative busy nanoseconds of the global pool (empty when
+/// the pool hasn't started — reporting a summary must not spawn threads
+/// as a side effect). Wall-clock and scheduling-dependent, so
+/// [`normalize_trace`] strips it.
+fn pool_busy_json() -> Json {
+    let busy = crate::pool::try_global().map(|p| p.worker_busy_ns()).unwrap_or_default();
+    Json::Arr(busy.into_iter().map(Json::from).collect())
 }
 
 fn run_start_json() -> Json {
@@ -676,9 +703,12 @@ pub fn trace_string() -> String {
     out
 }
 
-/// Strip the wall-clock fields (`dur_ns`) from a JSONL trace, leaving
+/// Strip the wall-clock and scheduling-dependent fields from a JSONL
+/// trace — `dur_ns` on span exits, the `threads` configuration echo,
+/// the `pool_busy_ns` gauge, and the `pool_jobs_run` / `pool_steals`
+/// counters (how work was distributed, not what was computed) — leaving
 /// the deterministic skeleton: two identical seeded runs normalize to
-/// byte-identical text.
+/// byte-identical text, for **any** `SYMPODE_THREADS` setting.
 pub fn normalize_trace(trace: &str) -> Result<String, String> {
     let mut out = String::new();
     for (i, line) in trace.lines().enumerate() {
@@ -688,6 +718,12 @@ pub fn normalize_trace(trace: &str) -> Result<String, String> {
         let mut j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
         if let Json::Obj(m) = &mut j {
             m.remove("dur_ns");
+            m.remove("threads");
+            m.remove("pool_busy_ns");
+            if let Some(Json::Obj(c)) = m.get_mut("counters") {
+                c.remove("pool_jobs_run");
+                c.remove("pool_steals");
+            }
         }
         out.push_str(&j.to_string());
         out.push('\n');
@@ -811,16 +847,22 @@ mod tests {
     }
 
     #[test]
-    fn normalize_strips_durations_only() {
+    fn normalize_strips_wallclock_and_scheduling_fields() {
         let raw = concat!(
             "{\"record\":\"run_start\",\"threads\":4}\n",
             "{\"kind\":\"enter\",\"name\":\"a\",\"record\":\"span\"}\n",
             "{\"dur_ns\":123,\"kind\":\"exit\",\"name\":\"a\",\"record\":\"span\"}\n",
-            "{\"record\":\"telemetry_summary\"}\n",
+            "{\"counters\":{\"pool_jobs_run\":7,\"pool_steals\":2,\"shards_run\":4},",
+            "\"pool_busy_ns\":[5,6],\"record\":\"telemetry_summary\",\"threads\":4}\n",
         );
         let norm = normalize_trace(raw).unwrap();
         assert!(!norm.contains("dur_ns"));
+        assert!(!norm.contains("threads"), "thread count is configuration, not computation");
+        assert!(!norm.contains("pool_busy_ns"));
+        assert!(!norm.contains("pool_jobs_run"));
+        assert!(!norm.contains("pool_steals"));
         assert!(norm.contains("\"name\":\"a\""));
+        assert!(norm.contains("\"shards_run\":4"), "deterministic counters must survive");
         assert_eq!(norm.lines().count(), 4);
     }
 

@@ -446,7 +446,10 @@ impl ShardedMlpGradient {
 /// error naming its shard (while, in the parallel path, every other cell
 /// still runs to completion via [`crate::parallel::parallel_try_map`]).
 /// The serial path applies the identical containment per cell, so both
-/// paths fail with the same message for the same fault.
+/// paths fail with the same message for the same fault. Shard telemetry
+/// lives here — `Counter::ShardPanics` counts panicking *shard* cells
+/// only (both paths), never other `parallel_try_map` callers such as
+/// coordinator sweep cells.
 fn run_shards_contained(
     n: usize,
     parallel: bool,
@@ -466,14 +469,20 @@ fn run_shards_contained(
             .enumerate()
             .map(|(si, r)| match r {
                 Ok(res) => res,
-                Err(p) => Err(anyhow::anyhow!("gradient shard {si} panicked: {}", p.message)),
+                Err(p) => {
+                    crate::telemetry::incr(crate::telemetry::Counter::ShardPanics);
+                    Err(anyhow::anyhow!("gradient shard {si} panicked: {}", p.message))
+                }
             })
             .collect()
     } else {
         (0..n)
             .map(|si| match crate::parallel::contain_panic(|| traced_cell(si)) {
                 Ok(res) => res,
-                Err(msg) => Err(anyhow::anyhow!("gradient shard {si} panicked: {msg}")),
+                Err(msg) => {
+                    crate::telemetry::incr(crate::telemetry::Counter::ShardPanics);
+                    Err(anyhow::anyhow!("gradient shard {si} panicked: {msg}"))
+                }
             })
             .collect()
     };

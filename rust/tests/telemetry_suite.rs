@@ -29,9 +29,11 @@ use sympode::coordinator::{self, ExpOpts};
 use sympode::integrate::{rk_stages, SolverConfig};
 use sympode::memory::MemTracker;
 use sympode::ode::losses::SumLoss;
-use sympode::ode::{NativeMlpSystem, OdeSystem};
+use sympode::ode::{Loss, NativeMlpSystem, OdeSystem};
 use sympode::tableau::Tableau;
 use sympode::telemetry::{self, Counter, Gauge, Span};
+use sympode::testkit::{FaultKind, FaultyOde};
+use sympode::train::{ShardSpec, ShardedGradient};
 use sympode::util::{Json, Rng};
 use sympode::workspace::Workspace;
 
@@ -258,6 +260,85 @@ fn counters_agree_with_table1_rows() {
     telemetry::set_enabled(false);
     telemetry::reset();
     let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+/// [`ShardSpec`] whose first shard's system panics on its first
+/// evaluation — the minimal reproducer for shard-layer fault accounting.
+struct OneBadShard {
+    batch: usize,
+}
+
+impl ShardSpec for OneBadShard {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn row_dim(&self) -> usize {
+        4
+    }
+
+    fn system(&self, a: usize, b: usize) -> Box<dyn OdeSystem> {
+        let sys = NativeMlpSystem::with_batch(&[4, 8, 4], b - a, 0);
+        if a == 0 {
+            Box::new(FaultyOde::new(sys, FaultKind::Panic, 0))
+        } else {
+            Box::new(sys)
+        }
+    }
+
+    fn loss(&self, _a: usize, _b: usize) -> Box<dyn Loss> {
+        Box::new(SumLoss)
+    }
+}
+
+/// `Counter::ShardPanics` belongs to the shard layer: a panicking
+/// coordinator sweep cell (a plain `parallel_try_map` caller) must not
+/// count, while a panicking shard cell counts exactly once on both the
+/// parallel and the serial path.
+#[test]
+fn shard_panics_counts_only_shard_cells() {
+    let _g = lock_state();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+
+    let r = sympode::parallel::parallel_try_map(4, |i| {
+        if i == 1 {
+            panic!("sweep cell fault");
+        }
+        i
+    });
+    assert_eq!(r.iter().filter(|x| x.is_err()).count(), 1);
+    assert_eq!(
+        telemetry::counter(Counter::ShardPanics),
+        0,
+        "non-shard parallel_try_map callers must not count as shard panics"
+    );
+
+    let driver = ShardedGradient::with_shards(OneBadShard { batch: 4 }, 2);
+    let probe = NativeMlpSystem::with_batch(&[4, 8, 4], 4, 0);
+    let p = probe.init_params();
+    let mut rng = Rng::new(3);
+    let x0 = rng.normal_vec(probe.dim());
+    let cfg = SolverConfig::fixed(Tableau::dopri5(), 0.25);
+
+    let err = driver
+        .gradient("symplectic", &p, &x0, 0.0, 1.0, &cfg)
+        .expect_err("shard 0's injected panic must fail the gradient");
+    assert!(err.to_string().contains("gradient shard 0 panicked"), "{err}");
+    assert_eq!(telemetry::counter(Counter::ShardPanics), 1);
+
+    let err = driver
+        .gradient_serial("symplectic", &p, &x0, 0.0, 1.0, &cfg)
+        .expect_err("the serial path contains the same fault");
+    assert!(err.to_string().contains("gradient shard 0 panicked"), "{err}");
+    assert_eq!(
+        telemetry::counter(Counter::ShardPanics),
+        2,
+        "the serial path must count shard panics identically"
+    );
+
+    telemetry::set_enabled(false);
+    telemetry::reset();
 }
 
 #[test]
